@@ -1,0 +1,73 @@
+"""Fig. 8: HealthLnK queries under four executions — Fully Oblivious,
+Shrinkwrap-style sort&cut, Reflex (parallel Resizer, TLap noise as in the
+paper's §5.3 setup), and Revealed (SecretFlow-style exact trim).
+
+Scaled to N=32-row base tables (paper: 1000) for the 1-CPU container — except
+the fully-oblivious three_join, whose 4-relation product is run at N=16 (the
+same reason the paper's Fig. 8 FO bars dwarf everything else). Engine runs
+with per-op jit + power-of-two trim bucketing (the §Perf engine
+optimizations); the reproduction targets are the mode ORDERING and the
+orders-of-magnitude bytes/rounds gaps on join-bearing queries vs. the modest
+gap on Comorbidity (no join)."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core.noise import RevealNoise, TruncatedLaplace
+from repro.core.resizer import ResizerConfig
+from repro.data import all_query_plans, generate_healthlnk
+from repro.engine import Engine
+from repro.plan import insert_resizers
+
+from .common import emit
+
+N = 32
+N_FO_3JOIN = 16
+
+
+def _pow2(s: int) -> int:
+    return 1 << max(s - 1, 1).bit_length()
+
+
+def run():
+    tables, plain = generate_healthlnk(n=N, seed=3, aspirin_frac=0.35, icd_heart_frac=0.3)
+    tables_small, _ = generate_healthlnk(n=N_FO_3JOIN, seed=3, aspirin_frac=0.35,
+                                         icd_heart_frac=0.3)
+    plans = all_query_plans()
+    tlap = TruncatedLaplace(eps=0.5, delta=5e-5, sensitivity=N // 8)
+    modes = {
+        "fully_oblivious": ("none", None),
+        "sortcut": ("all_internal",
+                    ResizerConfig(noise=tlap, addition="sequential", use_sort=True)),
+        "reflex": ("all_internal", ResizerConfig(noise=tlap, addition="parallel")),
+        "revealed": ("all_internal", ResizerConfig(noise=RevealNoise())),
+    }
+    rows = []
+    for qname, plan in plans.items():
+        for mode, (placement, cfg) in modes.items():
+            tbls, scale = tables, N
+            if qname == "three_join" and mode == "fully_oblivious":
+                tbls, scale = tables_small, N_FO_3JOIN
+            eng = Engine(tbls, key=jax.random.PRNGKey(5), bucket_fn=_pow2)
+            p = (
+                plan
+                if placement == "none"
+                else insert_resizers(plan, lambda n: cfg, placement=placement)
+            )
+            t0 = time.perf_counter()
+            out, rep = eng.execute(p)
+            dt = time.perf_counter() - t0
+            rows.append(
+                (
+                    f"fig8_{qname}_{mode}",
+                    dt * 1e6,
+                    f"bytes={rep.total_bytes};rounds={rep.total_rounds};n={scale}",
+                )
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,43 @@
+"""Pallas kernel micro-bench: interpret-mode vs jnp-reference wall time (CPU
+numbers are correctness-path only; BlockSpecs target TPU v5e VMEM)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.kernels.bitonic_stage.ops import stage_swap
+from repro.kernels.rss_gate.ops import gate
+from repro.kernels.shuffle_gather.ops import gather_rows
+
+from .common import emit, timeit
+
+N = 8192
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+    xs = rng.integers(0, 2**32, (3, N), dtype=np.uint32)
+    ys = rng.integers(0, 2**32, (3, N), dtype=np.uint32)
+    al = rng.integers(0, 2**32, (3, N), dtype=np.uint32)
+    for use in (True, False):
+        dt = timeit(lambda: gate(xs, ys, al, boolean=True, use_kernel=use))
+        rows.append((f"kernel_rss_gate_{'pallas' if use else 'jnp'}", dt * 1e6, f"n={N}"))
+
+    t = rng.integers(0, 2**32, (N, 4), dtype=np.uint32)
+    p = rng.permutation(N).astype(np.int32)
+    for use in (True, False):
+        dt = timeit(lambda: gather_rows(t, p, use_kernel=use))
+        rows.append((f"kernel_shuffle_gather_{'pallas' if use else 'jnp'}", dt * 1e6, f"n={N}"))
+
+    mask = rng.integers(0, 2**32, (3, N), dtype=np.uint32)
+    own = rng.integers(0, 2**32, (3, 4, N), dtype=np.uint32)
+    other = rng.integers(0, 2**32, (3, 4, N), dtype=np.uint32)
+    alc = rng.integers(0, 2**32, (3, 4, N), dtype=np.uint32)
+    for use in (True, False):
+        dt = timeit(lambda: stage_swap(mask, own, other, alc, use_kernel=use))
+        rows.append((f"kernel_bitonic_stage_{'pallas' if use else 'jnp'}", dt * 1e6, f"n={N}"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,40 @@
+"""LM-side roofline table: reads artifacts/dryrun.json (written by
+launch/dryrun.py) and emits one row per (arch x shape x mesh) cell with the
+three roofline terms, the bottleneck, and the roofline fraction."""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import emit
+
+ARTIFACT = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun.json")
+
+
+def run():
+    if not os.path.exists(ARTIFACT):
+        return [("lm_roofline_missing", 0.0, "run launch/dryrun.py first")]
+    rows = []
+    for r in json.load(open(ARTIFACT)):
+        name = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+        if r["status"] == "skipped":
+            rows.append((name, 0.0, f"SKIP:{r['reason'][:60]}"))
+            continue
+        if r["status"] != "ok":
+            rows.append((name, 0.0, f"ERROR:{r.get('error','')[:80]}"))
+            continue
+        t_us = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"]) * 1e6
+        rows.append(
+            (
+                name,
+                t_us,
+                f"bottleneck={r['bottleneck']};frac={r['roofline_fraction']:.4f};"
+                f"tc={r['t_compute_s']:.2e};tm={r['t_memory_s']:.2e};"
+                f"tx={r['t_collective_s']:.2e}",
+            )
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,95 @@
+"""Fig. 9: Resizer placement cost functions.
+
+Left: Join -> [Resizer] -> Filter (Filter terminal): the Resizer never pays
+off. Right: Join -> [Resizer] -> OrderBy: pays off except at very high
+selectivity. Measured at three selectivities + the analytic cost model's
+decision for the full sweep."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.noise import UniformNoise
+from repro.core.prf import setup_prf
+from repro.core.resizer import Resizer, ResizerConfig
+from repro.ops import Predicate, SecretTable, oblivious_filter, oblivious_join, oblivious_orderby
+from repro.plan.cost import BYTES, resizer_bytes, sort_bytes
+
+from .common import emit
+
+NB = 48  # join inputs -> 2304-row oblivious join output
+
+
+class _TenPct(UniformNoise):
+    """Fixed 10% of N noise (the figure's setup)."""
+
+    def sample_eta(self, key, n, t):
+        return int(0.1 * n)
+
+    def mean(self, n, t):
+        return 0.1 * n
+
+    def var(self, n, t):
+        return 0.0
+
+
+def _join_tables(selectivity, seed=0):
+    """Construct join inputs whose true match count ~ selectivity * N^2."""
+    rng = np.random.default_rng(seed)
+    n_keys = max(int(1.0 / max(selectivity, 1e-3)), 1)
+    l = {"pid": rng.integers(0, n_keys, NB).astype(np.uint32),
+         "x": rng.integers(0, 100, NB).astype(np.uint32)}
+    r = {"pid2": rng.integers(0, n_keys, NB).astype(np.uint32)}
+    return (
+        SecretTable.from_plaintext(l, jax.random.PRNGKey(seed)),
+        SecretTable.from_plaintext(r, jax.random.PRNGKey(seed + 1)),
+    )
+
+
+def run():
+    prf = setup_prf(jax.random.PRNGKey(0))
+    rz = Resizer(ResizerConfig(noise=_TenPct(), addition="parallel"))
+    rows = []
+    for sel in (0.05, 0.3, 0.8):
+        lt, rt_ = _join_tables(sel)
+        for downstream in ("filter", "orderby"):
+            for with_rz in (False, True):
+                t0 = time.perf_counter()
+                j = oblivious_join(lt, rt_, ("pid", "pid2"), prf)
+                if with_rz:
+                    j, _ = rz(j, prf, jax.random.PRNGKey(3))
+                if downstream == "filter":
+                    out = oblivious_filter(j, [Predicate("x", "lt", 50)], prf)
+                else:
+                    out = oblivious_orderby(j, "x", prf)
+                jax.block_until_ready(out.valid.shares)
+                dt = time.perf_counter() - t0
+                tag = "with_rz" if with_rz else "no_rz"
+                rows.append(
+                    (f"fig9_join_{downstream}_sel{sel}_{tag}", dt * 1e6, f"n_mid={j.n}")
+                )
+
+    # analytic cost-model sweep (the "cost functions an optimizer would use")
+    n = NB * NB
+    for sel in np.linspace(0.05, 0.95, 10):
+        t_true = sel * n
+        s = min(t_true + 0.1 * n, n)
+        rz_cost = resizer_bytes(n, 2)
+        filter_no = n * (BYTES["eq"] + BYTES["and"])
+        filter_yes = rz_cost + s * (BYTES["eq"] + BYTES["and"])
+        ob_no = sort_bytes(n, 2)
+        ob_yes = rz_cost + sort_bytes(int(s), 2)
+        rows.append(
+            (
+                f"fig9_model_sel{sel:.2f}",
+                0.0,
+                f"filter_win={filter_yes < filter_no};orderby_win={ob_yes < ob_no}",
+            )
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

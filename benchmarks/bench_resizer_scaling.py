@@ -1,0 +1,79 @@
+"""Fig. 5a: Resizer runtime vs rows — parallel vs sequential vs Shrinkwrap's
+sort&cut, plus the ledger's communication profile (the quantity that dominates
+real 3-party deployments)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.ledger import CommLedger
+from repro.core.noise import ConstantNoise
+from repro.core.prf import setup_prf
+from repro.core.resizer import Resizer, ResizerConfig
+from repro.core.sort import sort_valid_first
+from repro.ops import SecretTable
+
+from .common import emit
+
+ROWS = [512, 1024, 2048, 4096, 8192]
+SORTCUT_MAX = 4096  # log^2 N stages get slow on 1 CPU core
+WIDTH_COLS = 4  # 4 columns x 4B = 16B rows, as in Fig. 5a
+
+
+def _table(n, seed=0):
+    rng = np.random.default_rng(seed)
+    data = {f"c{i}": rng.integers(0, 2**31, n, dtype=np.uint32) for i in range(WIDTH_COLS)}
+    valid = (rng.random(n) < 0.2).astype(np.uint32)
+    return SecretTable.from_plaintext(data, jax.random.PRNGKey(seed), valid=valid)
+
+
+def _sort_and_cut(tab, prf):
+    """Shrinkwrap baseline: oblivious sort (valid first) + cut at T+eta."""
+    cols = {"__v": tab.valid}
+    cols.update({k: tab.bshare_col(k, prf) for k in tab.cols})
+    out = sort_valid_first(cols, "__v", prf)
+    # cut at S (same noisy size the resizer would use): public head slice
+    return {k: v[: tab.n // 2] for k, v in out.items()}
+
+
+def run():
+    prf = setup_prf(jax.random.PRNGKey(0))
+    rows = []
+    for n in ROWS:
+        tab = _table(n)
+        for mode, cfg in [
+            ("parallel", ResizerConfig(noise=ConstantNoise(0.1), addition="parallel")),
+            ("sequential", ResizerConfig(noise=ConstantNoise(0.1), addition="sequential")),
+        ]:
+            t0 = time.perf_counter()
+            with CommLedger() as led:
+                Resizer(cfg)(tab, prf, jax.random.PRNGKey(1))
+            dt = time.perf_counter() - t0
+            t = led.tally()
+            rows.append(
+                (
+                    f"fig5a_resizer_{mode}_n{n}",
+                    dt * 1e6,
+                    f"bytes={t['bytes_per_party']};rounds={t['rounds']}",
+                )
+            )
+        if n <= SORTCUT_MAX:
+            t0 = time.perf_counter()
+            with CommLedger() as led:
+                _sort_and_cut(tab, prf)
+            dt = time.perf_counter() - t0
+            t = led.tally()
+            rows.append(
+                (
+                    f"fig5a_sortcut_n{n}",
+                    dt * 1e6,
+                    f"bytes={t['bytes_per_party']};rounds={t['rounds']}",
+                )
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

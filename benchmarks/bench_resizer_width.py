@@ -1,0 +1,47 @@
+"""Fig. 5b: Resizer runtime vs row width (column count) at fixed rows —
+expected near-flat/logarithmic growth (width only touches the shuffle copy)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.ledger import CommLedger
+from repro.core.noise import ConstantNoise
+from repro.core.prf import setup_prf
+from repro.core.resizer import Resizer, ResizerConfig
+from repro.ops import SecretTable
+
+from .common import emit
+
+N = 4096
+COLS = [1, 2, 4, 8, 16]
+
+
+def run():
+    prf = setup_prf(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    rows = []
+    valid = (rng.random(N) < 0.2).astype(np.uint32)
+    for c in COLS:
+        data = {f"c{i}": rng.integers(0, 2**31, N, dtype=np.uint32) for i in range(c)}
+        tab = SecretTable.from_plaintext(data, jax.random.PRNGKey(1), valid=valid)
+        cfg = ResizerConfig(noise=ConstantNoise(0.1), addition="parallel")
+        t0 = time.perf_counter()
+        with CommLedger() as led:
+            Resizer(cfg)(tab, prf, jax.random.PRNGKey(2))
+        dt = time.perf_counter() - t0
+        t = led.tally()
+        rows.append(
+            (
+                f"fig5b_width_c{c}",
+                dt * 1e6,
+                f"bytes={t['bytes_per_party']};rounds={t['rounds']}",
+            )
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

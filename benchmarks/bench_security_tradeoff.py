@@ -1,0 +1,62 @@
+"""§5.4 runtime-vs-CRT trade-off: Join_B -> Resizer -> OrderBy with TLap
+(small noise, fast, weak CRT) vs Beta(2,6) (25% noise, slower, strong CRT) —
+the paper's 104s-vs-236s example, scaled down."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.crt import crt_rounds
+from repro.core.noise import BetaNoise, TruncatedLaplace
+from repro.core.prf import setup_prf
+from repro.core.resizer import Resizer, ResizerConfig
+from repro.ops import SecretTable, oblivious_join, oblivious_orderby
+
+from .common import emit
+
+NB = 48  # 2304-row join output (paper: 1M)
+T_FRAC = 0.1
+
+
+def run():
+    prf = setup_prf(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    n_keys = int(1 / T_FRAC)
+    lt = SecretTable.from_plaintext(
+        {"pid": rng.integers(0, n_keys, NB).astype(np.uint32),
+         "x": rng.integers(0, 100, NB).astype(np.uint32)},
+        jax.random.PRNGKey(1),
+    )
+    rt_ = SecretTable.from_plaintext(
+        {"pid2": rng.integers(0, n_keys, NB).astype(np.uint32)}, jax.random.PRNGKey(2)
+    )
+    n = NB * NB
+    t_true = int(T_FRAC * n)
+    strategies = {
+        "tlap": TruncatedLaplace(0.5, 5e-5, sensitivity=n // 64),
+        "beta26": BetaNoise(2, 6),
+    }
+    rows = []
+    for name, noise in strategies.items():
+        rz = Resizer(ResizerConfig(noise=noise, addition="parallel"))
+        t0 = time.perf_counter()
+        j = oblivious_join(lt, rt_, ("pid", "pid2"), prf)
+        trimmed, info = rz(j, prf, jax.random.PRNGKey(3))
+        out = oblivious_orderby(trimmed, "x", prf)
+        jax.block_until_ready(out.valid.shares)
+        dt = time.perf_counter() - t0
+        crt = crt_rounds(noise, "parallel", n, t_true)
+        rows.append(
+            (
+                f"sec54_{name}",
+                dt * 1e6,
+                f"S={info['s']};crt_rounds={crt:.0f}",
+            )
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,91 @@
+"""Fig. 7: Resizer step breakdown (noise add / shuffle / reveal-trim) vs the
+operators themselves (Filter_1, Filter_4, Join_B, Join_S, GroupBy) at a fixed
+oblivious intermediate size."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.noise import ConstantNoise
+from repro.core.prf import setup_prf
+from repro.core.resizer import Resizer, ResizerConfig
+from repro.core.shuffle import secure_shuffle
+from repro.ops import (
+    Predicate,
+    SecretTable,
+    oblivious_filter,
+    oblivious_groupby_count,
+    oblivious_join,
+)
+
+from .common import emit
+
+N = 4096  # intermediate size (paper: 1M; scaled for 1 CPU core)
+
+
+def run():
+    prf = setup_prf(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    nb = int(np.sqrt(N))
+    tab = SecretTable.from_plaintext(
+        {
+            "a": rng.integers(0, 8, N).astype(np.uint32),
+            "b": rng.integers(0, 8, N).astype(np.uint32),
+            "c": rng.integers(0, 8, N).astype(np.uint32),
+            "d": rng.integers(0, 8, N).astype(np.uint32),
+        },
+        jax.random.PRNGKey(1),
+        valid=(rng.random(N) < 0.2).astype(np.uint32),
+    )
+    left = SecretTable.from_plaintext(
+        {"pid": rng.integers(0, 32, nb).astype(np.uint32)}, jax.random.PRNGKey(2)
+    )
+    right = SecretTable.from_plaintext(
+        {"pid2": rng.integers(0, 32, nb).astype(np.uint32)}, jax.random.PRNGKey(3)
+    )
+    skew_l = SecretTable.from_plaintext(
+        {"pid": np.zeros(1, np.uint32)}, jax.random.PRNGKey(4)
+    )
+    skew_r = SecretTable.from_plaintext(
+        {"pid2": rng.integers(0, 2, N).astype(np.uint32)}, jax.random.PRNGKey(5)
+    )
+
+    rows = []
+
+    def t(name, fn, derived=""):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(jax.tree.leaves(out)[0])
+        rows.append((name, (time.perf_counter() - t0) * 1e6, derived))
+        return out
+
+    # resizer steps in isolation
+    rz = Resizer(ResizerConfig(noise=ConstantNoise(0.1), addition="parallel"))
+    t("fig7_noise_add_parallel", lambda: rz._mark_parallel(tab, 0.1, prf, jax.random.PRNGKey(6)))
+    rz_seq = Resizer(ResizerConfig(noise=ConstantNoise(0.1), addition="sequential"))
+    t("fig7_noise_add_sequential", lambda: rz_seq._mark_sequential(tab, N // 10, prf))
+    cols = {"__v": tab.valid}
+    cols.update(tab.cols)
+    t("fig7_shuffle", lambda: secure_shuffle(cols, prf))
+    t("fig7_reveal_trim", lambda: rz(tab, prf, jax.random.PRNGKey(7))[0].valid.shares)
+
+    # operators at the same oblivious size
+    t("fig7_filter1", lambda: oblivious_filter(tab, [Predicate("a", "eq", 3)], prf))
+    t(
+        "fig7_filter4",
+        lambda: oblivious_filter(
+            tab,
+            [Predicate(c, "eq", 3) for c in ("a", "b", "c", "d")],
+            prf,
+        ),
+    )
+    t("fig7_joinB", lambda: oblivious_join(left, right, ("pid", "pid2"), prf), f"out={nb*nb}")
+    t("fig7_joinS", lambda: oblivious_join(skew_l, skew_r, ("pid", "pid2"), prf), f"out={N}")
+    t("fig7_groupby", lambda: oblivious_groupby_count(tab, "a", prf))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,38 @@
+"""Shared benchmark helpers: timing, CSV row emission, scaled-down sizes.
+
+CPU-scale note: the paper benches up to 1M rows on 3 real servers; this
+container is one CPU core, so row counts are scaled down (per-bench
+constants). The *shapes* of the curves (linear scaling, constant-round
+shuffle vs log^2 sort, ordering of the variants) are the reproduction
+targets; the ledger's (rounds, bytes/party) columns are scale-exact.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+
+Row = Tuple[str, float, str]
+
+
+def timeit(fn: Callable, *args, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall seconds."""
+    for _ in range(warmup):
+        r = fn(*args)
+        jax.block_until_ready(jax.tree.leaves(r)[0]) if jax.tree.leaves(r) else None
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        leaves = jax.tree.leaves(r)
+        if leaves:
+            jax.block_until_ready(leaves[0])
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def emit(rows: List[Row]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

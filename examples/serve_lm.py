@@ -1,0 +1,58 @@
+"""Batched serving example: bucketed continuous batching (the Resizer's
+reveal-and-trim bucketing on plaintext shapes) + prefill + greedy decode.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [--arch stablelm-1.6b]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import decode_step, init_params
+from repro.serve import BucketedBatcher, prefill
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--new-tokens", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    batcher = BucketedBatcher(len_buckets=(16, 32, 64), batch_buckets=(1, 2, 4, 8))
+    for _ in range(args.requests):
+        plen = int(rng.integers(5, 30))
+        batcher.submit(rng.integers(0, cfg.vocab_size, plen))
+
+    print(f"serving {args.requests} ragged requests via bucketed batching")
+    while batcher.n_pending:
+        batch, ids = batcher.next_batch(max_batch=8)
+        toks = jnp.asarray(batch["tokens"])
+        b, plen = toks.shape
+        t0 = time.perf_counter()
+        logits, caches = prefill(cfg, params, {"tokens": toks})
+        out_tokens = [jnp.argmax(logits[:, -1], axis=-1)]
+        for _ in range(args.new_tokens - 1):
+            lg, caches = decode_step(
+                cfg, params, caches, {"tokens": out_tokens[-1][:, None]}
+            )
+            out_tokens.append(jnp.argmax(lg[:, 0], axis=-1))
+        dt = time.perf_counter() - t0
+        gen = np.stack([np.asarray(t) for t in out_tokens], axis=1)
+        tps = b * args.new_tokens / dt
+        print(
+            f"  lot: bucket=({b},{plen}) reqs={ids} {dt:.2f}s "
+            f"({tps:.1f} tok/s) first-gen={gen[:len(ids), :6].tolist()}"
+        )
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""End-to-end training driver (thin wrapper over repro.launch.train).
+
+Trains a reduced same-family config of any assigned architecture on the
+synthetic resumable pipeline, with atomic async checkpoints and auto-resume —
+kill it mid-run and start it again to see fault tolerance in action.
+
+Run:  PYTHONPATH=src python examples/train_lm.py --arch stablelm-1.6b \
+          --reduced --steps 200 --ckpt-dir /tmp/reflex_ckpt
+On a TPU pod, drop --reduced and add the production mesh via launch/dryrun's
+sharding rules (same code path).
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:] or [
+        "--arch", "stablelm-1.6b", "--reduced",
+        "--steps", "120", "--batch", "8", "--seq", "64",
+        "--ckpt-dir", "/tmp/reflex_ckpt", "--ckpt-every", "40", "--ckpt-async",
+    ]
+    sys.exit(main(argv))

@@ -1,0 +1,245 @@
+"""Boolean circuits over XOR-replicated shares (Secrecy/ABY3-style).
+
+Comparisons dominate oblivious SQL operators (filters, joins, sorts). Following
+Secrecy [Liagouris et al., NSDI'23] we keep table data in boolean (XOR) sharing
+and evaluate comparisons as shallow circuits; only the interactive AND gates
+cost communication (1 round each; independent ANDs within a level are batched
+into the same round).
+
+Circuit inventory (k = ring width, default 32):
+
+==============  ========================  ==========================
+circuit         rounds                    AND-words / lane
+==============  ========================  ==========================
+eq / eq_public  log2 k            (5)     log2 k            (5)
+lt / le         1 + log2 k        (6)     1 + 2 log2 k      (11)
+lt_public       log2 k            (5)     2 log2 k          (10)
+ks_add          1 + log2 k        (6)     1 + 2 log2 k      (11)
+bit2a           2                         2 (ring mults)
+b2a             2 (parallel bits)         2k
+a2b             2 ks_add          (12)    2 + 4 log2 k      (22)
+==============  ========================  ==========================
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .ledger import active_ledger, log_comm
+from .prf import PRFSetup
+from .sharing import AShare, BShare, and_, mul
+
+__all__ = [
+    "eq",
+    "eq_public",
+    "lt",
+    "le",
+    "lt_public",
+    "le_public",
+    "ks_add",
+    "bit2a",
+    "b2a",
+    "a2b",
+    "and_bit",
+    "or_bit",
+]
+
+
+def _fused(name: str, rounds: int):
+    led = active_ledger()
+    if led is None:
+        import contextlib
+
+        return contextlib.nullcontext()
+    return led.fused(name, rounds)
+
+
+def _and_pair(a1: BShare, b1: BShare, a2: BShare, b2: BShare, prf: PRFSetup):
+    """Two independent ANDs evaluated in a single communication round."""
+    x = BShare(jnp.stack([a1.shares, a2.shares], axis=1))
+    y = BShare(jnp.stack([b1.shares, b2.shares], axis=1))
+    z = and_(x, y, prf)
+    return BShare(z.shares[:, 0]), BShare(z.shares[:, 1])
+
+
+# -----------------------------------------------------------------------------
+# Equality
+# -----------------------------------------------------------------------------
+
+def _and_reduce_bits(v: BShare, prf: PRFSetup, width: int) -> BShare:
+    """AND all ``width`` bits of each lane into the LSB (log2(width) rounds)."""
+    d = width // 2
+    while d >= 1:
+        v = and_(v, v >> d, prf.fold(d))
+        d //= 2
+    return v.and_public(v.ring.const(1))
+
+
+def eq(x: BShare, y: BShare, prf: PRFSetup, width: int | None = None) -> BShare:
+    """x == y -> single-bit BShare in the LSB. XOR is local, so secret-secret
+    equality costs the same as secret-public: a log2(k)-deep AND tree."""
+    width = width or x.ring.bits
+    with _fused("eq", rounds=width.bit_length() - 1):
+        v = ~(x ^ y)
+        return _and_reduce_bits(v, prf, width)
+
+
+def eq_public(x: BShare, c, prf: PRFSetup, width: int | None = None) -> BShare:
+    width = width or x.ring.bits
+    with _fused("eq", rounds=width.bit_length() - 1):
+        v = ~(x.xor_public(c))
+        return _and_reduce_bits(v, prf, width)
+
+
+# -----------------------------------------------------------------------------
+# Comparison: unsigned borrow-lookahead (Kogge-Stone prefix)
+# -----------------------------------------------------------------------------
+
+def _borrow_prefix(g: BShare, p: BShare, prf: PRFSetup, width: int) -> BShare:
+    """Inclusive prefix of the borrow recurrence B_j = g_j | (p_j & B_{j-1}).
+
+    g and p are bit-disjoint so | == ^. Each Kogge-Stone level performs two
+    independent ANDs, batched into one round.
+    """
+    d = 1
+    while d < width:
+        pg, pp = _and_pair(p, g << d, p, p << d, prf.fold(100 + d))
+        g = g ^ pg
+        p = pp
+        d *= 2
+    return g
+
+
+def lt(x: BShare, y: BShare, prf: PRFSetup, width: int | None = None) -> BShare:
+    """Unsigned x < y -> single-bit BShare (borrow-out of x - y)."""
+    width = width or x.ring.bits
+    levels = width.bit_length() - 1
+    with _fused("lt", rounds=1 + levels):
+        g = and_(~x, y, prf.fold(7))  # borrow generate: x_j=0, y_j=1
+        p = ~(x ^ y)  # borrow propagate: x_j == y_j (local)
+        b = _borrow_prefix(g, p, prf, width)
+        return (b >> (width - 1)).and_public(b.ring.const(1))
+
+
+def lt_public(x: BShare, c, prf: PRFSetup, width: int | None = None) -> BShare:
+    """x < c with public c: the generate AND becomes local (saves a round)."""
+    width = width or x.ring.bits
+    levels = width.bit_length() - 1
+    if isinstance(c, int):
+        c = c & x.ring.mask  # wrap without overflowing jnp's int32 default
+    with _fused("lt", rounds=levels):
+        g = (~x).and_public(c)  # local: c is public
+        p = ~(x.xor_public(c))
+        b = _borrow_prefix(g, p, prf, width)
+        return (b >> (width - 1)).and_public(b.ring.const(1))
+
+
+def le(x: BShare, y: BShare, prf: PRFSetup, width: int | None = None) -> BShare:
+    """x <= y  ==  not (y < x)."""
+    return _not_bit(lt(y, x, prf, width))
+
+
+def le_public(x: BShare, c, prf: PRFSetup, width: int | None = None) -> BShare:
+    """x <= c (public c)  ==  x < c+1 for c < 2^k - 1."""
+    if isinstance(c, int):
+        return lt_public(x, (c + 1) & x.ring.mask, prf, width)
+    return lt_public(x, jnp.asarray(c).astype(x.ring.dtype) + 1, prf, width)
+
+
+def gt_public(x: BShare, c, prf: PRFSetup, width: int | None = None) -> BShare:
+    """x > c (public c) == not(x < c+1)."""
+    if isinstance(c, int):
+        return _not_bit(lt_public(x, (c + 1) & x.ring.mask, prf, width))
+    return _not_bit(lt_public(x, jnp.asarray(c).astype(x.ring.dtype) + 1, prf, width))
+
+
+def _not_bit(b: BShare) -> BShare:
+    """Negate a single-bit share (flip only the LSB)."""
+    return b.xor_public(b.ring.const(1))
+
+
+def and_bit(a: BShare, b: BShare, prf: PRFSetup) -> BShare:
+    return and_(a, b, prf)
+
+
+def or_bit(a: BShare, b: BShare, prf: PRFSetup) -> BShare:
+    return _not_bit(and_(_not_bit(a), _not_bit(b), prf))
+
+
+# -----------------------------------------------------------------------------
+# Kogge–Stone adder (boolean addition; used by a2b)
+# -----------------------------------------------------------------------------
+
+def ks_add(x: BShare, y: BShare, prf: PRFSetup, width: int | None = None) -> BShare:
+    width = width or x.ring.bits
+    levels = width.bit_length() - 1
+    with _fused("ks_add", rounds=1 + levels):
+        g = and_(x, y, prf.fold(11))
+        p = x ^ y
+        d = 1
+        while d < width:
+            pg, pp = _and_pair(p, g << d, p, p << d, prf.fold(200 + d))
+            g = g ^ pg
+            p = pp
+            d *= 2
+        carry = g << 1
+        return x ^ y ^ carry
+
+
+# -----------------------------------------------------------------------------
+# Share conversions
+# -----------------------------------------------------------------------------
+
+def _trivial_a(share_bits: jnp.ndarray, slot: int) -> AShare:
+    """Arithmetic sharing (0,..,v,..,0) with v at ``slot`` — locally
+    constructible by the two parties that hold that share leg."""
+    z = jnp.zeros((3,) + share_bits.shape, dtype=share_bits.dtype)
+    return AShare(z.at[slot].set(share_bits))
+
+
+def _trivial_b(share_word: jnp.ndarray, slot: int) -> BShare:
+    z = jnp.zeros((3,) + share_word.shape, dtype=share_word.dtype)
+    return BShare(z.at[slot].set(share_word))
+
+
+def bit2a(b: BShare, prf: PRFSetup) -> AShare:
+    """Convert a single-bit XOR sharing to an arithmetic sharing of {0,1}.
+
+    b = b0 ^ b1 ^ b2; XOR is emulated arithmetically twice:
+    u ^ v = u + v - 2uv. Two ring multiplications, 2 rounds.
+    """
+    ring = b.ring
+    with _fused("bit2a", rounds=2):
+        bits = b.shares & ring.const(1)
+        a0, a1, a2 = (_trivial_a(bits[i], i) for i in range(3))
+        t = a0 + a1 - mul(a0, a1, prf.fold(21)).mul_public(2)
+        return t + a2 - mul(t, a2, prf.fold(22)).mul_public(2)
+
+
+def b2a(x: BShare, prf: PRFSetup, width: int | None = None) -> AShare:
+    """Full-word boolean -> arithmetic via parallel per-bit injection.
+
+    All k bit2a instances run in the same 2 rounds (they are independent);
+    the weighted recombination is local.
+    """
+    ring = x.ring
+    width = width or ring.bits
+    with _fused("b2a", rounds=2):
+        planes = BShare(
+            jnp.stack([(x.shares >> j) & ring.const(1) for j in range(width)], axis=-1)
+        )
+        bits_a = bit2a(planes, prf)
+        import numpy as _np
+
+        weights = jnp.asarray(
+            (_np.uint64(1) << _np.arange(width, dtype=_np.uint64)).astype(ring.np_dtype)
+        )
+        return AShare(jnp.sum(bits_a.shares * weights, axis=-1, dtype=ring.dtype))
+
+
+def a2b(x: AShare, prf: PRFSetup, width: int | None = None) -> BShare:
+    """Arithmetic -> boolean: boolean-share each arithmetic leg trivially,
+    then two Kogge-Stone additions (2 * (1 + log2 k) rounds)."""
+    with _fused("a2b", rounds=2 * (1 + (width or x.ring.bits).bit_length() - 1)):
+        legs = [_trivial_b(x.shares[i], i) for i in range(3)]
+        s = ks_add(legs[0], legs[1], prf.fold(31), width)
+        return ks_add(s, legs[2], prf.fold(32), width)

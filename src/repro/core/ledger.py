@@ -1,0 +1,134 @@
+"""Static communication-cost ledger for the simulated 3-party protocols.
+
+The paper's evaluation is communication-bound ("the expectation is that runtime
+will be dominated by communication cost", §4.5), so alongside the bit-exact
+share simulation we keep an *analytic* ledger of what a real deployment would
+send: for every protocol primitive we record the number of synchronous
+communication rounds and the bytes each party transmits.
+
+Costs depend only on static shapes, so they can be captured by tracing: the
+Python body of every protocol runs under ``jax.eval_shape`` (or eagerly / under
+``jit`` tracing) and logs as it goes. Use::
+
+    with CommLedger() as led:
+        jax.eval_shape(protocol_fn, *abstract_args)
+    print(led.tally())
+
+When no ledger is active, logging is a no-op, so jitted hot paths pay nothing.
+
+``fused(rounds=r)`` coalesces the entries logged inside it into a single entry
+with ``r`` rounds (used by circuits whose constituent ANDs run in parallel
+within a round — e.g. the 5-level equality tree logs 5 rounds, not 5×#words).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from collections import defaultdict
+from typing import Dict, List, Optional
+
+__all__ = ["CommLedger", "log_comm", "active_ledger", "measure_comm"]
+
+_STATE = threading.local()
+
+
+def _stack() -> List["CommLedger"]:
+    if not hasattr(_STATE, "stack"):
+        _STATE.stack = []
+    return _STATE.stack
+
+
+@dataclasses.dataclass
+class CommEntry:
+    op: str
+    rounds: int
+    bytes_per_party: int
+    count: int = 1
+
+
+class CommLedger:
+    """Accumulates (rounds, bytes/party) per protocol op."""
+
+    def __init__(self) -> None:
+        self.entries: List[CommEntry] = []
+        self._fuse_depth = 0
+        self._fuse_buffer: List[CommEntry] = []
+
+    # -- context management -------------------------------------------------
+    def __enter__(self) -> "CommLedger":
+        _stack().append(self)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        top = _stack().pop()
+        assert top is self, "CommLedger stack corrupted"
+
+    # -- logging -------------------------------------------------------------
+    def log(self, op: str, rounds: int, bytes_per_party: int) -> None:
+        entry = CommEntry(op, rounds, bytes_per_party)
+        if self._fuse_depth > 0:
+            self._fuse_buffer.append(entry)
+        else:
+            self.entries.append(entry)
+
+    @contextlib.contextmanager
+    def fused(self, op: str, rounds: int):
+        """Coalesce nested logs into one entry with the given round count."""
+        self._fuse_depth += 1
+        mark = len(self._fuse_buffer)
+        try:
+            yield
+        finally:
+            self._fuse_depth -= 1
+            sub = self._fuse_buffer[mark:]
+            del self._fuse_buffer[mark:]
+            total_bytes = sum(e.bytes_per_party for e in sub)
+            entry = CommEntry(op, rounds, total_bytes)
+            if self._fuse_depth > 0:
+                self._fuse_buffer.append(entry)
+            else:
+                self.entries.append(entry)
+
+    # -- reporting -----------------------------------------------------------
+    def tally(self) -> Dict[str, float]:
+        total_bytes = sum(e.bytes_per_party for e in self.entries)
+        total_rounds = sum(e.rounds for e in self.entries)
+        return {"bytes_per_party": total_bytes, "rounds": total_rounds}
+
+    def by_op(self) -> Dict[str, Dict[str, int]]:
+        agg: Dict[str, Dict[str, int]] = defaultdict(
+            lambda: {"rounds": 0, "bytes_per_party": 0, "calls": 0}
+        )
+        for e in self.entries:
+            agg[e.op]["rounds"] += e.rounds
+            agg[e.op]["bytes_per_party"] += e.bytes_per_party
+            agg[e.op]["calls"] += e.count
+        return dict(agg)
+
+    def reset(self) -> None:
+        self.entries.clear()
+
+
+def active_ledger() -> Optional[CommLedger]:
+    stack = _stack()
+    return stack[-1] if stack else None
+
+
+def log_comm(op: str, rounds: int, bytes_per_party: int) -> None:
+    led = active_ledger()
+    if led is not None:
+        led.log(op, rounds, bytes_per_party)
+
+
+def measure_comm(fn, *args, **kwargs) -> Dict[str, float]:
+    """Capture the communication profile of ``fn`` without running compute.
+
+    Uses ``jax.eval_shape`` so only the Python body (and hence ledger logging)
+    executes; no FLOPs are spent. Shapes fully determine cost.
+    """
+    import jax
+
+    with CommLedger() as led:
+        jax.eval_shape(lambda *a: fn(*a, **kwargs), *args)
+    return led.tally()

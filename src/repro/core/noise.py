@@ -1,0 +1,240 @@
+"""Pluggable noise-generation strategies for the Resizer (§4.3).
+
+A strategy answers three questions:
+
+* ``sample_eta(key, N, T)`` — a noise budget (filler-tuple count) for the
+  *sequential* addition design,
+* ``sample_p(key, N, T)`` — a coin-toss success probability for the
+  *parallel* design (Beta samples p directly and never needs T; others derive
+  p = clip(eta / (N - T), 0, 1)),
+* moments — mean/variance of eta, used by the CRT metric (§3.3) and by the
+  planner's cost model.
+
+Implemented strategies: truncated Laplace (Shrinkwrap's (eps, delta)-DP
+noise), Beta / Beta-Binomial, Uniform, Constant, Reveal (trim everything ==
+SecretFlow-SCQL), and NoTrim (fully oblivious).
+
+Secrecy note (documented in DESIGN.md): in a real deployment the realized
+eta / p must remain hidden from the computing parties (otherwise S - eta
+reveals T); the draw is made from joint randomness and consumed inside MPC.
+In this simulation the realization is materialized host-side to drive the
+protocol, and the runtime clip eta <- min(eta, N - T) uses the plaintext T
+exactly where the paper's runtime adjustment does.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import jax
+import numpy as np
+
+__all__ = [
+    "NoiseStrategy",
+    "TruncatedLaplace",
+    "BetaNoise",
+    "UniformNoise",
+    "ConstantNoise",
+    "RevealNoise",
+    "NoTrim",
+    "shrinkwrap_default",
+]
+
+
+class NoiseStrategy:
+    name: str = "base"
+
+    # -- sampling -------------------------------------------------------------
+    def sample_eta(self, key: jax.Array, n: int, t: int) -> int:
+        raise NotImplementedError
+
+    def sample_p(self, key: jax.Array, n: int, t: int) -> float:
+        """Success probability for the parallel (Binomial) design."""
+        free = max(n - t, 1)
+        eta = self.sample_eta(key, n, t)
+        return float(np.clip(eta / free, 0.0, 1.0))
+
+    # -- moments of eta (for CRT / planning) ----------------------------------
+    def mean(self, n: int, t: int) -> float:
+        raise NotImplementedError
+
+    def var(self, n: int, t: int) -> float:
+        raise NotImplementedError
+
+    def var_parallel(self, n: int, t: int) -> float:
+        """Var(S) when this strategy drives the parallel coin-toss design.
+
+        S = T + Binomial(N - T, eta/(N - T)). Law of total variance:
+        Var(S) = E[eta] - E[eta^2]/(N - T) + Var(eta).
+        """
+        free = max(n - t, 1)
+        m, v = self.mean(n, t), self.var(n, t)
+        e2 = v + m * m
+        return max(m - e2 / free + v, 0.0)
+
+
+# -----------------------------------------------------------------------------
+# Truncated Laplace — Shrinkwrap's DP noise
+# -----------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TruncatedLaplace(NoiseStrategy):
+    """Lap(mu, b) truncated to [0, inf), b = sensitivity / eps,
+    mu = -b * ln(2 * delta) so that the untruncated mass below zero is delta
+    (Shrinkwrap's calibration; the paper's example eps=0.5, delta=5e-5,
+    sens=1000 gives mean ~ 18.4k, matching the quoted ~18336)."""
+
+    eps: float = 0.5
+    delta: float = 0.00005
+    sensitivity: float = 1.0
+    name: str = "tlap"
+
+    @property
+    def b(self) -> float:
+        return self.sensitivity / self.eps
+
+    @property
+    def mu(self) -> float:
+        return -self.b * math.log(2.0 * self.delta)
+
+    # Laplace CDF / inverse, truncated to [0, inf)
+    def _cdf0(self) -> float:
+        # F(0) for Lap(mu, b); mu > 0 in all sane configs
+        return 0.5 * math.exp(-self.mu / self.b)
+
+    def sample_eta(self, key: jax.Array, n: int, t: int) -> int:
+        u = float(jax.random.uniform(key, minval=self._cdf0(), maxval=1.0))
+        x = self._inv_cdf(u)
+        return int(np.clip(round(x), 0, max(n - t, 0)))
+
+    def _inv_cdf(self, u: float) -> float:
+        if u <= 0.5:
+            return self.mu + self.b * math.log(2.0 * u)
+        return self.mu - self.b * math.log(2.0 * (1.0 - u))
+
+    def _moments(self) -> Tuple[float, float]:
+        # numeric moments of the truncated distribution (grid integration)
+        lo, hi = 0.0, self.mu + 40.0 * self.b
+        xs = np.linspace(lo, hi, 200001)
+        pdf = np.exp(-np.abs(xs - self.mu) / self.b) / (2.0 * self.b)
+        z = np.trapezoid(pdf, xs)
+        pdf /= z
+        m = float(np.trapezoid(xs * pdf, xs))
+        v = float(np.trapezoid((xs - m) ** 2 * pdf, xs))
+        return m, v
+
+    def mean(self, n: int, t: int) -> float:
+        return self._moments()[0]
+
+    def var(self, n: int, t: int) -> float:
+        return self._moments()[1]
+
+
+# -----------------------------------------------------------------------------
+# Beta — samples p directly (Beta-Binomial when combined with parallel design)
+# -----------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BetaNoise(NoiseStrategy):
+    alpha: float = 2.0
+    beta: float = 6.0
+    name: str = "beta"
+
+    def sample_p(self, key: jax.Array, n: int, t: int) -> float:
+        return float(jax.random.beta(key, self.alpha, self.beta))
+
+    def sample_eta(self, key: jax.Array, n: int, t: int) -> int:
+        # scaled-Beta variant for the sequential design (§4.3)
+        p = self.sample_p(key, n, t)
+        return int(round(p * max(n - t, 0)))
+
+    def mean(self, n: int, t: int) -> float:
+        return self.alpha / (self.alpha + self.beta) * max(n - t, 0)
+
+    def var(self, n: int, t: int) -> float:
+        a, b = self.alpha, self.beta
+        free = max(n - t, 0)
+        return a * b / ((a + b) ** 2 * (a + b + 1)) * free**2
+
+    def var_parallel(self, n: int, t: int) -> float:
+        # Beta-Binomial(n=N-T, alpha, beta) closed form
+        a, b, free = self.alpha, self.beta, max(n - t, 0)
+        if free == 0:
+            return 0.0
+        return free * a * b * (a + b + free) / ((a + b) ** 2 * (a + b + 1))
+
+
+@dataclasses.dataclass
+class UniformNoise(NoiseStrategy):
+    lo_frac: float = 0.0
+    hi_frac: float = 1.0
+    name: str = "uniform"
+
+    def sample_eta(self, key: jax.Array, n: int, t: int) -> int:
+        free = max(n - t, 0)
+        lo, hi = self.lo_frac * free, self.hi_frac * free
+        return int(jax.random.uniform(key, minval=lo, maxval=hi))
+
+    def mean(self, n: int, t: int) -> float:
+        free = max(n - t, 0)
+        return 0.5 * (self.lo_frac + self.hi_frac) * free
+
+    def var(self, n: int, t: int) -> float:
+        free = max(n - t, 0)
+        return ((self.hi_frac - self.lo_frac) * free) ** 2 / 12.0
+
+
+@dataclasses.dataclass
+class ConstantNoise(NoiseStrategy):
+    """Deterministic filler count (fraction of N). Zero variance — CRT = 1
+    round: a degenerate strategy useful as a caveat demo (§5.4)."""
+
+    frac: float = 0.1
+    name: str = "const"
+
+    def sample_eta(self, key: jax.Array, n: int, t: int) -> int:
+        return int(np.clip(round(self.frac * n), 0, max(n - t, 0)))
+
+    def mean(self, n: int, t: int) -> float:
+        return min(self.frac * n, max(n - t, 0))
+
+    def var(self, n: int, t: int) -> float:
+        return 0.0
+
+
+@dataclasses.dataclass
+class RevealNoise(NoiseStrategy):
+    """eta = 0: trim away every filler (SecretFlow-SCQL's disclosure)."""
+
+    name: str = "reveal"
+
+    def sample_eta(self, key: jax.Array, n: int, t: int) -> int:
+        return 0
+
+    def mean(self, n: int, t: int) -> float:
+        return 0.0
+
+    def var(self, n: int, t: int) -> float:
+        return 0.0
+
+
+@dataclasses.dataclass
+class NoTrim(NoiseStrategy):
+    """Keep everything: the Resizer degenerates to a no-op (fully oblivious)."""
+
+    name: str = "notrim"
+
+    def sample_eta(self, key: jax.Array, n: int, t: int) -> int:
+        return max(n - t, 0)
+
+    def mean(self, n: int, t: int) -> float:
+        return max(n - t, 0)
+
+    def var(self, n: int, t: int) -> float:
+        return 0.0
+
+
+def shrinkwrap_default(sensitivity: float = 1.0) -> TruncatedLaplace:
+    """The paper's evaluation configuration: TLap(eps=0.5, delta=5e-5)."""
+    return TruncatedLaplace(eps=0.5, delta=0.00005, sensitivity=sensitivity)

@@ -1,0 +1,89 @@
+"""Correlated randomness for 3-party replicated secret sharing.
+
+Setup (standard RSS, Araki et al. CCS'16): during a one-time setup each
+adjacent pair of parties (P_i, P_{i+1}) agrees on a PRF key ``k_i``. Then,
+without any interaction, the parties can derive:
+
+* **zero sharings**: ``alpha_i = F(k_i, ctr) - F(k_{i-1}, ctr)`` satisfies
+  ``sum_i alpha_i = 0`` (arithmetic) — or with XOR, ``xor_i alpha_i = 0``
+  (boolean). These re-randomize multiplication outputs for free.
+* **replicated random values**: ``r = sum_i F(k_i, ctr)`` is a random ring
+  element of which party i knows the two "legs" F(k_i), F(k_{i+1}) — i.e. a
+  valid RSS sharing of a random value, generated with zero communication.
+
+In the JAX simulation the three pair keys live in a small pytree; every use
+site folds in a fresh counter derived from a user-provided ``jax.random`` key,
+mirroring the monotone PRF counter of a real deployment.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .ring import Ring, default_ring
+
+__all__ = ["PRFSetup", "setup_prf", "zero_share_add", "zero_share_xor", "rand_replicated"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PRFSetup:
+    """Three pairwise PRF keys: pair_keys[i] is shared by parties i and i+1."""
+
+    pair_keys: jnp.ndarray  # (3, 2) uint32 jax PRNG keys (raw key data)
+
+    def tree_flatten(self):
+        return (self.pair_keys,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0])
+
+    def fold(self, tag: jnp.ndarray | int) -> "PRFSetup":
+        """Derive fresh per-use keys (the PRF counter)."""
+        folded = jax.vmap(lambda k: jax.random.fold_in(k, tag))(
+            jax.vmap(jax.random.wrap_key_data)(self.pair_keys)
+        )
+        return PRFSetup(jax.vmap(jax.random.key_data)(folded))
+
+    def draw(self, shape: Tuple[int, ...], ring: Ring) -> jnp.ndarray:
+        """F(k_i, .) for each pair key -> (3, *shape) ring elements."""
+        keys = jax.vmap(jax.random.wrap_key_data)(self.pair_keys)
+        bits = jax.vmap(
+            lambda k: jax.random.bits(k, shape=shape, dtype=jnp.uint32)
+        )(keys)
+        return bits.astype(ring.dtype)
+
+    def draw_uniform(self, shape: Tuple[int, ...]) -> jnp.ndarray:
+        """Per-pair-key uniform [0,1) floats -> (3, *shape) float32."""
+        keys = jax.vmap(jax.random.wrap_key_data)(self.pair_keys)
+        return jax.vmap(lambda k: jax.random.uniform(k, shape=shape))(keys)
+
+
+def setup_prf(key: jax.Array) -> PRFSetup:
+    """One-time key agreement between the three adjacent party pairs."""
+    keys = jax.random.split(key, 3)
+    return PRFSetup(jax.vmap(jax.random.key_data)(keys))
+
+
+def zero_share_add(prf: PRFSetup, shape, ring: Ring | None = None) -> jnp.ndarray:
+    """(3, *shape) additive sharing of zero: alpha_i = F(k_i) - F(k_{i-1})."""
+    ring = ring or default_ring()
+    f = prf.draw(tuple(shape), ring)
+    return f - jnp.roll(f, 1, axis=0)
+
+
+def zero_share_xor(prf: PRFSetup, shape, ring: Ring | None = None) -> jnp.ndarray:
+    """(3, *shape) XOR sharing of zero: alpha_i = F(k_i) ^ F(k_{i-1})."""
+    ring = ring or default_ring()
+    f = prf.draw(tuple(shape), ring)
+    return f ^ jnp.roll(f, 1, axis=0)
+
+
+def rand_replicated(prf: PRFSetup, shape, ring: Ring | None = None) -> jnp.ndarray:
+    """(3, *shape) canonical shares of a fresh random ring element (no comm)."""
+    ring = ring or default_ring()
+    return prf.draw(tuple(shape), ring)

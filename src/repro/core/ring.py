@@ -1,0 +1,64 @@
+"""Modular ring helpers for secret sharing.
+
+Reflex (and its MP-SPDZ substrate) computes over the ring Z_{2^k}. We default to
+k = 32 (``uint32``) which wraps naturally in JAX/XLA without needing
+``jax_enable_x64``; k = 64 is available when x64 is enabled.
+
+All shares are stored in the ring dtype; arithmetic wraps mod 2^k by
+construction, and boolean (XOR) sharing packs k bits per lane.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Ring", "RING32", "RING64", "default_ring"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Ring:
+    """The ring Z_{2^bits} used for both arithmetic and boolean sharing."""
+
+    bits: int
+
+    @property
+    def dtype(self):
+        return jnp.uint32 if self.bits == 32 else jnp.uint64
+
+    @property
+    def np_dtype(self):
+        return np.uint32 if self.bits == 32 else np.uint64
+
+    @property
+    def mask(self) -> int:
+        return (1 << self.bits) - 1
+
+    @property
+    def bytes(self) -> int:
+        return self.bits // 8
+
+    @property
+    def signbit(self) -> int:
+        return 1 << (self.bits - 1)
+
+    def wrap(self, x) -> jnp.ndarray:
+        """Cast an integer array into the ring (wrapping)."""
+        return jnp.asarray(x).astype(self.dtype)
+
+    def to_signed(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Interpret ring elements as signed two's-complement integers."""
+        sdtype = jnp.int32 if self.bits == 32 else jnp.int64
+        return x.astype(sdtype)
+
+    def const(self, value: int, shape=()) -> jnp.ndarray:
+        return jnp.full(shape, value & self.mask, dtype=self.dtype)
+
+
+RING32 = Ring(32)
+RING64 = Ring(64)
+
+
+def default_ring() -> Ring:
+    return RING32

@@ -1,0 +1,363 @@
+"""3-party replicated secret sharing (RSS) over Z_{2^k}, simulated in JAX.
+
+Representation
+--------------
+A secret ``x`` is the canonical share triple ``(s0, s1, s2)`` stored in a
+leading axis of size 3, with ``x = s0 + s1 + s2 (mod 2^k)`` for arithmetic
+(:class:`AShare`) or ``x = s0 ^ s1 ^ s2`` for boolean (:class:`BShare`)
+sharing. Party ``P_i`` holds the replicated pair ``(s_i, s_{i+1})`` — the
+simulation keeps the canonical triple and implements every protocol as the
+exact message pattern a real deployment would run, logging each round's bytes
+to the active :class:`~repro.core.ledger.CommLedger`.
+
+Protocols implemented here (all standard, Araki et al. CCS'16 / ABY3):
+
+* local: add / sub / const-mul (AShare), xor / not / shifts (BShare)
+* ``mul`` / ``and_``: 1 round, one ring element sent per party per lane,
+  re-randomized with a PRF zero-sharing, followed by the resharing hop
+* ``reveal``: 1 round (each party sends its first share to the party missing
+  it)
+
+Security note: this is a *simulation* for systems research — shares co-reside
+in one address space. The protocol logic, randomness structure, and
+communication pattern are faithful; the isolation boundary of a real MPC
+deployment is not provided (and not needed for performance analysis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .ledger import log_comm
+from .prf import PRFSetup, rand_replicated, zero_share_add, zero_share_xor
+from .ring import Ring, default_ring
+
+__all__ = [
+    "AShare",
+    "BShare",
+    "share_a",
+    "share_b",
+    "reveal_a",
+    "reveal_b",
+    "mul",
+    "and_",
+    "NUM_PARTIES",
+]
+
+NUM_PARTIES = 3
+
+
+def _ring_of(x: jnp.ndarray) -> Ring:
+    return Ring(32) if x.dtype == jnp.uint32 else Ring(64)
+
+
+def _as_ring(c, ring: Ring) -> jnp.ndarray:
+    """Coerce a public constant (Python int / numpy / jax array) into the ring,
+    wrapping mod 2^k (plain ``jnp.asarray`` would overflow on e.g. 0xFFFFFFFF)."""
+    import numpy as _np
+
+    if isinstance(c, int):
+        return jnp.asarray(_np.asarray(c & ring.mask, dtype=ring.np_dtype))
+    c = jnp.asarray(c)
+    if c.dtype != ring.dtype:
+        c = c.astype(ring.dtype)
+    return c
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class _ShareBase:
+    shares: jnp.ndarray  # (3, *shape) ring dtype
+
+    # -- pytree --------------------------------------------------------------
+    def tree_flatten(self):
+        return (self.shares,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0])
+
+    # -- structure -----------------------------------------------------------
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return tuple(self.shares.shape[1:])
+
+    @property
+    def size(self) -> int:
+        s = 1
+        for d in self.shape:
+            s *= d
+        return s
+
+    @property
+    def ring(self) -> Ring:
+        return _ring_of(self.shares)
+
+    def map_shares(self, fn: Callable[[jnp.ndarray], jnp.ndarray]):
+        """Apply a share-local (linear / structural) transform to all shares."""
+        return type(self)(fn(self.shares))
+
+    # Structural helpers (all local: identical re-layout at every party).
+    def reshape(self, *shape):
+        if len(shape) == 1 and isinstance(shape[0], (tuple, list)):
+            shape = tuple(shape[0])
+        return self.map_shares(lambda s: s.reshape((3,) + tuple(shape)))
+
+    def __getitem__(self, idx):
+        if not isinstance(idx, tuple):
+            idx = (idx,)
+        return self.map_shares(lambda s: s[(slice(None),) + idx])
+
+    def take(self, indices, axis: int = 0):
+        return self.map_shares(lambda s: jnp.take(s, indices, axis=axis + 1))
+
+    def broadcast_to(self, shape):
+        return self.map_shares(lambda s: jnp.broadcast_to(s, (3,) + tuple(shape)))
+
+    def repeat(self, n: int, axis: int = 0):
+        return self.map_shares(lambda s: jnp.repeat(s, n, axis=axis + 1))
+
+    def tile(self, reps: Sequence[int]):
+        return self.map_shares(lambda s: jnp.tile(s, (1,) + tuple(reps)))
+
+    @classmethod
+    def concat(cls, parts: Sequence["_ShareBase"], axis: int = 0):
+        return cls(jnp.concatenate([p.shares for p in parts], axis=axis + 1))
+
+    @classmethod
+    def stack(cls, parts: Sequence["_ShareBase"], axis: int = 0):
+        return cls(jnp.stack([p.shares for p in parts], axis=axis + 1))
+
+    def pad_rows(self, n_rows: int, value_shares=None):
+        """Pad axis 0 (rows) up to ``n_rows`` with zero shares (a valid
+        sharing of 0; callers pair this with a public/shared valid column)."""
+        cur = self.shape[0]
+        if n_rows == cur:
+            return self
+        pad = [(0, 0)] * self.shares.ndim
+        pad[1] = (0, n_rows - cur)
+        return self.map_shares(lambda s: jnp.pad(s, pad))
+
+
+@jax.tree_util.register_pytree_node_class
+class AShare(_ShareBase):
+    """Additive replicated sharing: value = s0 + s1 + s2 mod 2^k."""
+
+    # -- local linear ops ------------------------------------------------
+    def __add__(self, other):
+        if isinstance(other, AShare):
+            return AShare(self.shares + other.shares)
+        return self.add_public(other)
+
+    __radd__ = __add__
+
+    def __sub__(self, other):
+        if isinstance(other, AShare):
+            return AShare(self.shares - other.shares)
+        return self.add_public(_as_ring(0, self.ring) - _as_ring(other, self.ring))
+
+    def __neg__(self):
+        return AShare(jnp.zeros_like(self.shares) - self.shares)
+
+    def add_public(self, c) -> "AShare":
+        """Add a public constant: by convention share 0 absorbs it."""
+        c = _as_ring(c, self.ring)
+        return AShare(self.shares.at[0].add(c))
+
+    def mul_public(self, c) -> "AShare":
+        c = _as_ring(c, self.ring)
+        return AShare(self.shares * c)
+
+    def __mul__(self, other):
+        if isinstance(other, AShare):
+            raise TypeError("secret x secret multiply requires mul(x, y, prf)")
+        return self.mul_public(other)
+
+    __rmul__ = __mul__
+
+    def sum(self, axis=0) -> "AShare":
+        """Local reduction (additions are free under additive sharing)."""
+        return AShare(jnp.sum(self.shares, axis=axis + 1))
+
+    def cumsum(self, axis=0) -> "AShare":
+        return AShare(jnp.cumsum(self.shares, axis=axis + 1))
+
+    def dot(self, public_vec) -> "AShare":
+        v = jnp.asarray(public_vec).astype(self.ring.dtype)
+        return AShare(jnp.einsum("p...n,n->p...", self.shares, v))
+
+
+@jax.tree_util.register_pytree_node_class
+class BShare(_ShareBase):
+    """XOR replicated sharing over k-bit words: value = s0 ^ s1 ^ s2."""
+
+    def __xor__(self, other):
+        if isinstance(other, BShare):
+            return BShare(self.shares ^ other.shares)
+        return self.xor_public(other)
+
+    __rxor__ = __xor__
+
+    def xor_public(self, c) -> "BShare":
+        c = _as_ring(c, self.ring)
+        return BShare(self.shares.at[0].set(self.shares[0] ^ c))
+
+    def __invert__(self) -> "BShare":
+        return self.xor_public(self.ring.mask)
+
+    def __lshift__(self, n: int) -> "BShare":
+        return BShare(self.shares << n)
+
+    def __rshift__(self, n: int) -> "BShare":
+        return BShare(self.shares >> n)
+
+    def and_public(self, c) -> "BShare":
+        c = _as_ring(c, self.ring)
+        return BShare(self.shares & c)
+
+    def lsb_mask(self) -> "BShare":
+        """Replicate the LSB of each lane across all k bit positions (local:
+        each share's LSB extends independently; XOR of extensions extends the
+        XOR)."""
+        lsb = self.shares & self.ring.const(1)
+        # 0 - lsb in the unsigned ring == all-ones iff lsb == 1
+        return BShare(jnp.zeros_like(lsb) - lsb)
+
+    def bit(self, j: int) -> "BShare":
+        """Extract bit j into the LSB position."""
+        return BShare((self.shares >> j) & self.ring.const(1))
+
+
+# -----------------------------------------------------------------------------
+# Share / reveal
+# -----------------------------------------------------------------------------
+
+def share_a(x, key: jax.Array, ring: Ring | None = None) -> AShare:
+    """Data-owner arithmetic sharing of plaintext ``x`` (input upload)."""
+    ring = ring or default_ring()
+    x = ring.wrap(x)
+    k0, k1 = jax.random.split(key)
+    s0 = jax.random.bits(k0, shape=x.shape, dtype=jnp.uint32).astype(ring.dtype)
+    s1 = jax.random.bits(k1, shape=x.shape, dtype=jnp.uint32).astype(ring.dtype)
+    s2 = x - s0 - s1
+    return AShare(jnp.stack([s0, s1, s2]))
+
+
+def share_b(x, key: jax.Array, ring: Ring | None = None) -> BShare:
+    """Data-owner boolean (XOR) sharing of plaintext ``x``."""
+    ring = ring or default_ring()
+    x = ring.wrap(x)
+    k0, k1 = jax.random.split(key)
+    s0 = jax.random.bits(k0, shape=x.shape, dtype=jnp.uint32).astype(ring.dtype)
+    s1 = jax.random.bits(k1, shape=x.shape, dtype=jnp.uint32).astype(ring.dtype)
+    s2 = x ^ s0 ^ s1
+    return BShare(jnp.stack([s0, s1, s2]))
+
+
+def reveal_a(x: AShare) -> jnp.ndarray:
+    """Open an arithmetic sharing (1 round; each party sends one share)."""
+    log_comm("reveal", 1, x.size * x.ring.bytes)
+    return x.shares[0] + x.shares[1] + x.shares[2]
+
+
+def reveal_b(x: BShare) -> jnp.ndarray:
+    log_comm("reveal", 1, x.size * x.ring.bytes)
+    return x.shares[0] ^ x.shares[1] ^ x.shares[2]
+
+
+# -----------------------------------------------------------------------------
+# Multiplication / AND — the only interactive gates (1 round each)
+# -----------------------------------------------------------------------------
+
+def _cross_terms_add(xs: jnp.ndarray, ys: jnp.ndarray) -> jnp.ndarray:
+    """z'_i = x_i*y_i + x_i*y_{i+1} + x_{i+1}*y_i (covers all 9 cross terms)."""
+    xn = jnp.roll(xs, -1, axis=0)  # x_{i+1}
+    yn = jnp.roll(ys, -1, axis=0)
+    return xs * ys + xs * yn + xn * ys
+
+
+def _cross_terms_xor(xs: jnp.ndarray, ys: jnp.ndarray) -> jnp.ndarray:
+    xn = jnp.roll(xs, -1, axis=0)
+    yn = jnp.roll(ys, -1, axis=0)
+    return (xs & ys) ^ (xs & yn) ^ (xn & ys)
+
+
+def _kernel_gate(xs, ys, alpha, boolean: bool):
+    from ..kernels import kernels_enabled
+
+    if not kernels_enabled():
+        return None
+    from ..kernels.rss_gate.ops import gate
+
+    return gate(xs, ys, alpha, boolean=boolean)
+
+
+def mul(x: AShare, y: AShare, prf: PRFSetup) -> AShare:
+    """Secret x secret multiply: 1 round, one ring element per party per lane.
+
+    Each party computes its local cross terms + PRF zero-share, then sends the
+    result to its predecessor to restore replication (the resharing hop).
+    """
+    ring = x.ring
+    alpha = zero_share_add(prf, x.shape, ring)
+    z = _kernel_gate(x.shares, y.shares, alpha, boolean=False)
+    if z is None:
+        z = _cross_terms_add(x.shares, y.shares) + alpha
+    log_comm("mul", 1, x.size * ring.bytes)
+    return AShare(z)
+
+
+def and_(x: BShare, y: BShare, prf: PRFSetup) -> BShare:
+    """Secret AND (bitwise over k-bit lanes): 1 round, k bits per lane/party."""
+    ring = x.ring
+    alpha = zero_share_xor(prf, x.shape, ring)
+    z = _kernel_gate(x.shares, y.shares, alpha, boolean=True)
+    if z is None:
+        z = _cross_terms_xor(x.shares, y.shares) ^ alpha
+    log_comm("and", 1, x.size * ring.bytes)
+    return BShare(z)
+
+
+def or_(x: BShare, y: BShare, prf: PRFSetup) -> BShare:
+    """x OR y = ~(~x AND ~y) — one interactive AND."""
+    return ~and_(~x, ~y, prf)
+
+
+def select(cond_mask: BShare, x: BShare, y: BShare, prf: PRFSetup) -> BShare:
+    """cond ? x : y, with ``cond_mask`` a full-width mask (see lsb_mask)."""
+    d = and_(cond_mask, x ^ y, prf)
+    return y ^ d
+
+
+def rand_ashare(prf: PRFSetup, shape, ring: Ring | None = None) -> AShare:
+    return AShare(rand_replicated(prf, shape, ring or default_ring()))
+
+
+def rand_bshare(prf: PRFSetup, shape, ring: Ring | None = None) -> BShare:
+    return BShare(rand_replicated(prf, shape, ring or default_ring()))
+
+
+def zeros_a(shape, ring: Ring | None = None) -> AShare:
+    ring = ring or default_ring()
+    return AShare(jnp.zeros((3,) + tuple(shape), dtype=ring.dtype))
+
+
+def zeros_b(shape, ring: Ring | None = None) -> BShare:
+    ring = ring or default_ring()
+    return BShare(jnp.zeros((3,) + tuple(shape), dtype=ring.dtype))
+
+
+def const_a(value, shape=(), ring: Ring | None = None) -> AShare:
+    """Trivial (public-constant) arithmetic sharing: share 0 carries it."""
+    ring = ring or default_ring()
+    z = zeros_a(shape, ring)
+    return z.add_public(jnp.broadcast_to(jnp.asarray(value), shape))
+
+
+def const_b(value, shape=(), ring: Ring | None = None) -> BShare:
+    ring = ring or default_ring()
+    z = zeros_b(shape, ring)
+    return z.xor_public(jnp.broadcast_to(jnp.asarray(value), shape))

@@ -1,0 +1,106 @@
+"""Secure multi-party shuffle (MPS) — permutation-composition protocol.
+
+Reflex shuffles the Resizer's output (after noise addition, before
+reveal-and-trim) to break linkage between input and output positions (§4.4).
+
+We implement the honest-majority 3-party shuffle in the style of Araki et al. /
+Asharov et al. [CCS'22] (the protocol family MP-SPDZ's shuffle also belongs
+to): the global permutation is the composition ``pi = pi_2 ∘ pi_1 ∘ pi_0``
+where ``pi_j`` is derived from pair key ``j`` and hence known to exactly two
+parties; the third party receives freshly re-randomized shares after each hop
+and cannot link positions. Since every party is ignorant of at least one
+``pi_j``, nobody knows the composed permutation.
+
+Costs (Table 1 of the paper): 3 rounds (constant), each hop moves the whole
+table once => ``3 * N * M`` bytes per party for N rows of M bytes. The
+computational cost of *applying* a permutation is a row gather — the hot loop
+that ``repro.kernels.shuffle_gather`` implements as a blocked Pallas kernel
+(HBM -> VMEM row tiles); the jnp fallback is ``jnp.take``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from .ledger import active_ledger, log_comm
+from .prf import PRFSetup, zero_share_add, zero_share_xor
+from .sharing import AShare, BShare
+
+__all__ = ["secure_shuffle", "composed_permutation", "HOPS"]
+
+HOPS = 3
+
+Share = Union[AShare, BShare]
+
+
+def _hop_perm(prf: PRFSetup, hop: int, n: int) -> jnp.ndarray:
+    """Permutation for hop ``hop`` — derived from pair key ``hop``, i.e. known
+    to parties hop and hop+1 only."""
+    key = jax.random.wrap_key_data(prf.fold(1000 + hop).pair_keys[hop])
+    return jax.random.permutation(key, n)
+
+
+def composed_permutation(prf: PRFSetup, n: int) -> jnp.ndarray:
+    """The (secret) composed permutation — exposed for tests/oracles only."""
+    pi = jnp.arange(n)
+    for hop in range(HOPS):
+        pi = jnp.take(pi, _hop_perm(prf, hop, n), axis=0)
+    return pi
+
+
+def _rerandomize(col: Share, prf: PRFSetup, tag: int) -> Share:
+    p = prf.fold(tag)
+    if isinstance(col, AShare):
+        return AShare(col.shares + zero_share_add(p, col.shape, col.ring))
+    return BShare(col.shares ^ zero_share_xor(p, col.shape, col.ring))
+
+
+def secure_shuffle(
+    cols: Dict[str, Share],
+    prf: PRFSetup,
+    gather_fn=None,
+) -> Dict[str, Share]:
+    """Shuffle all columns of a table with one hidden common permutation.
+
+    ``gather_fn(shares, perm)`` may be supplied to route the row gather through
+    the Pallas kernel; default is ``jnp.take`` along the row axis.
+    """
+    if not cols:
+        return cols
+    first = next(iter(cols.values()))
+    n = first.shape[0]
+    row_bytes = sum(
+        c.ring.bytes * (c.size // max(c.shape[0], 1)) for c in cols.values()
+    )
+    if gather_fn is None:
+        from ..kernels import kernels_enabled
+
+        if kernels_enabled():
+            from ..kernels.shuffle_gather.ops import gather_rows
+
+            def gather_fn(shares, perm):
+                # shares: (3, N, ...) -> flatten trailing dims into columns
+                flat = shares.reshape(3, shares.shape[1], -1)
+                out = jnp.stack([gather_rows(flat[i], perm) for i in range(3)])
+                return out.reshape(shares.shape)
+
+    take = gather_fn or (lambda shares, perm: jnp.take(shares, perm, axis=1))
+
+    led = active_ledger()
+    import contextlib
+
+    scope = led.fused("shuffle", rounds=HOPS) if led is not None else contextlib.nullcontext()
+    with scope:
+        out = dict(cols)
+        for hop in range(HOPS):
+            perm = _hop_perm(prf, hop, n)
+            new = {}
+            for idx, (name, col) in enumerate(out.items()):
+                moved = col.map_shares(lambda s, p=perm: take(s, p))
+                new[name] = _rerandomize(moved, prf, 5000 + 17 * hop + idx)
+            out = new
+            # one resharing hop: the pi_j-ignorant party receives fresh shares
+            log_comm("shuffle_hop", 1, n * row_bytes)
+    return out

@@ -1,0 +1,118 @@
+"""Oblivious bitonic sorting network over secret-shared tables.
+
+Used by: OrderBy, GroupBy (sort as pre-pass), Distinct, and the Shrinkwrap
+"sort&cut" baseline that Reflex compares against (sort valid tuples to the
+front, then cut at the DP size).
+
+A bitonic network on N = 2^m rows has m(m+1)/2 compare-exchange stages; each
+stage costs one oblivious ``lt`` over N lanes (6 rounds, 11 AND-words) plus one
+oblivious select per payload column (1 AND-word). Total rounds
+O(log^2 N) — vs. the shuffle's O(1), which is exactly the paper's argument for
+replacing Shrinkwrap's sort with a shuffle (Fig. 5a / Fig. 8).
+
+The per-stage compare-exchange is the compute hot spot; it is also provided as
+a Pallas kernel (``repro.kernels.bitonic_stage``) with this module's jnp path
+as the oracle.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Union
+
+import jax.numpy as jnp
+
+from .circuits import lt
+from .ledger import active_ledger
+from .prf import PRFSetup
+from .sharing import AShare, BShare, and_
+
+__all__ = ["bitonic_sort", "bitonic_stages", "sort_valid_first"]
+
+Share = Union[AShare, BShare]
+
+
+def bitonic_stages(n: int):
+    """Yield (k, j) for the standard iterative bitonic network on n = 2^m."""
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            yield k, j
+            j //= 2
+        k *= 2
+
+
+def _stage(
+    cols: Dict[str, BShare],
+    key_col: str,
+    k: int,
+    j: int,
+    prf: PRFSetup,
+    descending: bool,
+) -> Dict[str, BShare]:
+    keyb = cols[key_col]
+    n = keyb.shape[0]
+    idx = jnp.arange(n)
+    partner = idx ^ j
+    is_lo = idx < partner  # public lane predicate
+    asc = (idx & k) == 0  # public direction per pair (bit k equal for both)
+    if descending:
+        asc = ~asc
+
+    a = keyb  # own value
+    b = keyb.take(partner, axis=0)  # partner value
+    # lo/hi views on public masks (local): lo = value at the lower lane index
+    lo_key = BShare(jnp.where(is_lo, a.shares, b.shares))
+    hi_key = BShare(jnp.where(is_lo, b.shares, a.shares))
+    # swap decision, identical at both lanes of the pair (ties don't swap)
+    s = lt(hi_key, lo_key, prf.fold(7 * k + j))  # hi < lo -> out of order (asc)
+    # descending pairs invert the decision (local XOR with a public bit)
+    s = s.xor_public(jnp.where(asc, 0, 1).astype(s.ring.dtype))
+    mask = s.lsb_mask()
+
+    out = {}
+    for idx_c, (name, col) in enumerate(cols.items()):
+        own = col
+        other = col.take(partner, axis=0)
+        d = and_(mask, own ^ other, prf.fold(9000 + 31 * k + 7 * j + idx_c))
+        out[name] = own ^ d
+    return out
+
+
+def bitonic_sort(
+    cols: Dict[str, BShare],
+    key_col: str,
+    prf: PRFSetup,
+    descending: bool = False,
+) -> Dict[str, BShare]:
+    """Sort all columns by ``key_col`` (32-bit unsigned order). N must be a
+    power of two (the engine's bucketing guarantees this)."""
+    n = next(iter(cols.values())).shape[0]
+    if n & (n - 1):
+        raise ValueError(f"bitonic_sort requires power-of-two rows, got {n}")
+    m = int(math.log2(n))
+    led = active_ledger()
+    import contextlib
+
+    n_stages = m * (m + 1) // 2
+    scope = (
+        led.fused("bitonic_sort", rounds=7 * n_stages)
+        if led is not None
+        else contextlib.nullcontext()
+    )
+    with scope:
+        for k, j in bitonic_stages(n):
+            cols = _stage(cols, key_col, k, j, prf, descending)
+    return cols
+
+
+def sort_valid_first(
+    cols: Dict[str, BShare], valid_col: str, prf: PRFSetup
+) -> Dict[str, BShare]:
+    """Shrinkwrap's pre-cut sort: true tuples (valid=1) to the front.
+
+    Sorting descending on the single-bit valid column suffices; equal keys
+    keep arbitrary relative order (the network is not stable, which is fine —
+    and is why Shrinkwrap needs no tie-breaking either).
+    """
+    return bitonic_sort(cols, valid_col, prf, descending=True)

@@ -1,0 +1,141 @@
+"""Waksman permutation-network control-bit generation.
+
+MP-SPDZ implements its secure shuffle by evaluating a Waksman network [25]
+whose control bits encode the secret permutation. Our default shuffle is the
+3-hop permutation-composition protocol (fewer rounds — see core/shuffle.py),
+but we provide the Waksman routing for completeness / cross-checking against
+the MP-SPDZ cost model: a network on n = 2^m inputs has n·log2(n) - n + 1
+switches; evaluating it obliviously costs one select (1 AND-word) per switch.
+
+``route(perm)`` returns the layered switch settings; ``apply(bits, xs)``
+evaluates the network on plaintext (the oracle used in tests and cost
+calibration — the oblivious evaluation would replace each switch with the
+share-level ``select``).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+__all__ = ["route", "apply_network", "n_switches"]
+
+
+def n_switches(n: int) -> int:
+    if n <= 1:
+        return 0
+    if n == 2:
+        return 1
+    half = n // 2
+    return (n - 1) + 2 * n_switches(half)  # n/2-1 + n/2 outer + two subnets
+
+
+def route(perm: np.ndarray) -> List:
+    """Recursively compute switch settings for an AS-Waksman network.
+
+    Returns a nested structure: (in_bits, (sub_top, sub_bottom), out_bits)
+    for n > 2; a single bool for n == 2; None for n == 1.
+    perm maps output position -> input position (out[i] = in[perm[i]]).
+    """
+    perm = np.asarray(perm)
+    n = len(perm)
+    if n == 1:
+        return None
+    if n == 2:
+        return bool(perm[0] == 1)
+    half = n // 2
+    assert n % 2 == 0, "power-of-two sizes only (engine pads)"
+
+    in_bits = [False] * half  # input switch i handles inputs (2i, 2i+1)
+    out_bits = [False] * half  # output switch i handles outputs (2i, 2i+1)
+    top = [-1] * half  # sub-permutations being constructed
+    bot = [-1] * half
+    out_done = [False] * half
+
+    # Loop-based routing: alternate constraints between output and input
+    # switches. Convention: output switch i unset (bit False) sends top
+    # subnet -> output 2i; the LAST output switch is fixed straight (Waksman).
+    out_bits[half - 1] = False
+    inv = np.empty(n, dtype=int)
+    inv[perm] = np.arange(n)
+
+    def set_path_from_output(out_pos: int, use_top: bool):
+        """Fix the route of output ``out_pos`` through the given subnet and
+        propagate the implied constraints around the cycle."""
+        while True:
+            osw, olane = divmod(out_pos, 2)
+            sub = 0 if use_top == (not olane) else 0  # placeholder
+            # output switch bit: which subnet feeds lane ``olane``
+            # bit False: top->lane0, bottom->lane1; bit True: swapped
+            bit = (use_top and olane == 1) or (not use_top and olane == 0)
+            # i.e. top feeding lane1 or bottom feeding lane0 requires swap
+            out_bits[osw] = bool(bit)
+            out_done[osw] = True
+            subnet = top if use_top else bot
+            in_pos = perm[out_pos]
+            isw, ilane = divmod(in_pos, 2)
+            # input switch: route in_pos to this subnet
+            # bit False: lane0->top, lane1->bottom; True: swapped
+            ibit = (use_top and ilane == 1) or (not use_top and ilane == 0)
+            in_bits[isw] = bool(ibit)
+            subnet[osw] = isw
+            # the sibling input lane must go to the other subnet
+            sib_in = isw * 2 + (1 - ilane)
+            sib_out = inv[sib_in]
+            other = bot if use_top else top
+            ssw = sib_out // 2
+            other[ssw] = isw
+            s_bit = ((not use_top) and (sib_out % 2 == 1)) or (use_top and (sib_out % 2 == 0))
+            if out_done[ssw]:
+                break
+            out_bits[ssw] = bool(s_bit)
+            out_done[ssw] = True
+            # continue the cycle from the sibling output's partner lane
+            nxt_out = ssw * 2 + (1 - (sib_out % 2))
+            out_pos = nxt_out
+            # which subnet must feed nxt_out given out_bits[ssw]?
+            lane = nxt_out % 2
+            use_top = (lane == 0) == (not out_bits[ssw])
+            if out_done[nxt_out // 2] and top[nxt_out // 2] >= 0 and bot[nxt_out // 2] >= 0:
+                break
+
+    for start in range(half - 1, -1, -1):
+        if top[start] >= 0 and bot[start] >= 0:
+            continue
+        # route output 2*start through per current out_bits convention
+        lane0 = 2 * start
+        use_top = not out_bits[start]
+        set_path_from_output(lane0, use_top)
+        if bot[start] < 0 or top[start] < 0:
+            lane1 = 2 * start + 1
+            set_path_from_output(lane1, out_bits[start])
+
+    return (in_bits, (route(np.array(top)), route(np.array(bot))), out_bits)
+
+
+def apply_network(bits, xs: np.ndarray) -> np.ndarray:
+    """Plaintext evaluation (oracle): out = xs permuted per the routing."""
+    xs = np.asarray(xs)
+    n = len(xs)
+    if n == 1:
+        return xs.copy()
+    if n == 2:
+        return xs[::-1].copy() if bits else xs.copy()
+    in_bits, (sub_t, sub_b), out_bits = bits
+    half = n // 2
+    top_in = np.empty(half, dtype=xs.dtype)
+    bot_in = np.empty(half, dtype=xs.dtype)
+    for i in range(half):
+        a, b = xs[2 * i], xs[2 * i + 1]
+        if in_bits[i]:
+            a, b = b, a
+        top_in[i], bot_in[i] = a, b
+    top_out = apply_network(sub_t, top_in)
+    bot_out = apply_network(sub_b, bot_in)
+    out = np.empty(n, dtype=xs.dtype)
+    for i in range(half):
+        a, b = top_out[i], bot_out[i]
+        if out_bits[i]:
+            a, b = b, a
+        out[2 * i], out[2 * i + 1] = a, b
+    return out

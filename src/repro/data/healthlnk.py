@@ -1,0 +1,139 @@
+"""Synthetic HealthLnK-like clinical data (the paper's §5.3 workload tables).
+
+The real HealthLnK extract is not public; we generate schema-compatible
+synthetic relations with dictionary-encoded categorical columns (which is how
+strings enter MPC engines anyway) and tunable selectivities so the paper's
+queries produce non-trivial intermediate sizes.
+
+Tables (column -> meaning):
+  diagnoses     pid, icd9, major_icd9, diag, time
+  medications   pid, med, dosage, time
+  demographics  pid, zip
+
+Encodings used by the queries:
+  ICD9_CIRCULATORY (icd9 == 'circulatory disorder'), ICD9_HEART_414
+  MED_ASPIRIN, DOSAGE_325MG, DIAG_HEART_DISEASE
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import numpy as np
+
+from ..ops.table import SecretTable
+
+__all__ = ["generate_healthlnk", "plaintext_oracle"]
+
+ICD9_CIRCULATORY = 390
+ICD9_HEART_414 = 414
+MED_ASPIRIN = 1
+DOSAGE_325MG = 325
+DIAG_HEART_DISEASE = 7
+
+
+def generate_healthlnk(
+    n: int = 128,
+    key: jax.Array | None = None,
+    seed: int = 0,
+    n_patients: int | None = None,
+    aspirin_frac: float = 0.2,
+    icd_heart_frac: float = 0.15,
+) -> Tuple[Dict[str, SecretTable], Dict[str, Dict[str, np.ndarray]]]:
+    """Returns ({table -> SecretTable}, {table -> plaintext columns})."""
+    key = key if key is not None else jax.random.PRNGKey(11)
+    rng = np.random.default_rng(seed)
+    n_patients = n_patients or max(n // 4, 4)
+
+    diag = {
+        "pid": rng.integers(0, n_patients, n).astype(np.uint32),
+        "icd9": np.where(
+            rng.random(n) < icd_heart_frac,
+            ICD9_HEART_414,
+            rng.choice([ICD9_CIRCULATORY, 401, 250, 486], n),
+        ).astype(np.uint32),
+        "diag": np.where(
+            rng.random(n) < icd_heart_frac, DIAG_HEART_DISEASE, rng.integers(0, 6, n)
+        ).astype(np.uint32),
+        "time": rng.integers(0, 1000, n).astype(np.uint32),
+    }
+    diag["major_icd9"] = (diag["icd9"] // 100).astype(np.uint32)
+
+    meds = {
+        "pid": rng.integers(0, n_patients, n).astype(np.uint32),
+        "med": np.where(
+            rng.random(n) < aspirin_frac, MED_ASPIRIN, rng.integers(2, 12, n)
+        ).astype(np.uint32),
+        "dosage": rng.choice([81, 100, DOSAGE_325MG, 500], n).astype(np.uint32),
+        "time": rng.integers(0, 1000, n).astype(np.uint32),
+    }
+
+    demo = {
+        "pid": np.arange(n_patients, dtype=np.uint32),
+        "zip": rng.integers(10000, 99999, n_patients).astype(np.uint32),
+    }
+
+    plain = {"diagnoses": diag, "medications": meds, "demographics": demo}
+    keys = jax.random.split(key, 3)
+    shared = {
+        name: SecretTable.from_plaintext(cols, k)
+        for (name, cols), k in zip(plain.items(), keys)
+    }
+    return shared, plain
+
+
+# -----------------------------------------------------------------------------
+# Plaintext oracles for the four paper queries (Table 2)
+# -----------------------------------------------------------------------------
+
+def plaintext_oracle(query: str, plain: Dict[str, Dict[str, np.ndarray]]):
+    d, m, demo = plain["diagnoses"], plain["medications"], plain["demographics"]
+    if query == "comorbidity":
+        vals, counts = np.unique(d["major_icd9"], return_counts=True)
+        order = np.argsort(-counts, kind="stable")
+        top = sorted(
+            zip(counts.tolist(), vals.tolist()), key=lambda t: (-t[0], t[1])
+        )[:10]
+        return {int(v): int(c) for c, v in top}
+    if query == "dosage_study":
+        pids = set()
+        for i in range(len(d["pid"])):
+            if d["icd9"][i] != ICD9_CIRCULATORY:
+                continue
+            for j in range(len(m["pid"])):
+                if (
+                    m["pid"][j] == d["pid"][i]
+                    and m["med"][j] == MED_ASPIRIN
+                    and m["dosage"][j] == DOSAGE_325MG
+                ):
+                    pids.add(int(d["pid"][i]))
+        return sorted(pids)
+    if query == "aspirin_count":
+        pids = set()
+        for i in range(len(d["pid"])):
+            if d["icd9"][i] != ICD9_HEART_414:
+                continue
+            for j in range(len(m["pid"])):
+                if (
+                    m["pid"][j] == d["pid"][i]
+                    and m["med"][j] == MED_ASPIRIN
+                    and d["time"][i] <= m["time"][j]
+                ):
+                    pids.add(int(d["pid"][i]))
+        return len(pids)
+    if query == "three_join":
+        demo_pids = set(demo["pid"].tolist())
+        pids = set()
+        for i in range(len(d["pid"])):
+            if d["diag"][i] != DIAG_HEART_DISEASE:
+                continue
+            for j in range(len(m["pid"])):
+                if (
+                    m["pid"][j] == d["pid"][i]
+                    and m["med"][j] == MED_ASPIRIN
+                    and d["time"][i] <= m["time"][j]
+                    and int(d["pid"][i]) in demo_pids
+                ):
+                    pids.add(int(d["pid"][i]))
+        return len(pids)
+    raise ValueError(query)

@@ -1,0 +1,92 @@
+"""Hand-compiled plans for the four HealthLnK queries (paper Table 2).
+
+Filters are pushed below joins (as in the paper's Fig. 2/4 example plans);
+Resizer placement is applied separately via
+:func:`repro.plan.policies.insert_resizers` so every benchmark can compare
+fully-oblivious / sort&cut / Reflex / revealed executions of the *same*
+logical plan.
+"""
+from __future__ import annotations
+
+from ..ops.filter import Predicate
+from ..plan.nodes import (
+    CountDistinct,
+    Distinct,
+    Filter,
+    GroupByCount,
+    Join,
+    OrderBy,
+    PlanNode,
+    Scan,
+)
+from .healthlnk import (
+    DIAG_HEART_DISEASE,
+    DOSAGE_325MG,
+    ICD9_CIRCULATORY,
+    ICD9_HEART_414,
+    MED_ASPIRIN,
+)
+
+__all__ = [
+    "comorbidity_plan",
+    "dosage_study_plan",
+    "aspirin_count_plan",
+    "three_join_plan",
+    "all_query_plans",
+]
+
+
+def comorbidity_plan() -> PlanNode:
+    """SELECT major_icd9, COUNT(*) FROM diagnoses GROUP BY major_icd9
+    ORDER BY COUNT(*) DESC LIMIT 10 — no join: little ballooning (the paper's
+    explanation for its modest speedups)."""
+    return OrderBy(
+        GroupByCount(Scan("diagnoses"), "major_icd9"),
+        col="cnt",
+        descending=True,
+        limit=10,
+    )
+
+
+def dosage_study_plan() -> PlanNode:
+    """SELECT DISTINCT d.pid FROM diagnoses d, medications m WHERE
+    d.pid = m.pid AND med='aspirin' AND icd9='circulatory' AND dosage='325mg'."""
+    d = Filter(Scan("diagnoses"), [Predicate("icd9", "eq", ICD9_CIRCULATORY)])
+    m = Filter(
+        Scan("medications"),
+        [Predicate("med", "eq", MED_ASPIRIN), Predicate("dosage", "eq", DOSAGE_325MG)],
+    )
+    return Distinct(Join(d, m, ("pid", "pid")), "pid")
+
+
+def aspirin_count_plan() -> PlanNode:
+    """SELECT COUNT(DISTINCT d.pid) FROM diagnoses d JOIN medications m ON
+    d.pid = m.pid WHERE med='aspirin' AND icd9='414' AND d.time <= m.time."""
+    d = Filter(Scan("diagnoses"), [Predicate("icd9", "eq", ICD9_HEART_414)])
+    m = Filter(Scan("medications"), [Predicate("med", "eq", MED_ASPIRIN)])
+    return CountDistinct(
+        Join(d, m, ("pid", "pid"), theta=("time", "le", "time")), "pid"
+    )
+
+
+def three_join_plan() -> PlanNode:
+    """SELECT COUNT(DISTINCT pid) FROM diagnosis d JOIN medication m ON pid
+    JOIN demographics demo ON pid JOIN demographics demo2 ON pid WHERE
+    d.diag='heart disease' AND m.med='aspirin' AND d.time <= m.time."""
+    d = Filter(Scan("diagnoses"), [Predicate("diag", "eq", DIAG_HEART_DISEASE)])
+    m = Filter(Scan("medications"), [Predicate("med", "eq", MED_ASPIRIN)])
+    j1 = Join(d, m, ("pid", "pid"), theta=("time", "le", "time"))
+    demo = Scan("demographics")
+    j2 = Join(j1, demo, ("pid", "pid"))
+    demo2 = Scan("demographics")
+    j3 = Join(j2, demo2, ("pid", "pid"))
+    return CountDistinct(j3, "pid")
+
+
+def all_query_plans():
+    return {
+        "comorbidity": comorbidity_plan(),
+        "dosage_study": dosage_study_plan(),
+        "aspirin_count": aspirin_count_plan(),
+        "three_join": three_join_plan(),
+    }

@@ -1,0 +1,1 @@
+from .executor import Engine, ExecutionReport  # noqa: F401

@@ -1,0 +1,222 @@
+"""Query execution engine.
+
+Executes a plan tree bottom-up. Every operator protocol runs on static shapes;
+the *only* place a public size changes is a ``Resize`` node's reveal-and-trim
+(and a public LIMIT) — so dynamic re-dispatch on the revealed size is both
+legitimate (it is the disclosed value) and bounded by bucketing.
+
+The engine records a per-node execution report: wall seconds, the ledger's
+(rounds, bytes/party), and input/output oblivious sizes — this is what the
+benchmarks print and what reproduces the paper's Figures 6-9.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.ledger import CommLedger
+from ..core.prf import PRFSetup, setup_prf
+from ..core.resizer import Resizer
+from ..ops import (
+    SecretTable,
+    count_distinct,
+    count_valid,
+    oblivious_distinct,
+    oblivious_filter,
+    oblivious_groupby_count,
+    oblivious_join,
+    oblivious_orderby,
+)
+from ..plan.nodes import (
+    CountDistinct,
+    CountValid,
+    Distinct,
+    Filter,
+    GroupByCount,
+    Join,
+    OrderBy,
+    PlanNode,
+    Resize,
+    Scan,
+)
+
+__all__ = ["Engine", "ExecutionReport", "NodeStats"]
+
+
+@dataclasses.dataclass
+class NodeStats:
+    node: str
+    n_in: int
+    n_out: int
+    seconds: float
+    bytes_per_party: int
+    rounds: int
+    extra: Dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class ExecutionReport:
+    nodes: List[NodeStats] = dataclasses.field(default_factory=list)
+
+    @property
+    def total_seconds(self) -> float:
+        return sum(s.seconds for s in self.nodes)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(s.bytes_per_party for s in self.nodes)
+
+    @property
+    def total_rounds(self) -> int:
+        return sum(s.rounds for s in self.nodes)
+
+    def summary(self) -> str:
+        lines = [
+            f"{'node':<42}{'n_in':>9}{'n_out':>9}{'sec':>9}{'MiB/party':>11}{'rounds':>8}"
+        ]
+        for s in self.nodes:
+            lines.append(
+                f"{s.node:<42}{s.n_in:>9}{s.n_out:>9}{s.seconds:>9.3f}"
+                f"{s.bytes_per_party / 2**20:>11.3f}{s.rounds:>8}"
+            )
+        lines.append(
+            f"{'TOTAL':<42}{'':>9}{'':>9}{self.total_seconds:>9.3f}"
+            f"{self.total_bytes / 2**20:>11.3f}{self.total_rounds:>8}"
+        )
+        return "\n".join(lines)
+
+
+def _block(table: SecretTable) -> None:
+    jax.block_until_ready(table.valid.shares)
+
+
+class Engine:
+    """Executes plans over a set of secret-shared base tables."""
+
+    # process-wide jit cache: operator protocols are pure functions of
+    # (static node spec, table shapes) — reusing compiled executables across
+    # Engine instances removes both eager-dispatch overhead and recompiles
+    # (a beyond-paper optimization; see EXPERIMENTS.md §Perf)
+    _JIT_CACHE: Dict = {}
+
+    def __init__(
+        self,
+        tables: Dict[str, SecretTable],
+        key: jax.Array | None = None,
+        prf: PRFSetup | None = None,
+        bucket_fn: Optional[Callable[[int], int]] = None,
+        jit_ops: bool = False,  # per-op jit pays off for REPEATED same-shape
+        # queries (serving); one-shot plans are faster eager (XLA-CPU compile
+        # of a 4k-row sort network costs minutes) — see §Perf
+    ):
+        self.tables = tables
+        key = key if key is not None else jax.random.PRNGKey(0)
+        self.key = key
+        self.prf = prf if prf is not None else setup_prf(jax.random.fold_in(key, 7))
+        self.bucket_fn = bucket_fn
+        self.jit_ops = jit_ops
+        self._resize_ctr = 0
+
+    def execute(self, plan: PlanNode) -> tuple[SecretTable, ExecutionReport]:
+        report = ExecutionReport()
+        out = self._run(plan, report)
+        return out, report
+
+    # ------------------------------------------------------------------
+    def _run(self, node: PlanNode, report: ExecutionReport) -> SecretTable:
+        children = [self._run(c, report) for c in node.children()]
+        led = CommLedger()
+        t0 = time.perf_counter()
+        with led:
+            out = self._apply(node, children)
+        _block(out)
+        dt = time.perf_counter() - t0
+        tally = led.tally()
+        n_in = children[0].n if children else 0
+        extra = {}
+        if isinstance(node, Resize):
+            extra = getattr(self, "_last_resize_info", {})
+        report.nodes.append(
+            NodeStats(
+                node=node.describe(),
+                n_in=n_in,
+                n_out=out.n,
+                seconds=dt,
+                bytes_per_party=int(tally["bytes_per_party"]),
+                rounds=int(tally["rounds"]),
+                extra=extra,
+            )
+        )
+        return out
+
+    def _protocol_fn(self, node: PlanNode):
+        """Pure (prf, *tables) -> table function for the node (jit-able)."""
+        if isinstance(node, Filter):
+            return lambda prf, t: oblivious_filter(t, node.predicates, prf)
+        if isinstance(node, Join):
+            return lambda prf, l, r: oblivious_join(l, r, node.on, prf, theta=node.theta)
+        if isinstance(node, GroupByCount):
+            return lambda prf, t: oblivious_groupby_count(t, node.key, prf, node.count_name)
+        if isinstance(node, OrderBy):
+            return lambda prf, t: oblivious_orderby(
+                t, node.col, prf, descending=node.descending, limit=node.limit
+            )
+        if isinstance(node, Distinct):
+            return lambda prf, t: oblivious_distinct(t, node.col, prf)
+        if isinstance(node, CountValid):
+            return lambda prf, t: count_valid(t, prf)
+        if isinstance(node, CountDistinct):
+            return lambda prf, t: count_distinct(t, node.col, prf)
+        raise TypeError(f"unknown plan node {node}")
+
+    @staticmethod
+    def _cache_key(node: PlanNode, children: List[SecretTable]):
+        child_sig = tuple(
+            (t.n, tuple(sorted((k, type(v).__name__) for k, v in t.cols.items())))
+            for t in children
+        )
+        return (node.describe(), child_sig)
+
+    def _apply(self, node: PlanNode, children: List[SecretTable]) -> SecretTable:
+        prf = self.prf
+        if isinstance(node, Scan):
+            return self.tables[node.table]
+        if isinstance(node, Resize):
+            self._resize_ctr += 1
+            rkey = jax.random.fold_in(self.key, 1000 + self._resize_ctr)
+            out, info = Resizer(node.cfg)(
+                children[0], prf.fold(900 + self._resize_ctr), rkey,
+                bucket_fn=self.bucket_fn,
+            )
+            self._last_resize_info = info
+            return out
+        fn = self._protocol_fn(node)
+        if not self.jit_ops:
+            return fn(prf, *children)
+        key = self._cache_key(node, children)
+        jitted = Engine._JIT_CACHE.get(key)
+        if jitted is None:
+            # Capture the ledger profile once at trace time: jit re-executions
+            # skip the Python body, so replay the recorded cost on cache hits.
+            profile: Dict = {}
+
+            def traced(prf_arg, *tables, _fn=fn, _profile=profile):
+                with CommLedger() as led:
+                    out = _fn(prf_arg, *tables)
+                _profile.setdefault("tally", led.tally())
+                return out
+
+            jitted = (jax.jit(traced), profile)
+            Engine._JIT_CACHE[key] = jitted
+        jfn, profile = jitted
+        out = jfn(prf, *children)
+        if profile.get("tally"):
+            from ..core.ledger import log_comm
+
+            t = profile["tally"]
+            log_comm(node.label.lower(), int(t["rounds"]), int(t["bytes_per_party"]))
+        return out

@@ -1,0 +1,28 @@
+"""Pallas TPU kernels for the MPC engine's compute hot spots.
+
+Three kernels cover the protocol-local inner loops that dominate the engine's
+arithmetic (the *communication* between parties is JAX-level and cannot live
+inside a kernel — on a real 3-TPU deployment each kernel body runs per-party
+between round boundaries; in this simulation the 3-share axis is local, so the
+fused body is exactly the simulation hot loop):
+
+* ``rss_gate``      — cross-term + re-randomization of the 1-round AND / mul
+                      gate (every comparison circuit bottoms out here)
+* ``shuffle_gather``— permutation row-gather (the secure shuffle's data move)
+* ``bitonic_stage`` — fused conditional-swap of one sort stage across all
+                      payload columns
+
+Each kernel directory has ``<name>.py`` (pl.pallas_call + BlockSpec),
+``ops.py`` (jit'd wrapper with padding + interpret-mode switch), and
+``ref.py`` (pure-jnp oracle). CPU validation uses ``interpret=True``; the
+BlockSpecs are sized for TPU v5e VMEM (~16 MiB/core).
+"""
+from __future__ import annotations
+
+import os
+
+_USE_KERNELS = os.environ.get("REPRO_USE_PALLAS", "0") == "1"
+
+
+def kernels_enabled() -> bool:
+    return _USE_KERNELS

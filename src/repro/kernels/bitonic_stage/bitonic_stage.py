@@ -1,0 +1,60 @@
+"""Pallas kernel: fused conditional-swap for one bitonic compare-exchange
+stage, across all payload columns at once.
+
+After the (interactive) swap-decision bit is known in shared form, every
+column c of the table must be updated as
+
+    out_i = own_i ^ cross_terms(mask, own ^ other)_i ^ alpha_i
+
+(the local body of the oblivious select). Unfused, this is 4 elementwise ops x
+C columns x 3 shares of HBM traffic per stage — and a sort runs
+O(log^2 N) stages. The kernel fuses the whole per-stage update into one VMEM
+pass over a (3, C, BLOCK) tile.
+
+Partner values ("other") are pre-gathered by the caller (the partner index
+i ^ j is a static XOR shuffle that XLA folds into the surrounding program).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 1024
+
+
+def _swap_kernel(mask_ref, own_ref, other_ref, alpha_ref, o_ref):
+    mask = mask_ref[...]  # (3, 1, BLOCK) swap-decision full-width mask
+    own = own_ref[...]  # (3, C, BLOCK)
+    other = other_ref[...]
+    alpha = alpha_ref[...]
+    d = own ^ other
+    mn = jnp.roll(mask, -1, axis=0)
+    dn = jnp.roll(d, -1, axis=0)
+    z = (mask & d) ^ (mask & dn) ^ (mn & d) ^ alpha  # AND-gate cross terms
+    o_ref[...] = own ^ z
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block"))
+def bitonic_swap(
+    mask: jax.Array,  # (3, N)
+    own: jax.Array,  # (3, C, N)
+    other: jax.Array,  # (3, C, N)
+    alpha: jax.Array,  # (3, C, N)
+    interpret: bool = True,
+    block: int = BLOCK,
+) -> jax.Array:
+    _, c, n = own.shape
+    grid = (n // block,)
+    col_spec = pl.BlockSpec((3, c, block), lambda i: (0, 0, i))
+    mask_spec = pl.BlockSpec((3, 1, block), lambda i: (0, 0, i))
+    return pl.pallas_call(
+        _swap_kernel,
+        grid=grid,
+        in_specs=[mask_spec, col_spec, col_spec, col_spec],
+        out_specs=col_spec,
+        out_shape=jax.ShapeDtypeStruct(own.shape, own.dtype),
+        interpret=interpret,
+    )(mask[:, None, :], own, other, alpha)

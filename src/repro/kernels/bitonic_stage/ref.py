@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the fused bitonic conditional swap."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bitonic_swap_ref(mask, own, other, alpha):
+    m = mask[:, None, :]
+    d = own ^ other
+    mn = jnp.roll(m, -1, axis=0)
+    dn = jnp.roll(d, -1, axis=0)
+    z = (m & d) ^ (m & dn) ^ (mn & d) ^ alpha
+    return own ^ z

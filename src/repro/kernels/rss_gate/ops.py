@@ -1,0 +1,26 @@
+"""jit'd public wrapper for rss_gate: pads lanes to the block size, flattens
+arbitrary trailing shapes, and dispatches to the kernel (interpret=True on
+CPU) or the jnp reference."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .ref import rss_gate_ref
+from .rss_gate import BLOCK, rss_gate
+
+
+def gate(xs, ys, alpha, boolean: bool = True, use_kernel: bool = True, block: int = BLOCK):
+    if not use_kernel:
+        return rss_gate_ref(xs, ys, alpha, boolean)
+    shape = xs.shape
+    flat = lambda a: a.reshape(3, -1)
+    x, y, al = flat(xs), flat(ys), flat(alpha)
+    n = x.shape[1]
+    block = min(block, max(128, 1 << (n - 1).bit_length()))
+    pad = (-n) % block
+    if pad:
+        padf = lambda a: jnp.pad(a, ((0, 0), (0, pad)))
+        x, y, al = padf(x), padf(y), padf(al)
+    out = rss_gate(x, y, al, boolean=boolean, interpret=jax.default_backend() != "tpu", block=block)
+    return out[:, :n].reshape(shape)

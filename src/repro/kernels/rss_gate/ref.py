@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the rss_gate kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rss_gate_ref(xs, ys, alpha, boolean: bool = True):
+    xn = jnp.roll(xs, -1, axis=0)
+    yn = jnp.roll(ys, -1, axis=0)
+    if boolean:
+        return (xs & ys) ^ (xs & yn) ^ (xn & ys) ^ alpha
+    return xs * ys + xs * yn + xn * ys + alpha

@@ -1,0 +1,32 @@
+"""jit'd wrapper: pads rows to the block size (identity-mapping pad indices so
+padded rows gather from themselves), falls back to XLA gather for tables too
+large for a whole-table VMEM stage."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .ref import shuffle_gather_ref
+from .shuffle_gather import BLOCK_ROWS, shuffle_gather
+
+VMEM_LIMIT_BYTES = 8 * 2**20
+
+
+def gather_rows(table, perm, use_kernel: bool = True, block_rows: int = BLOCK_ROWS):
+    """table: (N, C); perm: (N,) int32. Returns table[perm]."""
+    n, c = table.shape
+    if not use_kernel or table.size * table.dtype.itemsize > VMEM_LIMIT_BYTES:
+        return shuffle_gather_ref(table, perm)
+    block_rows = min(block_rows, max(8, 1 << (n - 1).bit_length()))
+    pad = (-n) % block_rows
+    if pad:
+        table_p = jnp.pad(table, ((0, pad), (0, 0)))
+        perm_p = jnp.concatenate(
+            [perm.astype(jnp.int32), jnp.arange(n, n + pad, dtype=jnp.int32)]
+        )
+    else:
+        table_p, perm_p = table, perm.astype(jnp.int32)
+    out = shuffle_gather(
+        table_p, perm_p, interpret=jax.default_backend() != "tpu", block_rows=block_rows
+    )
+    return out[:n]

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for shuffle_gather."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def shuffle_gather_ref(table, perm):
+    return jnp.take(table, perm, axis=0)

@@ -1,0 +1,51 @@
+"""Pallas kernel: permutation row-gather (secure-shuffle apply).
+
+out[r, :] = table[perm[r], :] for a (N, C) share plane. Each secure-shuffle
+hop applies one permutation to every column of the table, three hops per
+shuffle — the Resizer's dominant data movement (Table 1: O(N*M) bytes).
+
+TPU adaptation (vs. the CPU pointer-chase in MP-SPDZ): the permutation vector
+rides in scalar-prefetch SMEM (``PrefetchScalarGridSpec``), output rows are
+blocked at ``BLOCK_ROWS``; the source table is staged whole into VMEM while it
+fits (N*C*4B <= ~8 MiB — always true for the Resizer's post-trim tables), so
+each block is a vectorized VMEM take rather than N scattered HBM touches.
+Larger tables fall back to the XLA gather path in ops.py (documented).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_ROWS = 256
+
+
+def _gather_kernel(perm_ref, x_ref, o_ref, *, block_rows: int):
+    i = pl.program_id(0)
+    idx = perm_ref[pl.dslice(i * block_rows, block_rows)]  # SMEM scalars
+    o_ref[...] = jnp.take(x_ref[...], idx, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))
+def shuffle_gather(
+    table: jax.Array,  # (N, C) one share plane
+    perm: jax.Array,  # (N,) int32
+    interpret: bool = True,
+    block_rows: int = BLOCK_ROWS,
+) -> jax.Array:
+    n, c = table.shape
+    grid = (n // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_gather_kernel, block_rows=block_rows),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[pl.BlockSpec((n, c), lambda i, *_: (0, 0))],  # whole table
+            out_specs=pl.BlockSpec((block_rows, c), lambda i, *_: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n, c), table.dtype),
+        interpret=interpret,
+    )(perm, table)

@@ -1,0 +1,30 @@
+"""Production meshes.
+
+Defined as a FUNCTION so importing this module never touches jax device
+state; only launch/dryrun.py (which sets XLA_FLAGS first) materializes the
+512-device placeholder topology.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["make_production_mesh", "mesh_chips"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices but only {len(devices)} present — "
+            "run under launch/dryrun.py (it forces 512 host devices)"
+        )
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def mesh_chips(mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in mesh.axis_names]))

@@ -1,0 +1,126 @@
+"""Renders the §Roofline table (and per-arch bottleneck sentences) from
+artifacts/dryrun.json into EXPERIMENTS.md (replacing the ROOFLINE_TABLE
+marker), and the §Perf log from artifacts/perf_*.json (PERF_SECTION marker).
+
+  PYTHONPATH=src python -m repro.launch.render_experiments
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ROOT = os.path.join(os.path.dirname(__file__), "..", "..", "..")
+ART = os.path.join(ROOT, "artifacts", "dryrun.json")
+EXP = os.path.join(ROOT, "EXPERIMENTS.md")
+
+MOVE_SENTENCES = {
+    "compute": "drop remat / raise per-chip batch to amortize — t_compute bound",
+    "memory": "fuse/steer XLA to cut HBM round-trips; bigger microbatch raises intensity",
+    "collective": "reshard (smaller TP extent / EP capacity trim) to cut moved bytes",
+}
+
+
+def fmt(x: float) -> str:
+    return f"{x:.2e}"
+
+
+def roofline_table(rows) -> str:
+    header = (
+        "| arch | shape | mesh | t_comp (s) | t_mem (s) | t_coll (s) | bound | "
+        "MODEL/HLO flops | roofline frac |\n|---|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | N/A | — | — |"
+            )
+            continue
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERROR | | | | | |"
+            )
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {fmt(r['t_compute_s'])} | "
+            f"{fmt(r['t_memory_s'])} | {fmt(r['t_collective_s'])} | {r['bottleneck']} | "
+            f"{r['useful_flops_ratio']:.2f} | {r['roofline_fraction']:.4f} |"
+        )
+    return header + "\n".join(lines)
+
+
+def per_arch_summary(rows) -> str:
+    """One sentence per (arch, single-pod train/decode): dominant term + what
+    would move it."""
+    out = ["\n**Per-cell bottleneck notes (single-pod):**\n"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != "16x16" or r["status"] != "ok":
+            continue
+        b = r["bottleneck"]
+        out.append(
+            f"- `{r['arch']}/{r['shape']}`: {b}-bound "
+            f"(tc={fmt(r['t_compute_s'])}, tm={fmt(r['t_memory_s'])}, "
+            f"tx={fmt(r['t_collective_s'])}); MODEL_FLOPS/HLO={r['useful_flops_ratio']:.2f} — "
+            f"{MOVE_SENTENCES[b]}."
+        )
+    return "\n".join(out)
+
+
+def perf_section() -> str:
+    files = sorted(glob.glob(os.path.join(ROOT, "artifacts", "perf_*.json")))
+    if not files:
+        return "_(hillclimb artifacts not yet generated)_"
+    parts = []
+    for f in files:
+        rows = json.load(open(f))
+        cell = os.path.basename(f)[len("perf_"):-len(".json")]
+        parts.append(f"\n### {cell}\n")
+        base = next((r for r in rows if r["variant"] == "baseline" and r["status"] == "ok"), None)
+        parts.append(
+            "| variant | hypothesis | t_comp | t_mem | t_coll | bound | frac | verdict |\n"
+            "|---|---|---|---|---|---|---|---|"
+        )
+        for r in rows:
+            if r["status"] != "ok":
+                parts.append(f"| {r['variant']} | {r.get('hypothesis','')[:60]} | ERROR | | | | | |")
+                continue
+            verdict = ""
+            if base and r is not base:
+                d = (r["roofline_fraction"] - base["roofline_fraction"]) / max(
+                    base["roofline_fraction"], 1e-12
+                )
+                verdict = f"{'+' if d >= 0 else ''}{d*100:.1f}% frac"
+            parts.append(
+                f"| {r['variant']} | {r.get('hypothesis','')[:60]} | "
+                f"{fmt(r['t_compute_s'])} | {fmt(r['t_memory_s'])} | "
+                f"{fmt(r['t_collective_s'])} | {r['bottleneck']} | "
+                f"{r['roofline_fraction']:.4f} | {verdict} |"
+            )
+    return "\n".join(parts)
+
+
+def main() -> None:
+    rows = json.load(open(ART))
+    table = roofline_table(rows) + "\n" + per_arch_summary(rows)
+    text = open(EXP).read()
+    if "<!-- ROOFLINE_TABLE -->" in text:
+        text = text.replace("<!-- ROOFLINE_TABLE -->", table, 1)
+    else:
+        import re
+
+        text = re.sub(
+            r"(## §Roofline.*?\n)(\|.*?\n\n|.*?)(## §Perf)",
+            lambda m: m.group(1) + table + "\n\n" + m.group(3),
+            text,
+            flags=re.S,
+        )
+    if "<!-- PERF_SECTION -->" in text:
+        text = text.replace("<!-- PERF_SECTION -->", perf_section(), 1)
+    open(EXP, "w").write(text)
+    print(f"rendered {sum(r['status']=='ok' for r in rows)} ok / "
+          f"{sum(r['status']=='skipped' for r in rows)} skipped cells into EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,250 @@
+"""Roofline analysis from the compiled dry-run artifact (no real hardware).
+
+Three terms per (arch x shape x mesh), TPU v5e constants:
+
+    t_compute    = HLO_FLOPs       / (chips * 197e12)      [bf16 peak]
+    t_memory     = HLO_bytes       / (chips * 819e9)       [HBM BW]
+    t_collective = collective_bytes / (chips * 50e9)       [per-link ICI]
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()``. collective_bytes is
+NOT in cost_analysis: we parse the optimized HLO text and sum the operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (async ``-start`` counted, ``-done`` skipped).
+
+MODEL_FLOPS (the "useful" compute) = 6*N*D for training (N = active params,
+D = tokens) and 2*N*B for one decode token; the ratio MODEL_FLOPS/HLO_FLOPs
+exposes remat recompute and dispatch/padding waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?([%\w.\-]+)\s*=\s*(.+)$")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Bytes of one HLO shape string (handles tuples by summing)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum operand bytes of every collective in the optimized module.
+
+    Works line-wise: build name->shape from definitions, then resolve each
+    collective's operand names.
+    """
+    shapes: Dict[str, str] = {}
+    lines = hlo_text.splitlines()
+    for ln in lines:
+        m = _INSTR_RE.match(ln)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        # rhs starts with the result shape
+        sp = rhs.find(" ")
+        shapes[name.lstrip("%")] = rhs[: sp if sp > 0 else len(rhs)]
+
+    bytes_by = {k: 0 for k in _COLLECTIVES}
+    count_by = {k: 0 for k in _COLLECTIVES}
+    op_re = re.compile(
+        r"\s(" + "|".join(_COLLECTIVES) + r")(-start)?\(([^)]*)\)"
+    )
+    for ln in lines:
+        if "-done(" in ln:
+            continue  # async completion: counted at -start
+        m = op_re.search(ln)
+        if not m:
+            continue
+        kind, _, operands = m.groups()
+        total = 0
+        for op in operands.split(","):
+            op = op.strip().lstrip("%")
+            # operands may carry inline annotations; keep the name token
+            op = op.split(" ")[0]
+            if op in shapes:
+                total += shape_bytes(shapes[op])
+        count_by[kind] += 1
+        bytes_by[kind] += total
+    return CollectiveStats(bytes_by, count_by)
+
+
+def cost_analysis_of(compiled) -> Dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}
+
+
+def memory_analysis_of(compiled) -> Optional[str]:
+    try:
+        ma = compiled.memory_analysis()
+        return str(ma)
+    except Exception:
+        return None
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    collectives: Dict[str, int]
+    collective_counts: Dict[str, int]
+    model_flops: float
+    bytes_per_device: Optional[float] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / (self.chips * ICI_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the dominant-term-bound step time that is useful
+        compute: (model_flops / (chips*peak)) / max(t_compute, t_mem, t_coll)."""
+        t_useful = self.model_flops / (self.chips * PEAK_FLOPS)
+        t_bound = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_useful / t_bound if t_bound > 0 else 0.0
+
+    def row(self) -> Dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes,
+            "collective_bytes": self.collective_bytes,
+            "collective_breakdown": self.collectives,
+            "collective_counts": self.collective_counts,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "bytes_per_device": self.bytes_per_device,
+        }
+
+
+def analytic_bytes_for(cfg, shape_name: str) -> float:
+    """First-principles HBM-traffic lower-bound model (sanity column next to
+    cost_analysis's 'bytes accessed', which on the CPU backend over-counts
+    unfused temporaries):
+
+    train:   params fwd+bwd reads (2x2B) + grad write/read (2x4B) +
+             AdamW moments read+write (4x4B) + param write (2B)
+             + activations ~ 2 passes x ~12 intermediate tensors x B*S*d x 2B
+    prefill: params read (2B) + activations 1 pass
+    decode:  params read (2B) + full KV/state cache read (2B)
+    """
+    from ..configs.shapes import SHAPE_DEFS
+
+    n = cfg.param_count()
+    d = SHAPE_DEFS[shape_name]
+    if d["step"] == "train":
+        tok = d["seq"] * d["batch"]
+        act = 2 * 12 * tok * cfg.d_model * 2.0 * cfg.n_layers
+        return n * (2 * 2 + 2 * 4 + 4 * 4 + 2) + act
+    if d["step"] == "prefill":
+        tok = d["seq"] * d["batch"]
+        return n * 2 + 12 * tok * cfg.d_model * 2.0 * cfg.n_layers
+    # decode: weights + cache traffic dominate
+    import jax
+
+    from ..models import init_caches
+
+    caches = jax.eval_shape(lambda: init_caches(cfg, d["batch"], d["seq"]))
+    cache_bytes = sum(
+        int(np_prod(l.shape)) * l.dtype.itemsize for l in jax.tree.leaves(caches)
+    )
+    n_active = cfg.active_param_count()
+    return n_active * 2 + cache_bytes
+
+
+def np_prod(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+def model_flops_for(cfg, shape_name: str) -> float:
+    """6*N_active*D (train) / 2*N_active*D (prefill) / 2*N_active*B (decode)."""
+    from ..configs.shapes import SHAPE_DEFS
+
+    n_active = cfg.active_param_count()
+    d = SHAPE_DEFS[shape_name]
+    if d["step"] == "train":
+        return 6.0 * n_active * d["seq"] * d["batch"]
+    if d["step"] == "prefill":
+        return 2.0 * n_active * d["seq"] * d["batch"]
+    return 2.0 * n_active * d["batch"]  # one decode token

@@ -1,0 +1,9 @@
+from .config import ArchConfig  # noqa: F401
+from .lm import (  # noqa: F401
+    abstract_params,
+    decode_step,
+    forward,
+    init_caches,
+    init_params,
+    loss_fn,
+)

@@ -1,0 +1,386 @@
+"""Attention variants: GQA full / sliding-window / local / MLA (+ KV caches).
+
+All variants share one masked-softmax core; masks are built per mode:
+
+* ``full``   — causal
+* ``swa``    — causal within a sliding window (mixtral)
+* ``local``  — causal within a local window (recurrentgemma's attn layers)
+* ``prefix`` — bidirectional over the first n_prefix positions (paligemma)
+* ``mla``    — multi-head latent attention (minicpm3): KV compressed to a
+               latent of rank kv_lora_rank + a shared RoPE key; the decode
+               cache stores only the latent (the long-context win).
+
+Decode caches are fixed-capacity rings for swa/local and flat buffers for
+full/mla; ``decode`` performs one-token attention against the cache.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import dense_init, rope
+
+__all__ = ["attn_init", "attn_apply", "attn_init_cache", "attn_decode"]
+
+NEG = -1e9
+
+
+# -----------------------------------------------------------------------------
+# init
+# -----------------------------------------------------------------------------
+
+def attn_init(key, cfg) -> Dict:
+    d = cfg.d_model
+    dh = cfg.resolved_head_dim
+    h, hkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 8)
+    if cfg.attention_type == "mla":
+        rq, rkv = cfg.q_lora_rank, cfg.kv_lora_rank
+        dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+        return {
+            "w_dq": dense_init(ks[0], (d, rq)),
+            "w_uq": dense_init(ks[1], (rq, h, dn + dr)),
+            "w_dkv": dense_init(ks[2], (d, rkv)),
+            "w_kr": dense_init(ks[3], (d, dr)),  # shared rope key
+            "w_uk": dense_init(ks[4], (rkv, h, dn)),
+            "w_uv": dense_init(ks[5], (rkv, h, dv)),
+            "w_o": dense_init(ks[6], (h, dv, d)),
+        }
+    return {
+        "w_q": dense_init(ks[0], (d, h, dh)),
+        "w_k": dense_init(ks[1], (d, hkv, dh)),
+        "w_v": dense_init(ks[2], (d, hkv, dh)),
+        "w_o": dense_init(ks[3], (h, dh, d)),
+    }
+
+
+# -----------------------------------------------------------------------------
+# masks
+# -----------------------------------------------------------------------------
+
+def _mask(cfg, s_q: int, s_k: int, q_offset: int = 0) -> jax.Array:
+    qpos = jnp.arange(s_q)[:, None] + q_offset
+    kpos = jnp.arange(s_k)[None, :]
+    m = kpos <= qpos  # causal
+    if cfg.attention_type in ("swa", "local") and cfg.window:
+        m &= kpos > qpos - cfg.window
+    if cfg.prefix_lm and cfg.n_prefix:
+        both_prefix = (qpos < cfg.n_prefix) & (kpos < cfg.n_prefix)
+        m |= both_prefix  # bidirectional over the image prefix
+    return m
+
+
+def _sdpa(q, k, v, mask) -> jax.Array:
+    """q: (B,S,H,Dh), k/v: (B,T,Hkv,Dh[v]) with H % Hkv == 0."""
+    b, s, h, dh = q.shape
+    hkv = k.shape[2]
+    rep = h // hkv
+    qg = q.reshape(b, s, hkv, rep, dh)
+    scores = jnp.einsum("bshrd,bthd->bhrst", qg, k).astype(jnp.float32)
+    scores = scores / np.sqrt(dh)
+    scores = jnp.where(mask[None, None, None], scores, NEG)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhrst,bthd->bshrd", p, v)
+    return out.reshape(b, s, h, v.shape[-1])
+
+
+def _mask_chunk(cfg, s_q: int, t0: int, c: int) -> jax.Array:
+    """(s_q, c) mask for key columns [t0, t0+c) — never materializes SxT."""
+    qpos = jnp.arange(s_q)[:, None]
+    kpos = t0 + jnp.arange(c)[None, :]
+    m = kpos <= qpos
+    if cfg.attention_type in ("swa", "local") and cfg.window:
+        m &= kpos > qpos - cfg.window
+    if cfg.prefix_lm and cfg.n_prefix:
+        m |= (qpos < cfg.n_prefix) & (kpos < cfg.n_prefix)
+    return m
+
+
+def _sdpa_chunked(cfg, q, k_fn, v_shape_t, n_t: int) -> jax.Array:
+    """Flash-style online-softmax attention: iterates KV chunks, keeping only
+    (B,S,chunk) score tiles live — the fix for dense S x T temp blow-up at
+    32k+ prefill (§Perf: temp_size 699 GB/device -> fits). The loop is a
+    *python* (unrolled) loop so per-chunk costs stay visible to
+    cost_analysis (a lax.scan body would be counted once — see dryrun.py).
+
+    ``k_fn(t0, c) -> (k_chunk, v_chunk)`` lets MLA build per-head K/V from the
+    latent chunk on the fly (never materializing the full per-head K).
+    """
+    b, s, h, dh = q.shape
+    chunk = min(cfg.attn_chunk, n_t)
+    n_chunks = (n_t + chunk - 1) // chunk
+    qf = q
+    m = jnp.full((b, h, s), -jnp.inf, jnp.float32)
+    l = jnp.zeros((b, h, s), jnp.float32)
+    acc = None
+    for ci in range(n_chunks):
+        t0 = ci * chunk
+        c = min(chunk, n_t - t0)
+        k_c, v_c = k_fn(t0, c)  # (B,c,Hkv,dh), (B,c,Hkv,dv)
+        hkv = k_c.shape[2]
+        rep = h // hkv
+        qg = qf.reshape(b, s, hkv, rep, dh)
+        sc = jnp.einsum("bshrd,bthd->bhrst", qg, k_c).astype(jnp.float32)
+        sc = sc.reshape(b, h, s, c) / np.sqrt(dh)
+        msk = _mask_chunk(cfg, s, t0, c)
+        sc = jnp.where(msk[None, None], sc, -jnp.inf)
+        m_new = jnp.maximum(m, sc.max(axis=-1))
+        # fully-masked-so-far rows (e.g. SWA rows before their window) keep
+        # m = -inf; shift against a safe max so exp never sees inf - inf
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        alpha = jnp.exp(m - m_safe)
+        p = jnp.exp(sc - m_safe[..., None])
+        l = l * alpha + p.sum(axis=-1)
+        pv = jnp.einsum(
+            "bhrst,bthd->bshrd",
+            p.reshape(b, hkv, rep, s, c).astype(q.dtype),
+            v_c,
+        ).reshape(b, s, h, v_c.shape[-1])
+        if acc is None:
+            acc = pv * 0.0
+        acc = acc * jnp.transpose(alpha, (0, 2, 1))[..., None].astype(q.dtype) + pv
+        m = m_new
+    den = jnp.transpose(l, (0, 2, 1))[..., None]  # (B,S,H,1)
+    return (acc / jnp.maximum(den, 1e-20).astype(acc.dtype)).astype(q.dtype)
+
+
+# -----------------------------------------------------------------------------
+# forward (train / prefill)
+# -----------------------------------------------------------------------------
+
+def _sp_constrain(cfg, q: jax.Array) -> jax.Array:
+    """Sequence-parallel attention: shard query rows over "model". Rescues
+    archs whose head count doesn't divide the model axis (phi3 40H,
+    minicpm3 40H, musicgen 24H on a 16-way axis), where SPMD otherwise
+    replicates the (B,H,S,S) score temporaries on every device (§Perf)."""
+    if not cfg.attn_sp:
+        return q
+    try:
+        from jax.sharding import PartitionSpec as P
+
+        axes = jax.sharding.get_abstract_mesh().axis_names
+        dp = tuple(a for a in axes if a in ("pod", "data"))
+        return jax.lax.with_sharding_constraint(q, P(dp, "model", None, None))
+    except Exception:
+        return q
+
+
+def attn_apply(
+    params: Dict,
+    cfg,
+    x: jax.Array,  # (B, S, D)
+    positions: jax.Array,  # (B, S)
+    return_cache: bool = False,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    dt = x.dtype
+    b, s, d = x.shape
+    if cfg.attention_type == "mla":
+        return _mla_apply(params, cfg, x, positions, return_cache)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["w_q"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["w_k"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["w_v"].astype(dt))
+    q = rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+    k = rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    q = _sp_constrain(cfg, q)
+    if cfg.attn_impl == "chunked":
+        out = _sdpa_chunked(
+            cfg, q, lambda t0, c: (k[:, t0 : t0 + c], v[:, t0 : t0 + c]), None, s
+        )
+    else:
+        mask = _mask(cfg, s, s)
+        out = _sdpa(q, k, v, mask)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["w_o"].astype(dt))
+    cache = None
+    if return_cache:
+        cache = _cache_from_prefill(cfg, k, v, s)
+    return y, cache
+
+
+def _mla_apply(params, cfg, x, positions, return_cache):
+    dt = x.dtype
+    b, s, d = x.shape
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    h = cfg.n_heads
+    cq = x @ params["w_dq"].astype(dt)  # (B,S,rq)
+    q = jnp.einsum("bsr,rhk->bshk", cq, params["w_uq"].astype(dt))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    ckv = x @ params["w_dkv"].astype(dt)  # (B,S,rkv) — the latent
+    kr = (x @ params["w_kr"].astype(dt))[:, :, None, :]  # (B,S,1,dr) shared key
+    kr = rope(kr, positions, cfg.rope_theta)
+    qc = _sp_constrain(cfg, jnp.concatenate([q_nope, q_rope], axis=-1))
+    if cfg.attn_impl == "chunked":
+        # build per-head K/V from the latent chunk on the fly: the full
+        # (B,S,H,dn+dr) K is never materialized (§Perf memory fix)
+        def kv_chunk(t0, c):
+            ckv_c = ckv[:, t0 : t0 + c]
+            k_nope_c = jnp.einsum("bsr,rhk->bshk", ckv_c, params["w_uk"].astype(dt))
+            v_c = jnp.einsum("bsr,rhk->bshk", ckv_c, params["w_uv"].astype(dt))
+            kr_c = jnp.broadcast_to(kr[:, t0 : t0 + c], (b, c, h, dr))
+            return jnp.concatenate([k_nope_c, kr_c], axis=-1), v_c
+
+        out = _sdpa_chunked(cfg, qc, kv_chunk, None, s)
+    else:
+        k_nope = jnp.einsum("bsr,rhk->bshk", ckv, params["w_uk"].astype(dt))
+        v = jnp.einsum("bsr,rhk->bshk", ckv, params["w_uv"].astype(dt))
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(kr, (b, s, h, dr))], axis=-1)
+        mask = _mask(cfg, s, s)
+        out = _sdpa(qc, k, v, mask)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["w_o"].astype(dt))
+    cache = None
+    if return_cache:
+        cache = {"ckv": ckv, "kr": kr[:, :, 0, :], "idx": jnp.asarray(s, jnp.int32)}
+    return y, cache
+
+
+# -----------------------------------------------------------------------------
+# decode caches
+# -----------------------------------------------------------------------------
+
+def attn_init_cache(cfg, batch: int, max_len: int, dtype) -> Dict:
+    """Abstract-init-friendly cache allocation (zeros)."""
+    dh = cfg.resolved_head_dim
+    if cfg.attention_type == "mla":
+        return {
+            "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+            "kr": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+            "idx": jnp.zeros((), jnp.int32),
+        }
+    cap = min(max_len, cfg.window) if cfg.attention_type in ("swa", "local") and cfg.window else max_len
+    if cfg.kv_quant:
+        # int8 symmetric quantization, one scale per (batch, pos, kv-head):
+        # halves decode's dominant HBM traffic (§Perf)
+        return {
+            "k": jnp.zeros((batch, cap, cfg.n_kv_heads, dh), jnp.int8),
+            "v": jnp.zeros((batch, cap, cfg.n_kv_heads, dh), jnp.int8),
+            "k_scale": jnp.zeros((batch, cap, cfg.n_kv_heads), jnp.bfloat16),
+            "v_scale": jnp.zeros((batch, cap, cfg.n_kv_heads), jnp.bfloat16),
+            "idx": jnp.zeros((), jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((batch, cap, cfg.n_kv_heads, dh), dtype),
+        "v": jnp.zeros((batch, cap, cfg.n_kv_heads, dh), dtype),
+        "idx": jnp.zeros((), jnp.int32),
+    }
+
+
+def _quantize_kv(x):
+    """x: (B,1,H,dh) -> int8 values + bf16 scale per (B,1,H)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(
+        jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127
+    ).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def _cache_from_prefill(cfg, k, v, s):
+    if cfg.attention_type in ("swa", "local") and cfg.window and s > cfg.window:
+        k, v = k[:, -cfg.window :], v[:, -cfg.window :]
+    return {"k": k, "v": v, "idx": jnp.asarray(s, jnp.int32)}
+
+
+def attn_decode(
+    params: Dict, cfg, x: jax.Array, cache: Dict
+) -> Tuple[jax.Array, Dict]:
+    """One-token decode: x (B, 1, D) against the cache."""
+    dt = x.dtype
+    b = x.shape[0]
+    idx = cache["idx"]
+    pos = jnp.full((b, 1), idx, jnp.int32)
+    if cfg.attention_type == "mla":
+        return _mla_decode(params, cfg, x, cache, pos)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["w_q"].astype(dt))
+    k_new = jnp.einsum("bsd,dhk->bshk", x, params["w_k"].astype(dt))
+    v_new = jnp.einsum("bsd,dhk->bshk", x, params["w_v"].astype(dt))
+    q = rope(q, pos, cfg.rope_theta, cfg.rope_fraction)
+    k_new = rope(k_new, pos, cfg.rope_theta, cfg.rope_fraction)
+
+    cap = cache["k"].shape[1]
+    slot = jnp.mod(idx, cap)  # ring for swa/local; flat when cap == max_len
+    if cfg.kv_quant:
+        kq, ks = _quantize_kv(k_new)
+        vq, vs = _quantize_kv(v_new)
+        kc = jax.lax.dynamic_update_slice(cache["k"], kq, (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache["v"], vq, (0, slot, 0, 0))
+        ksc = jax.lax.dynamic_update_slice(cache["k_scale"], ks, (0, slot, 0))
+        vsc = jax.lax.dynamic_update_slice(cache["v_scale"], vs, (0, slot, 0))
+        k = (kc.astype(dt)) * ksc[..., None].astype(dt)
+        v = (vc.astype(dt)) * vsc[..., None].astype(dt)
+        new_cache = {"k": kc, "v": vc, "k_scale": ksc, "v_scale": vsc, "idx": idx + 1}
+    else:
+        k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, slot, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
+        new_cache = None  # built below (k, v reused)
+
+    kpos_abs = jnp.arange(cap)
+    n_seen = idx + 1
+    if cfg.attention_type in ("swa", "local") and cfg.window and cap == cfg.window:
+        valid = kpos_abs < jnp.minimum(n_seen, cap)  # whole ring once warm
+    else:
+        valid = kpos_abs < n_seen
+    mask = valid[None, :]  # (1, cap) -> broadcast (s_q=1)
+
+    if cfg.decode_score_dtype == "bf16":
+        # §Perf lever: keep the (B,H,cap) score tensor in bf16 with an
+        # additive mask — halves the dominant decode HBM traffic; the softmax
+        # reduction still accumulates in f32
+        out = _sdpa_decode_bf16(q, k, v, mask)
+    else:
+        out = _sdpa(q, k, v, mask)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["w_o"].astype(dt))
+    if new_cache is None:
+        new_cache = {"k": k, "v": v, "idx": idx + 1}
+    return y, new_cache
+
+
+def _sdpa_decode_bf16(q, k, v, mask):
+    b, s, h, dh = q.shape
+    hkv = k.shape[2]
+    rep = h // hkv
+    qg = q.reshape(b, s, hkv, rep, dh)
+    scores = jnp.einsum("bshrd,bthd->bhrst", qg, k) / np.sqrt(dh)  # bf16
+    addmask = jnp.where(mask[None, None, None], 0.0, NEG).astype(scores.dtype)
+    scores = scores + addmask
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    ex = jnp.exp((scores - m).astype(jnp.float32)).astype(scores.dtype)
+    den = jnp.sum(ex.astype(jnp.float32), axis=-1, keepdims=True)
+    p = (ex / den.astype(ex.dtype)).astype(q.dtype)
+    out = jnp.einsum("bhrst,bthd->bshrd", p, v)
+    return out.reshape(b, s, h, v.shape[-1])
+
+
+def _mla_decode(params, cfg, x, cache, pos):
+    dt = x.dtype
+    b = x.shape[0]
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    h = cfg.n_heads
+    idx = cache["idx"]
+    cq = x @ params["w_dq"].astype(dt)
+    q = jnp.einsum("bsr,rhk->bshk", cq, params["w_uq"].astype(dt))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, pos, cfg.rope_theta)
+
+    ckv_new = x @ params["w_dkv"].astype(dt)  # (B,1,rkv)
+    kr_new = rope((x @ params["w_kr"].astype(dt))[:, :, None, :], pos, cfg.rope_theta)[
+        :, :, 0, :
+    ]
+    ckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv_new, (0, idx, 0))
+    kr = jax.lax.dynamic_update_slice(cache["kr"], kr_new, (0, idx, 0))
+
+    # absorb the up-projections into the query side (the MLA decode trick):
+    # score = q_nope . (ckv W_uk) + q_rope . kr  ==  (q_nope W_uk^T) . ckv + ...
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, params["w_uk"].astype(dt))
+    s_lat = jnp.einsum("bshr,btr->bhst", q_lat, ckv)
+    s_rope = jnp.einsum("bshk,btk->bhst", q_rope, kr)
+    scores = (s_lat + s_rope).astype(jnp.float32) / np.sqrt(dn + dr)
+    valid = jnp.arange(ckv.shape[1]) < (idx + 1)
+    scores = jnp.where(valid[None, None, None, :], scores, NEG)
+    p = jax.nn.softmax(scores, axis=-1).astype(dt)
+    ctx = jnp.einsum("bhst,btr->bshr", p, ckv)  # context in latent space
+    out = jnp.einsum("bshr,rhk->bshk", ctx, params["w_uv"].astype(dt))
+    y = jnp.einsum("bshk,hkd->bsd", out, params["w_o"].astype(dt))
+    return y, {"ckv": ckv, "kr": kr, "idx": idx + 1}

@@ -1,0 +1,93 @@
+"""Shared layers: norms, RoPE, dense FFNs, embeddings, initializers.
+
+Parameters are plain nested dicts (pytrees); every initializer returns
+(params, apply) pairs closed over the config so `jax.eval_shape` can derive
+abstract parameter trees for the dry-run without allocating.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "dense_init",
+    "norm_init",
+    "apply_norm",
+    "rope",
+    "mlp_init",
+    "apply_mlp",
+]
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def dense_init(key, shape, scale: float | None = None, dtype=jnp.float32):
+    """Truncated-normal fan-in init (params kept f32; compute casts)."""
+    fan_in = shape[0] if len(shape) >= 1 else 1
+    scale = scale if scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * scale).astype(dtype)
+
+
+def norm_init(d: int) -> Dict:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def apply_norm(params: Dict, x: jax.Array, kind: str = "rmsnorm") -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + 1e-6)
+    else:  # layernorm (bias-free)
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-6)
+    return (y * params["scale"]).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float, fraction: float = 1.0):
+    """Rotary embedding on the leading ``fraction`` of head dims.
+
+    x: (..., S, H, Dh); positions: broadcastable to (..., S).
+    """
+    dh = x.shape[-1]
+    rot = int(dh * fraction) // 2 * 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None, None].astype(jnp.float32) * freqs  # (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = xr[..., :half], xr[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+def mlp_init(key, d_model: int, d_ff: int, kind: str) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {
+            "w_gate": dense_init(k1, (d_model, d_ff)),
+            "w_up": dense_init(k2, (d_model, d_ff)),
+            "w_down": dense_init(k3, (d_ff, d_model)),
+        }
+    return {  # gelu
+        "w_up": dense_init(k1, (d_model, d_ff)),
+        "w_down": dense_init(k2, (d_ff, d_model)),
+    }
+
+
+def apply_mlp(params: Dict, x: jax.Array, kind: str) -> jax.Array:
+    dt = x.dtype
+    if kind == "swiglu":
+        g = x @ params["w_gate"].astype(dt)
+        u = x @ params["w_up"].astype(dt)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(dt) * u
+        return h @ params["w_down"].astype(dt)
+    h = jax.nn.gelu((x @ params["w_up"].astype(dt)).astype(jnp.float32)).astype(dt)
+    return h @ params["w_down"].astype(dt)

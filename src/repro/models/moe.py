@@ -1,0 +1,162 @@
+"""Top-k Mixture-of-Experts with a Reflex-style capacity resizer.
+
+Dispatch follows the capacity-factor formulation (einsum dispatch/combine
+tensors — robust under pjit, shards cleanly for both EP and TP layouts):
+
+    capacity C = ceil(tokens * top_k / n_experts * cf)
+
+The **CapacityResizer** is the paper's mechanism transplanted (DESIGN.md §5):
+the fully-"oblivious" buffer is C_full = tokens (cf = E/top_k — no token ever
+dropped regardless of routing skew, shape-independent of the data); Reflex
+trims it to C = T_est + eta where T_est = tokens*top_k/E is the balanced load
+and eta is slack from a pluggable policy (const ≙ ConstantNoise,
+reflex_tlap/reflex_beta reuse core.noise distributions at planning time).
+Smaller C shrinks the EP all-to-all / all-gather volume linearly — the §Perf
+hillclimb lever for the MoE cells. No privacy claim is attached (plaintext
+training); what transfers is controlled intermediate-buffer trimming.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+__all__ = ["moe_init", "moe_apply", "resolve_capacity"]
+
+
+def resolve_capacity(cfg, n_tokens: int) -> int:
+    """Reflex-style capacity policy (static: planning-time decision)."""
+    e, k = cfg.n_experts, cfg.top_k
+    t_est = n_tokens * k / e  # balanced true load per expert
+    if cfg.capacity_policy == "full":  # fully oblivious: no drops possible
+        cap = float(n_tokens)
+    elif cfg.capacity_policy == "const":
+        cap = t_est * cfg.capacity_factor
+    elif cfg.capacity_policy == "reflex_tlap":
+        from ..core.noise import TruncatedLaplace
+
+        noise = TruncatedLaplace(eps=0.5, delta=5e-5, sensitivity=max(t_est / 64, 1))
+        cap = t_est + noise.mean(n_tokens, int(t_est))
+    elif cfg.capacity_policy == "reflex_beta":
+        from ..core.noise import BetaNoise
+
+        noise = BetaNoise(2, 6)
+        cap = t_est + noise.mean(int(n_tokens * k / e * 2), int(t_est))
+    else:
+        raise ValueError(cfg.capacity_policy)
+    cap = int(min(max(math.ceil(cap), 8), n_tokens))
+    return ((cap + 7) // 8) * 8  # pad to a lane-friendly multiple
+
+
+def moe_init(key, cfg) -> Dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, e)),
+        "w_gate": dense_init(ks[1], (e, d, f)),
+        "w_up": dense_init(ks[2], (e, d, f)),
+        "w_down": dense_init(ks[3], (e, f, d)),
+    }
+    if cfg.moe_dense_residual:
+        from .layers import mlp_init
+
+        p["dense_residual"] = mlp_init(ks[4], d, cfg.d_ff, "swiglu")
+    return p
+
+
+def _route(params, cfg, xt):
+    """Router: top-k gates + per-assignment (expert, position) slots."""
+    dt = xt.dtype
+    n_tok = xt.shape[0]
+    e, k = cfg.n_experts, cfg.top_k
+    cap = resolve_capacity(cfg, n_tok)
+    logits = (xt @ params["router"].astype(dt)).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # (T, k)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+    # load-balancing auxiliary loss (Switch/Mixtral style)
+    me = probs.mean(axis=0)
+    ce = jax.nn.one_hot(gate_idx[:, 0], e).mean(axis=0)
+    aux = e * jnp.sum(me * ce)
+    # position-in-expert per assignment (integer prefix counts; k waves)
+    fill = jnp.zeros((e,), jnp.int32)
+    pos_list = []
+    for rank in range(k):
+        onehot = jax.nn.one_hot(gate_idx[:, rank], e, dtype=jnp.int32)  # (T,E)
+        pos_in_wave = jnp.cumsum(onehot, axis=0) - onehot
+        pos = jnp.take_along_axis(pos_in_wave + fill[None, :], gate_idx[:, rank : rank + 1], axis=1)[:, 0]
+        fill = fill + onehot.sum(axis=0)
+        pos_list.append(pos)
+    pos_tk = jnp.stack(pos_list, axis=1)  # (T, k)
+    return gate_vals, gate_idx, pos_tk, cap, aux
+
+
+def _expert_ffn(params, cfg, ein):
+    dt = ein.dtype
+    g = jnp.einsum("ecd,edf->ecf", ein, params["w_gate"].astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", ein, params["w_up"].astype(dt))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(dt) * u
+    return jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(dt))
+
+
+def moe_apply(params: Dict, cfg, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (y, aux_loss). Two dispatch implementations:
+
+    * ``einsum`` — one-hot dispatch/combine matmuls (Mesh-TF style). Robust,
+      but the dispatch matmul costs 2*T*E*C*D FLOPs — at mixtral train_4k
+      scale that DWARFS the expert FFNs (the §Perf baseline pathology).
+    * ``gather`` (default) — slot bookkeeping with integer prefix sums, then
+      pure gather/scatter data movement: expert-FFN FLOPs only. This is the
+      beyond-paper optimization validated in §Perf.
+    """
+    dt = x.dtype
+    b, s, d = x.shape
+    n_tok = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    xt = x.reshape(n_tok, d)
+    gate_vals, gate_idx, pos_tk, cap, aux = _route(params, cfg, xt)
+
+    if cfg.moe_impl == "einsum":
+        dispatch = jnp.zeros((n_tok, e, cap), dtype=dt)
+        combine = jnp.zeros((n_tok, e, cap), dtype=jnp.float32)
+        for rank in range(k):
+            keep = pos_tk[:, rank] < cap
+            oh_e = jax.nn.one_hot(gate_idx[:, rank], e, dtype=dt)
+            oh_c = jax.nn.one_hot(
+                jnp.where(keep, pos_tk[:, rank], cap), cap + 1, dtype=dt
+            )[:, :cap]
+            d_r = oh_e[:, :, None] * oh_c[:, None, :]
+            dispatch = dispatch + d_r
+            combine = combine + d_r.astype(jnp.float32) * gate_vals[:, rank][:, None, None]
+        ein = jnp.einsum("tec,td->ecd", dispatch, xt)
+        eo = _expert_ffn(params, cfg, ein)
+        y = jnp.einsum("ecd,tec->td", eo, combine.astype(dt)).reshape(b, s, d)
+    else:  # gather
+        slot = gate_idx * cap + jnp.minimum(pos_tk, cap - 1)  # (T, k)
+        keep = pos_tk < cap
+        spill = e * cap  # dropped assignments write/read a zero slot
+        slot = jnp.where(keep, slot, spill)
+        # buffer: slot -> token row (scatter), zero row for empty/spilled
+        buf_tok = jnp.full((e * cap + 1,), n_tok, jnp.int32)
+        buf_tok = buf_tok.at[slot.reshape(-1)].set(
+            jnp.repeat(jnp.arange(n_tok, dtype=jnp.int32), k), mode="drop"
+        )
+        buf_tok = buf_tok.at[spill].set(n_tok)
+        x_pad = jnp.concatenate([xt, jnp.zeros((1, d), dt)], axis=0)
+        ein = jnp.take(x_pad, buf_tok[: e * cap], axis=0).reshape(e, cap, d)
+        eo = _expert_ffn(params, cfg, ein)
+        eo_flat = jnp.concatenate(
+            [eo.reshape(e * cap, d), jnp.zeros((1, d), dt)], axis=0
+        )
+        picked = jnp.take(eo_flat, slot, axis=0)  # (T, k, D)
+        y = jnp.sum(picked * gate_vals[..., None].astype(dt), axis=1).reshape(b, s, d)
+
+    if cfg.moe_dense_residual:
+        from .layers import apply_mlp
+
+        y = y + apply_mlp(params["dense_residual"], x, "swiglu")
+    return y, aux

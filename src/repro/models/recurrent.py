@@ -1,0 +1,331 @@
+"""Recurrent sequence mixers: RG-LRU (RecurrentGemma), mLSTM and sLSTM (xLSTM).
+
+TPU adaptation notes (DESIGN.md §3/§4): RG-LRU and the mLSTM cross-chunk state
+are first-order linear recurrences h_t = a_t * h_{t-1} + b_t — we evaluate
+them with ``jax.lax.associative_scan`` (log-depth, MXU-friendly) instead of a
+sequential loop; the sLSTM's nonlinear recurrence is inherently sequential and
+uses ``lax.scan`` (this is faithful: the xLSTM paper itself notes sLSTM is not
+parallelizable). mLSTM training uses the stabilized quadratic form (as in the
+xLSTM paper's kernels); decode uses the O(1)/token matrix-memory recurrence —
+which is what makes xlstm-1.3b long_500k-capable.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import dense_init
+
+__all__ = [
+    "rglru_init",
+    "rglru_apply",
+    "rglru_init_cache",
+    "rglru_decode",
+    "mlstm_init",
+    "mlstm_apply",
+    "mlstm_init_cache",
+    "mlstm_decode",
+    "slstm_init",
+    "slstm_apply",
+    "slstm_init_cache",
+    "slstm_decode",
+]
+
+C_RGLRU = 8.0
+
+
+# =============================================================================
+# RG-LRU recurrent block (RecurrentGemma)
+# =============================================================================
+
+def rglru_init(key, cfg) -> Dict:
+    d = cfg.d_model
+    dr = cfg.rnn_width or d
+    ks = jax.random.split(key, 7)
+    lam = jax.random.uniform(ks[5], (dr,), jnp.float32, 0.9, 0.999)
+    return {
+        "w_gate_branch": dense_init(ks[0], (d, dr)),
+        "w_x_branch": dense_init(ks[1], (d, dr)),
+        "conv_w": dense_init(ks[2], (cfg.conv_width, dr), scale=0.1),
+        "w_input_gate": dense_init(ks[3], (dr, dr)),
+        "w_rec_gate": dense_init(ks[4], (dr, dr)),
+        # Lambda parametrized so sigmoid(lam_logit) = lam
+        "lam_logit": jnp.log(lam) - jnp.log1p(-lam),
+        "w_out": dense_init(ks[6], (dr, d)),
+    }
+
+
+def _rglru_core(params, z, h0):
+    """z: (B, S, Dr) post-conv; returns (h, h_last)."""
+    dt = z.dtype
+    zf = z.astype(jnp.float32)
+    r = jax.nn.sigmoid(zf @ params["w_rec_gate"])
+    i = jax.nn.sigmoid(zf @ params["w_input_gate"])
+    log_a = -C_RGLRU * jax.nn.softplus(params["lam_logit"]) * r  # (B,S,Dr) <= 0
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * (i * zf)
+    if h0 is not None:
+        # fold the carried state in as a virtual step 0
+        a = jnp.concatenate([jnp.zeros_like(a[:, :1]), a], axis=1)
+        b = jnp.concatenate([h0.astype(jnp.float32)[:, None], b], axis=1)
+
+    def combine(l, rr):
+        al, bl = l
+        ar, br = rr
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    if h0 is not None:
+        h = h[:, 1:]
+    return h.astype(dt), h[:, -1].astype(dt)
+
+
+def _causal_conv(z, w, state=None):
+    """Depthwise causal conv, width K. state: (B, K-1, Dr) history or None."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros_like(z[:, : k - 1])
+    else:
+        pad = state
+    zp = jnp.concatenate([pad, z], axis=1)
+    out = sum(zp[:, i : i + z.shape[1]] * w[i] for i in range(k))
+    return out, zp[:, -(k - 1) :]
+
+
+def rglru_apply(params, cfg, x, positions, return_cache=False):
+    dt = x.dtype
+    gate = jax.nn.gelu((x @ params["w_gate_branch"].astype(dt)).astype(jnp.float32)).astype(dt)
+    z = x @ params["w_x_branch"].astype(dt)
+    z, conv_state = _causal_conv(z, params["conv_w"].astype(dt))
+    h, h_last = _rglru_core(params, z, None)
+    y = (gate * h) @ params["w_out"].astype(dt)
+    cache = None
+    if return_cache:
+        cache = {"h": h_last, "conv": conv_state, "idx": jnp.asarray(x.shape[1], jnp.int32)}
+    return y, cache
+
+
+def rglru_init_cache(cfg, batch, max_len, dtype):
+    dr = cfg.rnn_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, dr), dtype),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, dr), dtype),
+        "idx": jnp.zeros((), jnp.int32),
+    }
+
+
+def rglru_decode(params, cfg, x, cache):
+    dt = x.dtype
+    gate = jax.nn.gelu((x @ params["w_gate_branch"].astype(dt)).astype(jnp.float32)).astype(dt)
+    z = x @ params["w_x_branch"].astype(dt)
+    z, conv_state = _causal_conv(z, params["conv_w"].astype(dt), cache["conv"])
+    h, h_last = _rglru_core(params, z, cache["h"])
+    y = (gate * h) @ params["w_out"].astype(dt)
+    return y, {"h": h_last, "conv": conv_state, "idx": cache["idx"] + 1}
+
+
+# =============================================================================
+# mLSTM (xLSTM): matrix memory, exp gating
+# =============================================================================
+
+def mlstm_init(key, cfg) -> Dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], (d, 2 * d)),
+        "w_q": dense_init(ks[1], (d, h, dh)),
+        "w_k": dense_init(ks[2], (d, h, dh)),
+        "w_v": dense_init(ks[3], (d, h, dh)),
+        "w_i": dense_init(ks[4], (d, h), scale=0.01),
+        "w_f": dense_init(ks[5], (d, h), scale=0.01),
+        "b_f": jnp.full((h,), 3.0, jnp.float32),  # forget-gate bias ~ keep
+        "w_down": dense_init(ks[6], (d, d)),
+    }
+
+
+def mlstm_apply(params, cfg, x, positions, return_cache=False):
+    """Stabilized quadratic (training) form."""
+    dt = x.dtype
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    up = x @ params["w_up"].astype(dt)
+    u, gate = up[..., :d], up[..., d:]
+    q = jnp.einsum("bsd,dhk->bshk", u, params["w_q"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", u, params["w_k"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", u, params["w_v"].astype(dt))
+    uf = u.astype(jnp.float32)
+    log_i = uf @ params["w_i"]  # (B,S,H)
+    log_f = jax.nn.log_sigmoid(uf @ params["w_f"] + params["b_f"])
+    cf = jnp.cumsum(log_f, axis=1)  # F_t
+    # D[t, s] = F_t - F_s + log_i_s  (s <= t)
+    dmat = cf[:, :, None, :] - cf[:, None, :, :] + log_i[:, None, :, :]
+    tpos = jnp.arange(s)
+    causal = tpos[:, None] >= tpos[None, :]
+    dmat = jnp.where(causal[None, :, :, None], dmat, -jnp.inf)
+    m = jnp.max(dmat, axis=2, keepdims=True)  # (B,S,1,H)
+    w = jnp.exp(dmat - m)  # (B,S,S,H)
+    scores = jnp.einsum("bshk,bthk->bsth", q, k).astype(jnp.float32) / np.sqrt(dh)
+    ww = w * scores
+    num = jnp.einsum("bsth,bthk->bshk", ww.astype(dt), v)
+    den = jnp.abs(jnp.sum(ww, axis=2))  # (B,S,H)
+    den = jnp.maximum(den, jnp.exp(-m[:, :, 0, :]))
+    out = num / den[..., None].astype(dt)
+    mixed = out.reshape(b, s, d)
+    y = (mixed * jax.nn.silu(gate.astype(jnp.float32)).astype(dt)) @ params[
+        "w_down"
+    ].astype(dt)
+    cache = None
+    if return_cache:
+        cache = _mlstm_state_from_seq(params, cfg, u, q, k, v, log_i, log_f)
+    return y, cache
+
+
+def _mlstm_state_from_seq(params, cfg, u, q, k, v, log_i, log_f):
+    """Fold a whole prefix into the recurrent (C, n, m) state (for prefill)."""
+    b, s, h, dh = k.shape
+    cf = jnp.cumsum(log_f, axis=1)
+    ftot = cf[:, -1]  # (B,H)
+    # weight of step t in the final state: exp(F_S - F_t + log_i_t - m)
+    logw = ftot[:, None] - cf + log_i  # (B,S,H)
+    m = jnp.maximum(jnp.max(logw, axis=1), 0.0)  # (B,H); 0 guards the n floor
+    w = jnp.exp(logw - m[:, None])
+    c = jnp.einsum("bsh,bshk,bshl->bhkl", w.astype(k.dtype), k, v)
+    n = jnp.einsum("bsh,bshk->bhk", w.astype(k.dtype), k)
+    return {"c": c, "n": n, "m": m, "idx": jnp.asarray(s, jnp.int32)}
+
+
+def mlstm_init_cache(cfg, batch, max_len, dtype):
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    return {
+        "c": jnp.zeros((batch, h, dh, dh), dtype),
+        "n": jnp.zeros((batch, h, dh), dtype),
+        "m": jnp.zeros((batch, h), jnp.float32),
+        "idx": jnp.zeros((), jnp.int32),
+    }
+
+
+def mlstm_decode(params, cfg, x, cache):
+    dt = x.dtype
+    b, s, d = x.shape  # s == 1
+    h = cfg.n_heads
+    dh = d // h
+    up = x @ params["w_up"].astype(dt)
+    u, gate = up[..., :d], up[..., d:]
+    q = jnp.einsum("bsd,dhk->bshk", u, params["w_q"].astype(dt))[:, 0]
+    k = jnp.einsum("bsd,dhk->bshk", u, params["w_k"].astype(dt))[:, 0]
+    v = jnp.einsum("bsd,dhk->bshk", u, params["w_v"].astype(dt))[:, 0]
+    uf = u[:, 0].astype(jnp.float32)
+    log_i = uf @ params["w_i"]  # (B,H)
+    log_f = jax.nn.log_sigmoid(uf @ params["w_f"] + params["b_f"])
+    m_new = jnp.maximum(log_f + cache["m"], log_i)
+    fs = jnp.exp(log_f + cache["m"] - m_new).astype(dt)  # (B,H)
+    is_ = jnp.exp(log_i - m_new).astype(dt)
+    c = cache["c"] * fs[..., None, None] + is_[..., None, None] * jnp.einsum(
+        "bhk,bhl->bhkl", k, v
+    )
+    n = cache["n"] * fs[..., None] + is_[..., None] * k
+    num = jnp.einsum("bhkl,bhk->bhl", c, q)
+    den = jnp.abs(jnp.einsum("bhk,bhk->bh", n, q))
+    den = jnp.maximum(den, jnp.exp(-m_new).astype(dt))
+    out = (num / den[..., None]).reshape(b, 1, d)
+    y = (out * jax.nn.silu(gate.astype(jnp.float32)).astype(dt)) @ params["w_down"].astype(dt)
+    return y, {"c": c, "n": n, "m": m_new, "idx": cache["idx"] + 1}
+
+
+# =============================================================================
+# sLSTM (xLSTM): scalar memory, strictly sequential (lax.scan)
+# =============================================================================
+
+def slstm_init(key, cfg) -> Dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 9)
+    p = {"w_out": dense_init(ks[8], (d, d))}
+    for i, g in enumerate(["z", "i", "f", "o"]):
+        p[f"w_{g}"] = dense_init(ks[i], (d, h, dh))
+        p[f"r_{g}"] = dense_init(ks[4 + i], (h, dh, dh), scale=0.3 / np.sqrt(dh))
+    return p
+
+
+def _slstm_step(params, carry, xt):
+    """xt: (B, H, Dh) pre-projected inputs for the 4 gates stacked later."""
+    c, n, hprev, m = carry
+    wz, wi, wf, wo = xt
+    f32 = jnp.float32
+    rz = jnp.einsum("bhk,hkl->bhl", hprev, params["r_z"]).astype(f32)
+    ri = jnp.einsum("bhk,hkl->bhl", hprev, params["r_i"]).astype(f32)
+    rf = jnp.einsum("bhk,hkl->bhl", hprev, params["r_f"]).astype(f32)
+    ro = jnp.einsum("bhk,hkl->bhl", hprev, params["r_o"]).astype(f32)
+    z = jnp.tanh(wz.astype(f32) + rz)
+    log_i = wi.astype(f32) + ri
+    log_f = jax.nn.log_sigmoid(wf.astype(f32) + rf)
+    o = jax.nn.sigmoid(wo.astype(f32) + ro)
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_s = jnp.exp(log_i - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    c_new = f_s * c + i_s * z
+    n_new = jnp.maximum(f_s * n + i_s, jnp.exp(-m_new))
+    h_new = o * (c_new / n_new)
+    return (c_new, n_new, h_new.astype(hprev.dtype), m_new), h_new
+
+
+def slstm_apply(params, cfg, x, positions, return_cache=False):
+    dt = x.dtype
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    gates = [
+        jnp.einsum("bsd,dhk->sbhk", x, params[f"w_{g}"].astype(dt))
+        for g in ["z", "i", "f", "o"]
+    ]
+    f32 = jnp.float32
+    carry0 = (
+        jnp.zeros((b, h, dh), f32),
+        jnp.ones((b, h, dh), f32),
+        jnp.zeros((b, h, dh), dt),
+        jnp.zeros((b, h, dh), f32),
+    )
+    carry, hs = jax.lax.scan(
+        lambda c, xt: _slstm_step(params, c, xt), carry0, tuple(gates)
+    )
+    hs = jnp.transpose(hs, (1, 0, 2, 3)).reshape(b, s, d).astype(dt)
+    y = hs @ params["w_out"].astype(dt)
+    cache = None
+    if return_cache:
+        c, n, hl, m = carry
+        cache = {"c": c, "n": n, "h": hl, "m": m, "idx": jnp.asarray(s, jnp.int32)}
+    return y, cache
+
+
+def slstm_init_cache(cfg, batch, max_len, dtype):
+    h = cfg.n_heads
+    dh = cfg.d_model // h
+    return {
+        "c": jnp.zeros((batch, h, dh), jnp.float32),
+        "n": jnp.ones((batch, h, dh), jnp.float32),
+        "h": jnp.zeros((batch, h, dh), dtype),
+        "m": jnp.zeros((batch, h, dh), jnp.float32),
+        "idx": jnp.zeros((), jnp.int32),
+    }
+
+
+def slstm_decode(params, cfg, x, cache):
+    dt = x.dtype
+    b, s, d = x.shape
+    gates = tuple(
+        jnp.einsum("bsd,dhk->bhk", x, params[f"w_{g}"].astype(dt))
+        for g in ["z", "i", "f", "o"]
+    )
+    carry = (cache["c"], cache["n"], cache["h"], cache["m"])
+    (c, n, hl, m), hnew = _slstm_step(params, carry, gates)
+    y = hnew.astype(dt).reshape(b, 1, d) @ params["w_out"].astype(dt)
+    return y, {"c": c, "n": n, "h": hl, "m": m, "idx": cache["idx"] + 1}

@@ -1,0 +1,17 @@
+"""Fully-oblivious SQL operators (validity-column convention).
+
+Every operator consumes and produces a :class:`~repro.ops.table.SecretTable`
+whose public size depends only on its input sizes (never on data): Filter
+keeps N rows, Join produces N1*N2 rows, GroupBy keeps N rows with group
+representatives marked valid, etc. The hidden ``valid`` column marks true
+output tuples — exactly the paper's §2.2 definition. The Resizer
+(:mod:`repro.core.resizer`) is the only component that ever changes a public
+size.
+"""
+from .table import SecretTable  # noqa: F401
+from .filter import oblivious_filter, Predicate  # noqa: F401
+from .join import oblivious_join  # noqa: F401
+from .groupby import oblivious_groupby_count  # noqa: F401
+from .orderby import oblivious_orderby  # noqa: F401
+from .distinct import oblivious_distinct  # noqa: F401
+from .aggregate import count_valid, count_distinct, sum_column  # noqa: F401

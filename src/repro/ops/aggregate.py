@@ -1,0 +1,47 @@
+"""Terminal aggregates: COUNT(*), COUNT(DISTINCT col), SUM(col).
+
+These produce 1-row tables. Additions are local under arithmetic sharing, so
+after a bit2a (2 rounds) / b2a (2 rounds) conversion the reduction is free —
+the reason analytics-over-MPC is dominated by the *relational* operators, not
+the final aggregation.
+"""
+from __future__ import annotations
+
+from ..core.circuits import b2a, bit2a
+from ..core.prf import PRFSetup
+from ..core.sharing import AShare, mul
+from .distinct import oblivious_distinct
+from .table import SecretTable
+
+__all__ = ["count_valid", "count_distinct", "sum_column"]
+
+
+def count_valid(table: SecretTable, prf: PRFSetup, name: str = "cnt") -> SecretTable:
+    """COUNT(*) over true rows -> 1-row table with an arithmetic count."""
+    bits = bit2a(table.valid, prf.fold(701))
+    total = bits.sum(axis=0)
+    one = total.map_shares(lambda s: s[:, None])
+    from ..core.sharing import const_b
+
+    return SecretTable({name: one}, const_b(1, (1,)))
+
+
+def count_distinct(
+    table: SecretTable, col: str, prf: PRFSetup, name: str = "cnt"
+) -> SecretTable:
+    d = oblivious_distinct(table, col, prf)
+    return count_valid(d, prf, name)
+
+
+def sum_column(
+    table: SecretTable, col: str, prf: PRFSetup, name: str = "sum"
+) -> SecretTable:
+    """SUM(col) over true rows: mask by validity (1 mult) then local-reduce."""
+    vals = b2a(table.bshare_col(col, prf), prf.fold(711))
+    bits = bit2a(table.valid, prf.fold(712))
+    masked = mul(vals, bits, prf.fold(713))
+    total = masked.sum(axis=0)
+    one = total.map_shares(lambda s: s[:, None])
+    from ..core.sharing import const_b
+
+    return SecretTable({name: one}, const_b(1, (1,)))

@@ -1,0 +1,73 @@
+"""Oblivious Filter.
+
+Evaluates a conjunction of predicates over secret-shared columns and ANDs the
+result into the validity column. The output table has the *same* public size
+as the input (an oblivious Filter cannot physically shrink its input — the
+paper's motivating example); only a downstream Resizer may trim it.
+
+Cost: one comparison circuit per term (eq: 5 rounds, lt/le: 5-6 rounds) plus
+one AND per conjunction (Filter_1 = 1 equality, Filter_4 = 4 equalities + 3
+ANDs — matching the paper's Fig. 7 workloads).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Union
+
+from ..core.circuits import eq, eq_public, gt_public, le_public, lt, lt_public, and_bit
+from ..core.prf import PRFSetup
+from ..core.sharing import BShare
+from .table import SecretTable
+
+__all__ = ["Predicate", "oblivious_filter"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Predicate:
+    """column OP value — value may be a public constant or another column
+    name (prefixed with ``col:``)."""
+
+    column: str
+    op: str  # eq | lt | le | gt
+    value: Union[int, str]
+
+    def evaluate(self, table: SecretTable, prf: PRFSetup, tag: int) -> BShare:
+        x = table.bshare_col(self.column, prf)
+        p = prf.fold(tag)
+        if isinstance(self.value, str) and self.value.startswith("col:"):
+            y = table.bshare_col(self.value[4:], prf)
+            if self.op == "eq":
+                return eq(x, y, p)
+            if self.op == "lt":
+                return lt(x, y, p)
+            if self.op == "le":
+                return _bit(lt(y, x, p))  # NOT (y < x)
+            raise ValueError(self.op)
+        c = int(self.value)
+        if self.op == "eq":
+            return eq_public(x, c, p)
+        if self.op == "lt":
+            return lt_public(x, c, p)
+        if self.op == "le":
+            return le_public(x, c, p)
+        if self.op == "gt":
+            return gt_public(x, c, p)
+        raise ValueError(f"unknown predicate op {self.op}")
+
+
+def _bit(b: BShare) -> BShare:
+    return b.xor_public(b.ring.const(1))
+
+
+def oblivious_filter(
+    table: SecretTable, predicates: Sequence[Predicate], prf: PRFSetup
+) -> SecretTable:
+    """valid' = valid AND p_1 AND ... AND p_k. Output size == input size."""
+    acc = None
+    for i, pred in enumerate(predicates):
+        b = pred.evaluate(table, prf, 400 + i)
+        acc = b if acc is None else and_bit(acc, b, prf.fold(430 + i))
+    if acc is None:
+        return table
+    new_valid = and_bit(table.valid, acc, prf.fold(449))
+    return SecretTable(dict(table.cols), new_valid)

@@ -1,0 +1,149 @@
+"""Oblivious GroupBy with COUNT aggregate.
+
+Pipeline (Secrecy-style; the paper notes GroupBy "includes sorting as a
+pre-operation"):
+
+1. Build a sort key that sends invalid rows to the end (select valid ? key :
+   SENTINEL — one AND).
+2. Bitonic-sort the table by it (O(log^2 N) stages).
+3. Mark segment starts (one vectorized equality against the row above).
+4. Segmented Kogge-Stone prefix-scan of the valid bits in *arithmetic*
+   sharing — additions are free; each of the log2 N levels costs 2 ring
+   multiplications (value-carry and flag-OR).
+5. Mark each group's last row as the representative: it carries the group's
+   COUNT; all other rows stay in the table as invalid fillers (output size ==
+   input size, fully oblivious).
+
+Sentinel caveat: group keys must be < 0xFFFFFFFF (documented; dictionary
+encodings in the workloads are small ints).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..core.circuits import and_bit, bit2a, eq, or_bit
+from ..core.ledger import active_ledger
+from ..core.prf import PRFSetup
+from ..core.sharing import AShare, BShare, and_, mul, select
+from ..core.sort import bitonic_sort
+from .table import SecretTable
+
+__all__ = ["oblivious_groupby_count", "segment_starts", "segmented_count", "pad_pow2"]
+
+SENTINEL = 0xFFFFFFFE
+
+
+def pad_pow2(table: SecretTable) -> SecretTable:
+    """Pad to a power-of-two row count (bitonic networks require it). Padding
+    rows are all-zero shares: value 0, valid 0 — they sort to the sentinel
+    block like any other invalid row."""
+    n = table.n
+    if n & (n - 1) == 0:
+        return table
+    return table.pad_rows(1 << n.bit_length())
+
+
+def _shift_down(col, fill: int = 0):
+    """Row i gets row i-1's shares; row 0 gets ``fill`` (public constant)."""
+    return col.map_shares(
+        lambda s: jnp.concatenate(
+            [jnp.full(s.shape[:1] + (1,) + s.shape[2:], 0, s.dtype), s[:, :-1]], axis=1
+        )
+    ).xor_public(jnp.zeros(col.shape, dtype=col.ring.dtype).at[0].set(fill))
+
+
+def _shift_up(col, fill: int = 0):
+    return col.map_shares(
+        lambda s: jnp.concatenate(
+            [s[:, 1:], jnp.full(s.shape[:1] + (1,) + s.shape[2:], 0, s.dtype)], axis=1
+        )
+    ).xor_public(jnp.zeros(col.shape, dtype=col.ring.dtype).at[-1].set(fill))
+
+
+def segment_starts(key: BShare, valid: BShare, prf: PRFSetup) -> BShare:
+    """start_i = valid_i AND (i == 0 OR key_i != key_{i-1})."""
+    prev = _shift_down(key)
+    e = eq(key, prev, prf.fold(601))
+    # row 0 always starts a segment: force e_0 = 0 with a public mask
+    n = key.shape[0]
+    m = jnp.ones(n, dtype=key.ring.dtype).at[0].set(0)
+    e = e.and_public(m)
+    not_e = e.xor_public(e.ring.const(1))
+    return and_bit(valid, not_e, prf.fold(602))
+
+
+def segmented_count(valid: BShare, start: BShare, prf: PRFSetup) -> AShare:
+    """Segmented inclusive prefix-sum of the valid bits (count within group).
+
+    Kogge-Stone over the associative combine
+    (V, F) o (Vl, Fl) = (V + Vl * (1 - F), F OR Fl); log2(N) levels x 2 ring
+    multiplications.
+    """
+    n = valid.shape[0]
+    v = bit2a(valid, prf.fold(611))
+    f = bit2a(start, prf.fold(612))
+
+    def shift_a(x: AShare, d: int, fill: int) -> AShare:
+        s = x.shares
+        pad = jnp.zeros(s.shape[:1] + (d,) + s.shape[2:], s.dtype)
+        shifted = jnp.concatenate([pad, s[:, :-d]], axis=1)
+        out = AShare(shifted)
+        fills = jnp.zeros(x.shape, dtype=s.dtype).at[:d].set(fill)
+        return out.add_public(fills)
+
+    d = 1
+    lvl = 0
+    while d < n:
+        vl = shift_a(v, d, 0)
+        fl = shift_a(f, d, 1)  # out-of-range neighbors act as boundaries
+        keep = -f + 1  # (1 - F): local
+        v = v + mul(vl, keep, prf.fold(620 + lvl))
+        fmul = mul(f, fl, prf.fold(640 + lvl))
+        f = f + fl - fmul  # OR
+        d *= 2
+        lvl += 1
+    return v
+
+
+def oblivious_groupby_count(
+    table: SecretTable, key_col: str, prf: PRFSetup, count_name: str = "cnt"
+) -> SecretTable:
+    import contextlib
+
+    table = pad_pow2(table)
+    with contextlib.nullcontext():
+        keyb = table.bshare_col(key_col, prf)
+        vmask = table.valid.lsb_mask()
+        sort_key = select(
+            vmask,
+            keyb,
+            BShare(jnp.zeros_like(keyb.shares)).xor_public(
+                jnp.full(keyb.shape, SENTINEL, dtype=keyb.ring.dtype)
+            ),
+            prf.fold(651),
+        )
+
+        cols = {"__sk": sort_key, "__valid": table.valid}
+        cols.update({k: table.bshare_col(k, prf) for k in table.cols})
+        cols = bitonic_sort(cols, "__sk", prf)
+        valid = cols.pop("__valid")
+        key_sorted = cols[key_col]
+        cols.pop("__sk")
+
+        start = segment_starts(key_sorted, valid, prf)
+        cnt = segmented_count(valid, start, prf)
+
+        # last row of each segment := representative
+        nxt_start = _shift_up(start, fill=1)
+        nxt_valid = _shift_up(valid, fill=0)
+        not_nxt_valid = nxt_valid.xor_public(nxt_valid.ring.const(1))
+        boundary = or_bit(
+            nxt_start.and_public(nxt_start.ring.const(1)),
+            not_nxt_valid.and_public(not_nxt_valid.ring.const(1)),
+            prf.fold(661),
+        )
+        rep = and_bit(valid, boundary, prf.fold(662))
+
+        out_cols: dict = {key_col: key_sorted}
+        out_cols[count_name] = cnt
+        return SecretTable(out_cols, rep)

@@ -1,0 +1,85 @@
+"""Oblivious equi-join (nested-loop / Cartesian product).
+
+The fully-oblivious join returns a secret-shared result *in the size of the
+Cartesian product* |R1| x |R2| (paper §1, citing Secrecy): row (i, j) carries
+both sides' columns and
+``valid = valid1[i] AND valid2[j] AND (key1[i] == key2[j])``.
+
+Cost: one vectorized equality over N1*N2 lanes (5 rounds) + 2 ANDs. This
+ballooning is precisely what makes the Resizer valuable: trimming the join
+output from N1*N2 to S = T + eta shrinks every downstream operator.
+
+An optional extra predicate ("theta" part, e.g. ``d.time <= m.time`` in the
+Aspirin Count query) is evaluated on the product and ANDed in.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+from ..core.circuits import and_bit, eq, le
+from ..core.prf import PRFSetup
+from .table import SecretTable
+
+__all__ = ["oblivious_join"]
+
+
+def oblivious_join(
+    left: SecretTable,
+    right: SecretTable,
+    on: Tuple[str, str],
+    prf: PRFSetup,
+    theta: Optional[Tuple[str, str, str]] = None,
+) -> SecretTable:
+    """Equi-join ``left.on[0] == right.on[1]``; output size = n1 * n2.
+
+    ``theta``: optional extra condition (left_col, op, right_col) with
+    op in {"le", "eq"} evaluated obliviously on the product.
+    """
+    n1, n2 = left.n, right.n
+    lk, rk = on
+
+    # Broadcast to the product grid then flatten: row r = (i * n2 + j).
+    def expand_left(col):
+        return col.map_shares(
+            lambda s: s[:, :, None].repeat(n2, axis=2).reshape(s.shape[0], n1 * n2)
+        )
+
+    def expand_right(col):
+        return col.map_shares(
+            lambda s: s[:, None, :].repeat(n1, axis=1).reshape(s.shape[0], n1 * n2)
+        )
+
+    cols = {}
+    for name, col in left.cols.items():
+        cols[name] = expand_left(col)
+    for name, col in right.cols.items():
+        # Disambiguate collisions (engine usually prefixes table aliases).
+        out_name = name
+        suffix = 0
+        while out_name in cols:
+            suffix += 1
+            out_name = f"r{suffix}.{name}"
+        cols[out_name] = expand_right(col)
+
+    lkey = expand_left(left.bshare_col(lk, prf))
+    rkey = expand_right(right.bshare_col(rk, prf))
+    match = eq(lkey, rkey, prf.fold(501))
+
+    lvalid = expand_left(left.valid)
+    rvalid = expand_right(right.valid)
+    both = and_bit(lvalid, rvalid, prf.fold(502))
+    valid = and_bit(both, match, prf.fold(503))
+
+    if theta is not None:
+        tcol_l, op, tcol_r = theta
+        xl = expand_left(left.bshare_col(tcol_l, prf))
+        xr = expand_right(right.bshare_col(tcol_r, prf))
+        if op == "le":
+            extra = le(xl, xr, prf.fold(504))
+        elif op == "eq":
+            extra = eq(xl, xr, prf.fold(504))
+        else:
+            raise ValueError(f"unsupported theta op {op}")
+        valid = and_bit(valid, extra, prf.fold(505))
+
+    return SecretTable(cols, valid)

@@ -1,0 +1,55 @@
+"""Oblivious ORDER BY (+ optional LIMIT).
+
+Sorts by a column; invalid rows are keyed to a sentinel so they sink to the
+end (ascending) / bottom (descending). LIMIT k is a *public* head-slice of the
+sorted oblivious table — it reveals nothing beyond the (public) constant k,
+and is only semantically complete when the number of true rows is <= k or the
+operator is terminal (the engine enforces this the same way the paper's
+hand-compiled plans do).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from ..core.prf import PRFSetup
+from ..core.sharing import BShare, select
+from ..core.sort import bitonic_sort
+from .table import SecretTable
+
+__all__ = ["oblivious_orderby"]
+
+
+def oblivious_orderby(
+    table: SecretTable,
+    col: str,
+    prf: PRFSetup,
+    descending: bool = False,
+    limit: Optional[int] = None,
+) -> SecretTable:
+    from .groupby import pad_pow2
+
+    table = pad_pow2(table)
+    keyb = table.bshare_col(col, prf)
+    vmask = table.valid.lsb_mask()
+    sentinel_val = 0 if descending else 0xFFFFFFFE
+    sentinel = BShare(jnp.zeros_like(keyb.shares)).xor_public(
+        jnp.full(keyb.shape, sentinel_val, dtype=keyb.ring.dtype)
+    )
+    sort_key = select(vmask, keyb, sentinel, prf.fold(681))
+
+    cols = {"__sk": sort_key, "__valid": table.valid}
+    for k in table.cols:
+        if k != col:
+            cols[k] = table.bshare_col(k, prf)
+    cols = bitonic_sort(cols, "__sk", prf, descending=descending)
+    valid = cols.pop("__valid")
+    # the sort key doubles as the (masked) column value for valid rows
+    out_cols = dict(cols)
+    out_cols[col] = out_cols.pop("__sk")
+
+    out = SecretTable(out_cols, valid)
+    if limit is not None and limit < out.n:
+        out = out.gather_rows(jnp.arange(limit))
+    return out

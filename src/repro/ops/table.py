@@ -1,0 +1,120 @@
+"""SecretTable: a relation under 3-party replicated secret sharing.
+
+Columns are XOR-shared 32-bit words (:class:`BShare`) — the comparison-friendly
+representation (Secrecy-style). Aggregate columns produced by GroupBy live as
+arithmetic shares (:class:`AShare`) and are converted lazily (``a2b``) when a
+downstream operator needs to compare or sort on them.
+
+``valid`` is the secret single-bit column marking true output tuples (§2.2 of
+the paper). The *public* row count ``n`` is the oblivious size N.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.circuits import a2b
+from ..core.prf import PRFSetup
+from ..core.sharing import AShare, BShare, share_b, reveal_a, reveal_b
+
+Share = Union[AShare, BShare]
+
+__all__ = ["SecretTable"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SecretTable:
+    cols: Dict[str, Share]
+    valid: BShare  # (n,) single-bit
+
+    # -- pytree ---------------------------------------------------------------
+    def tree_flatten(self):
+        names = tuple(sorted(self.cols))
+        return tuple(self.cols[k] for k in names) + (self.valid,), names
+
+    @classmethod
+    def tree_unflatten(cls, names, children):
+        return cls(dict(zip(names, children[:-1])), children[-1])
+
+    # -- structure ------------------------------------------------------------
+    @property
+    def n(self) -> int:
+        return self.valid.shape[0]
+
+    @property
+    def width_bytes(self) -> int:
+        """Plaintext row width in bytes (columns + valid bit word)."""
+        return 4 * (len(self.cols) + 1)
+
+    def column_names(self):
+        return list(self.cols)
+
+    def select_columns(self, names) -> "SecretTable":
+        return SecretTable({k: self.cols[k] for k in names}, self.valid)
+
+    def rename(self, mapping: Dict[str, str]) -> "SecretTable":
+        return SecretTable(
+            {mapping.get(k, k): v for k, v in self.cols.items()}, self.valid
+        )
+
+    def with_prefix(self, prefix: str) -> "SecretTable":
+        return SecretTable(
+            {f"{prefix}.{k}" if "." not in k else k: v for k, v in self.cols.items()},
+            self.valid,
+        )
+
+    def gather_rows(self, idx) -> "SecretTable":
+        return SecretTable(
+            {k: v.take(idx, axis=0) for k, v in self.cols.items()},
+            self.valid.take(idx, axis=0),
+        )
+
+    def pad_rows(self, n_rows: int) -> "SecretTable":
+        """Pad with rows whose shares are all-zero: value 0, valid 0 — a valid
+        sharing of an invalid filler tuple."""
+        return SecretTable(
+            {k: v.pad_rows(n_rows) for k, v in self.cols.items()},
+            self.valid.pad_rows(n_rows),
+        )
+
+    def bshare_col(self, name: str, prf: PRFSetup) -> BShare:
+        """Column as BShare, converting from AShare if necessary."""
+        col = self.cols[name]
+        if isinstance(col, AShare):
+            return a2b(col, prf)
+        return col
+
+    # -- I/O (data-owner side / test oracle) ----------------------------------
+    @classmethod
+    def from_plaintext(
+        cls,
+        data: Dict[str, np.ndarray],
+        key: jax.Array,
+        valid: Optional[np.ndarray] = None,
+    ) -> "SecretTable":
+        n = len(next(iter(data.values())))
+        keys = jax.random.split(key, len(data) + 1)
+        cols = {
+            name: share_b(np.asarray(vals, dtype=np.uint32), k)
+            for (name, vals), k in zip(data.items(), keys[:-1])
+        }
+        v = np.ones(n, dtype=np.uint32) if valid is None else np.asarray(valid, np.uint32)
+        return cls(cols, share_b(v, keys[-1]))
+
+    def reveal(self) -> Dict[str, np.ndarray]:
+        """Open everything (tests / final results only)."""
+        out = {}
+        for k, v in self.cols.items():
+            out[k] = np.asarray(reveal_a(v) if isinstance(v, AShare) else reveal_b(v))
+        out["_valid"] = np.asarray(reveal_b(self.valid)) & 1
+        return out
+
+    def reveal_true_rows(self) -> Dict[str, np.ndarray]:
+        d = self.reveal()
+        mask = d.pop("_valid").astype(bool)
+        return {k: v[mask] for k, v in d.items()}

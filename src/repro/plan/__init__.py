@@ -1,0 +1,13 @@
+from .nodes import (  # noqa: F401
+    Scan,
+    Filter,
+    Join,
+    GroupByCount,
+    OrderBy,
+    Distinct,
+    CountValid,
+    CountDistinct,
+    Resize,
+    PlanNode,
+)
+from .policies import insert_resizers  # noqa: F401

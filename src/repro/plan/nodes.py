@@ -1,0 +1,147 @@
+"""Logical/physical plan nodes.
+
+A plan is a tree of dataclass nodes; leaves are ``Scan``s over named base
+tables. Plans are "hand-compiled" exactly as in the paper (§4.5: no automatic
+SQL translation yet); ``Resize`` nodes are inserted either by hand or by a
+placement policy (:mod:`repro.plan.policies`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+from ..core.resizer import ResizerConfig
+from ..ops.filter import Predicate
+
+__all__ = [
+    "PlanNode",
+    "Scan",
+    "Filter",
+    "Join",
+    "GroupByCount",
+    "OrderBy",
+    "Distinct",
+    "CountValid",
+    "CountDistinct",
+    "Resize",
+]
+
+
+@dataclasses.dataclass
+class PlanNode:
+    def children(self) -> List["PlanNode"]:
+        return [
+            getattr(self, f.name)
+            for f in dataclasses.fields(self)
+            if isinstance(getattr(self, f.name), PlanNode)
+        ]
+
+    def replace_children(self, new_children: List["PlanNode"]) -> "PlanNode":
+        kwargs, i = {}, 0
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if isinstance(v, PlanNode):
+                kwargs[f.name] = new_children[i]
+                i += 1
+            else:
+                kwargs[f.name] = v
+        return type(self)(**kwargs)
+
+    @property
+    def label(self) -> str:
+        return type(self).__name__
+
+    def pretty(self, indent: int = 0) -> str:
+        lines = ["  " * indent + self.describe()]
+        for c in self.children():
+            lines.append(c.pretty(indent + 1))
+        return "\n".join(lines)
+
+    def describe(self) -> str:
+        return self.label
+
+
+@dataclasses.dataclass
+class Scan(PlanNode):
+    table: str
+
+    def describe(self) -> str:
+        return f"Scan({self.table})"
+
+
+@dataclasses.dataclass
+class Filter(PlanNode):
+    child: PlanNode
+    predicates: Sequence[Predicate]
+
+    def describe(self) -> str:
+        ps = " AND ".join(f"{p.column} {p.op} {p.value}" for p in self.predicates)
+        return f"Filter({ps})"
+
+
+@dataclasses.dataclass
+class Join(PlanNode):
+    left: PlanNode
+    right: PlanNode
+    on: Tuple[str, str]
+    theta: Optional[Tuple[str, str, str]] = None
+
+    def describe(self) -> str:
+        t = f" theta={self.theta}" if self.theta else ""
+        return f"Join({self.on[0]}=={self.on[1]}{t})"
+
+
+@dataclasses.dataclass
+class GroupByCount(PlanNode):
+    child: PlanNode
+    key: str
+    count_name: str = "cnt"
+
+    def describe(self) -> str:
+        return f"GroupByCount({self.key})"
+
+
+@dataclasses.dataclass
+class OrderBy(PlanNode):
+    child: PlanNode
+    col: str
+    descending: bool = False
+    limit: Optional[int] = None
+
+    def describe(self) -> str:
+        return f"OrderBy({self.col}{' DESC' if self.descending else ''}, limit={self.limit})"
+
+
+@dataclasses.dataclass
+class Distinct(PlanNode):
+    child: PlanNode
+    col: str
+
+    def describe(self) -> str:
+        return f"Distinct({self.col})"
+
+
+@dataclasses.dataclass
+class CountValid(PlanNode):
+    child: PlanNode
+
+    def describe(self) -> str:
+        return "Count(*)"
+
+
+@dataclasses.dataclass
+class CountDistinct(PlanNode):
+    child: PlanNode
+    col: str
+
+    def describe(self) -> str:
+        return f"CountDistinct({self.col})"
+
+
+@dataclasses.dataclass
+class Resize(PlanNode):
+    child: PlanNode
+    cfg: ResizerConfig
+
+    def describe(self) -> str:
+        return f"Resize[{self.cfg.describe()}]"

@@ -1,0 +1,68 @@
+"""Resizer placement policies (§5.3 "Resizer placement").
+
+The paper inserts a Resizer after every internal operator by hand and
+sketches the cost functions a future optimizer would use (Fig. 9). We provide
+those policies plus a simple analytic cost-based one built on
+:mod:`repro.plan.cost`.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+from ..core.resizer import ResizerConfig
+from .nodes import (
+    CountDistinct,
+    CountValid,
+    Filter,
+    GroupByCount,
+    Join,
+    OrderBy,
+    PlanNode,
+    Resize,
+    Scan,
+)
+
+__all__ = ["insert_resizers"]
+
+_INTERNAL = (Filter, Join, GroupByCount)
+
+
+def insert_resizers(
+    plan: PlanNode,
+    cfg_factory: Callable[[PlanNode], Optional[ResizerConfig]],
+    placement: str = "all_internal",
+    cost_model=None,
+) -> PlanNode:
+    """Rewrite the plan, wrapping operators with Resize nodes.
+
+    placement:
+      * ``none``          — fully oblivious (no resizers)
+      * ``all_internal``  — after every non-terminal Filter/Join/GroupBy
+                            (the paper's evaluation setup)
+      * ``after_joins``   — only after Join nodes (where ballooning happens)
+      * ``cost_based``    — insert only where the cost model predicts a win
+                            (requires ``cost_model`` from repro.plan.cost)
+    """
+    if placement == "none":
+        return plan
+
+    def rewrite(node: PlanNode, is_root: bool) -> PlanNode:
+        node = node.replace_children(
+            [rewrite(c, False) for c in node.children()]
+        )
+        if is_root or isinstance(node, (Scan, Resize, CountValid, CountDistinct, OrderBy)):
+            return node
+        wrap = False
+        if placement == "all_internal" and isinstance(node, _INTERNAL):
+            wrap = True
+        elif placement == "after_joins" and isinstance(node, Join):
+            wrap = True
+        elif placement == "cost_based" and isinstance(node, _INTERNAL):
+            wrap = cost_model is None or cost_model.resizer_profitable(node)
+        if wrap:
+            cfg = cfg_factory(node)
+            if cfg is not None:
+                return Resize(node, cfg)
+        return node
+
+    return rewrite(plan, True)

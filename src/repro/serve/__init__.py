@@ -1,0 +1,2 @@
+from .serve_step import make_prefill_step, make_serve_step, prefill  # noqa: F401
+from .batching import BucketedBatcher  # noqa: F401

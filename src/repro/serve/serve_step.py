@@ -1,0 +1,66 @@
+"""Serving steps: prefill (build caches from a prompt) and decode (one token).
+
+``serve_step`` is what the decode_32k / long_500k dry-run cells lower: one new
+token against a KV cache of the shape's length. Caches are group-stacked to
+match the scan-over-layers parameter layout.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import decode_step, forward
+from ..models.lm import _apply_block, _embed_inputs, apply_norm  # noqa: F401
+
+__all__ = ["prefill", "make_prefill_step", "make_serve_step"]
+
+
+def prefill(cfg, params, batch) -> Tuple[jax.Array, Dict]:
+    """Forward over the prompt, returning logits and decode caches."""
+    x, positions = _embed_inputs(cfg, params, batch)
+
+    def group_body(x, group_params):
+        caches = {}
+        for pos in range(cfg.pattern_period):
+            x, _, c = _apply_block(
+                cfg,
+                group_params[str(pos)],
+                cfg.block_pattern[pos],
+                x,
+                positions,
+                return_cache=True,
+            )
+            caches[str(pos)] = c
+        return x, caches
+
+    if cfg.scan_layers:
+        x, caches = jax.lax.scan(group_body, x, params["layers"])
+    else:
+        outs = []
+        for g in range(cfg.n_groups):
+            gp = jax.tree.map(lambda p: p[g], params["layers"])
+            x, c = group_body(x, gp)
+            outs.append(c)
+        caches = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+
+    x = apply_norm(params["final_norm"], x, cfg.norm_type)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x[:, -1:] @ head.astype(x.dtype)).astype(jnp.float32)
+    return logits, caches
+
+
+def make_prefill_step(cfg) -> Callable:
+    def prefill_step(params, batch):
+        logits, _ = forward(cfg, params, batch)
+        return logits[:, -1:]
+
+    return prefill_step
+
+
+def make_serve_step(cfg) -> Callable:
+    def serve_step(params, caches, batch):
+        return decode_step(cfg, params, caches, batch)
+
+    return serve_step

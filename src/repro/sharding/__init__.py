@@ -1,0 +1,7 @@
+from .rules import (  # noqa: F401
+    batch_specs,
+    cache_specs,
+    data_axes,
+    make_param_specs,
+    zero1_specs,
+)

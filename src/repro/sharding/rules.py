@@ -1,0 +1,202 @@
+"""Logical-axis -> mesh-axis sharding rules (DP / TP / EP / SP).
+
+The production mesh is ("data", "model") single-pod or ("pod", "data",
+"model") multi-pod; "pod" composes with "data" for batch (DP) sharding.
+
+Parameter rules are name-based with divisibility-checked fallbacks: each
+parameter name maps to a priority list of tensor axes (negative, counted from
+the end so the scan-over-layers group axis is transparent); the first axis
+whose size divides the model-axis extent gets "model". This yields:
+
+* TP     — attention heads / FFN hidden / vocab on "model"
+* EP     — MoE expert axis on "model" when n_experts % model == 0
+           (arctic 128e), else TP inside the expert FFN (mixtral 8e on a
+           16-way model axis)
+* DP     — batch axes on ("pod", "data")
+* SP     — long-context KV cache sequence axis on "data" when batch < data
+* ZeRO-1 — optimizer moments additionally sharded over "data" on the largest
+           still-unsharded divisible axis
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "make_param_specs",
+    "zero1_specs",
+    "batch_specs",
+    "cache_specs",
+    "data_axes",
+]
+
+# parameter name -> tensor-axis priority (negative indices, end-anchored)
+_RULES = {
+    "embed": (-2,),
+    "lm_head": (-1,),
+    "w_q": (-2, -1),
+    "w_k": (-2, -1),
+    "w_v": (-2, -1),
+    "w_o": (-3, -1),
+    "w_uq": (-2, -1),
+    "w_uk": (-2, -1),
+    "w_uv": (-2, -1),
+    "w_dq": (-1,),
+    "w_dkv": (-1,),
+    "w_kr": (),
+    "router": (-1,),
+    "w_gate": (-1,),  # mlp (D,F); moe handled by ndim below
+    "w_up": (-1,),
+    "w_down": (-2,),
+    "w_gate_branch": (-1,),
+    "w_x_branch": (-1,),
+    "w_input_gate": (-1,),
+    "w_rec_gate": (-1,),
+    "w_out": (-2,),
+    "conv_w": (),
+    "lam_logit": (),
+    "w_i": (),
+    "w_f": (),
+    "b_f": (),
+    "w_z": (-2, -1),
+    "r_z": (-1,),
+    "r_i": (-1,),
+    "r_f": (-1,),
+    "r_o": (-1,),
+    "scale": (),
+}
+_MOE_RULES = {  # (E, D, F) / (E, F, D): expert axis first, fallback TP
+    "w_gate": (-3, -1),
+    "w_up": (-3, -1),
+    "w_down": (-3, -2),
+}
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _model_extent(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+def _leaf_name(path) -> str:
+    for p in reversed(path):
+        k = getattr(p, "key", None)
+        if isinstance(k, str) and not k.isdigit():
+            return k
+    return ""
+
+
+def _spec_for(name: str, shape, mesh: Mesh, in_moe: bool) -> P:
+    rules = _MOE_RULES if (in_moe and name in _MOE_RULES and len(shape) >= 3) else _RULES
+    prio = rules.get(name, ())
+    m = _model_extent(mesh)
+    axes: list = [None] * len(shape)
+    for ax in prio:
+        idx = len(shape) + ax
+        if 0 <= idx < len(shape) and shape[idx] % m == 0 and shape[idx] >= m:
+            axes[idx] = "model"
+            break
+    return P(*axes)
+
+
+_MLA_RANK_RULES = {  # shard the latent rank (contraction) axis instead of
+    # per-head features: turns per-head feature shards into a single psum
+    "w_uq": (-3,),
+    "w_uk": (-3,),
+    "w_uv": (-3,),
+    "w_dq": (-1,),
+    "w_dkv": (-1,),
+}
+
+
+def make_param_specs(cfg, params_tree, mesh: Mesh) -> Dict:
+    """PartitionSpec tree matching the (possibly group-stacked) params."""
+    mla_rank = getattr(cfg, "mla_shard", "feature") == "rank"
+
+    def spec(path, leaf):
+        name = _leaf_name(path)
+        joined = "/".join(str(getattr(p, "key", "")) for p in path)
+        in_moe = "ffn" in joined and cfg.ffn_type == "moe" and "dense_residual" not in joined
+        if mla_rank and name in _MLA_RANK_RULES:
+            m = _model_extent(mesh)
+            shape = leaf.shape
+            axes: list = [None] * len(shape)
+            for ax in _MLA_RANK_RULES[name]:
+                idx = len(shape) + ax
+                if 0 <= idx < len(shape) and shape[idx] % m == 0 and shape[idx] >= m:
+                    axes[idx] = "model"
+                    break
+            return P(*axes)
+        return _spec_for(name, leaf.shape, mesh, in_moe)
+
+    return jax.tree_util.tree_map_with_path(spec, params_tree)
+
+
+def zero1_specs(param_specs, params_tree, mesh: Mesh):
+    """Optimizer-moment specs: params' specs + 'data' on the largest
+    still-unsharded divisible axis (ZeRO-1 state sharding)."""
+    d = mesh.shape.get("data", 1)
+
+    def add_data(spec: P, leaf):
+        shape = leaf.shape
+        axes = list(spec) + [None] * (len(shape) - len(spec))
+        best, best_size = None, 0
+        for i, s in enumerate(shape):
+            if axes[i] is None and s % d == 0 and s >= d and s > best_size:
+                best, best_size = i, s
+        if best is not None and best_size >= 2 * d:
+            axes[best] = "data"
+        return P(*axes)
+
+    return jax.tree_util.tree_map(add_data, param_specs, params_tree)
+
+
+def batch_specs(cfg, batch_tree, mesh: Mesh) -> Dict:
+    """Batch inputs: leading batch axis over (pod, data) when divisible."""
+    dp = data_axes(mesh)
+    dp_extent = 1
+    for a in dp:
+        dp_extent *= mesh.shape[a]
+
+    def spec(leaf):
+        if leaf.shape and leaf.shape[0] % dp_extent == 0 and leaf.shape[0] >= dp_extent:
+            return P(dp)
+        return P()
+
+    return jax.tree_util.tree_map(spec, batch_tree)
+
+
+def cache_specs(cfg, cache_tree, mesh: Mesh) -> Dict:
+    """KV / recurrent caches. Leading axis is the scan group axis (never
+    sharded); then (batch, seq/cap, heads, dh). Priority: batch -> DP;
+    else cache sequence axis -> 'data' (SP for long-context, batch=1);
+    heads/feature axis -> 'model' when divisible."""
+    dp = data_axes(mesh)
+    dp_extent = 1
+    for a in dp:
+        dp_extent *= mesh.shape[a]
+    m = _model_extent(mesh)
+    data_extent = mesh.shape.get("data", 1)
+
+    def spec(leaf):
+        shape = leaf.shape
+        if len(shape) <= 1:  # (G,) scalars like idx
+            return P()
+        axes: list = [None] * len(shape)
+        # axis 1 = batch
+        if shape[1] % dp_extent == 0 and shape[1] >= dp_extent:
+            axes[1] = dp
+        elif len(shape) >= 3 and shape[2] % data_extent == 0 and shape[2] >= 4 * data_extent:
+            axes[2] = "data"  # SP over the cache length
+        # last axis / heads axis on model
+        for i in range(len(shape) - 1, 1, -1):
+            if axes[i] is None and shape[i] % m == 0 and shape[i] >= m:
+                axes[i] = "model"
+                break
+        return P(*axes)
+
+    return jax.tree_util.tree_map(spec, cache_tree)

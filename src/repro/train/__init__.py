@@ -1,0 +1,3 @@
+from .optimizer import AdamWConfig, adamw_init, adamw_update, lr_schedule  # noqa: F401
+from .train_step import make_train_step  # noqa: F401
+from .checkpoint import Checkpointer  # noqa: F401

@@ -1,0 +1,52 @@
+"""Train step factory: loss -> grads -> AdamW, with gradient-accumulation
+microbatching (a lax.scan over microbatches — constant memory in the number
+of accumulation steps) and donation-friendly signature."""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import loss_fn
+from .optimizer import AdamWConfig, adamw_update
+
+__all__ = ["make_train_step"]
+
+
+def make_train_step(cfg, opt_cfg: AdamWConfig, grad_accum: int = 1) -> Callable:
+    def compute_grads(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch), has_aux=True
+        )(params)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch) -> Tuple[Dict, Dict, Dict]:
+        if grad_accum <= 1:
+            loss, metrics, grads = compute_grads(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(grad_accum, b // grad_accum, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(acc, mb):
+                g_acc, l_acc = acc
+                loss, _, grads = compute_grads(params, mb)
+                g_acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+                return (g_acc, l_acc + loss), None
+
+            (g_sum, loss_sum), _ = jax.lax.scan(body, (zero, jnp.zeros(())), micro)
+            grads = jax.tree.map(lambda g: g / grad_accum, g_sum)
+            loss = loss_sum / grad_accum
+            metrics = {"ce": loss, "aux": jnp.zeros(())}
+
+        new_params, new_state, opt_metrics = adamw_update(
+            opt_cfg, grads, params, opt_state
+        )
+        out_metrics = {"loss": loss, **metrics, **opt_metrics}
+        return new_params, new_state, out_metrics
+
+    return train_step

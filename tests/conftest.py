@@ -1,0 +1,17 @@
+import jax
+import pytest
+
+# NOTE: no XLA_FLAGS device-count override here — smoke tests and benches see
+# the single real CPU device. Only launch/dryrun.py forces 512 host devices.
+
+
+@pytest.fixture(scope="session")
+def prf():
+    from repro.core.prf import setup_prf
+
+    return setup_prf(jax.random.PRNGKey(1))
+
+
+@pytest.fixture()
+def key():
+    return jax.random.PRNGKey(42)

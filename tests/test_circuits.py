@@ -1,0 +1,113 @@
+"""Unit + property tests for boolean circuits (comparisons, conversions)."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.circuits import (
+    a2b,
+    b2a,
+    bit2a,
+    eq,
+    eq_public,
+    gt_public,
+    ks_add,
+    le,
+    le_public,
+    lt,
+    lt_public,
+)
+from repro.core.ledger import measure_comm
+from repro.core.prf import setup_prf
+from repro.core.sharing import reveal_a, reveal_b, share_a, share_b
+
+PRF = setup_prf(jax.random.PRNGKey(1))
+rng = np.random.default_rng(1)
+
+
+def _pairs(n=96):
+    x = rng.integers(0, 2**32, n, dtype=np.uint32)
+    y = rng.integers(0, 2**32, n, dtype=np.uint32)
+    y[: n // 3] = x[: n // 3]  # force equal cases
+    return x, y
+
+
+def _b(x, tag=0):
+    return share_b(x, jax.random.PRNGKey(100 + tag))
+
+
+def test_eq_lt_le():
+    x, y = _pairs()
+    xb, yb = _b(x, 0), _b(y, 1)
+    assert (np.asarray(reveal_b(eq(xb, yb, PRF))) == (x == y)).all()
+    assert (np.asarray(reveal_b(lt(xb, yb, PRF))) == (x < y)).all()
+    assert (np.asarray(reveal_b(le(xb, yb, PRF))) == (x <= y)).all()
+
+
+def test_public_comparisons():
+    x, y = _pairs()
+    xb = _b(x, 0)
+    assert (np.asarray(reveal_b(eq_public(xb, y, PRF))) == (x == y)).all()
+    assert (np.asarray(reveal_b(lt_public(xb, y, PRF))) == (x < y)).all()
+    assert (np.asarray(reveal_b(le_public(xb, y, PRF))) == (x <= y)).all()
+    assert (np.asarray(reveal_b(gt_public(xb, y, PRF))) == (x > y)).all()
+
+
+def test_ks_add_and_conversions():
+    x, y = _pairs()
+    xb, yb = _b(x, 0), _b(y, 1)
+    assert (np.asarray(reveal_b(ks_add(xb, yb, PRF))) == x + y).all()
+    assert (np.asarray(reveal_a(b2a(xb, PRF))) == x).all()
+    xa = share_a(x, jax.random.PRNGKey(7))
+    assert (np.asarray(reveal_b(a2b(xa, PRF))) == x).all()
+    bits = (x & 1).astype(np.uint32)
+    assert (np.asarray(reveal_a(bit2a(_b(bits, 2), PRF))) == bits).all()
+
+
+def test_narrow_width_comparison():
+    x = rng.integers(0, 2**16, 64, dtype=np.uint32)
+    c = int(rng.integers(0, 2**16))
+    xb = _b(x, 3)
+    got = np.asarray(reveal_b(lt_public(xb, c, PRF, width=16)))
+    assert (got == (x < c)).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.lists(st.integers(0, 2**32 - 1), min_size=1, max_size=40),
+    st.integers(0, 2**32 - 2),
+)
+def test_property_compare_matches_plaintext(vals, c):
+    x = np.array(vals, dtype=np.uint32)
+    xb = _b(x, 4)
+    assert (np.asarray(reveal_b(lt_public(xb, c, PRF))) == (x < c)).all()
+    assert (np.asarray(reveal_b(eq_public(xb, c, PRF))) == (x == c)).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 2**32 - 1), min_size=1, max_size=40))
+def test_property_b2a_roundtrip(vals):
+    x = np.array(vals, dtype=np.uint32)
+    assert (np.asarray(reveal_a(b2a(_b(x, 5), PRF))) == x).all()
+
+
+def test_circuit_round_counts():
+    """Table 1 / DESIGN.md complexity table."""
+    x, y = _pairs(32)
+    xb, yb = _b(x, 0), _b(y, 1)
+    assert measure_comm(lambda a, b: eq(a, b, PRF), xb, yb)["rounds"] == 5
+    assert measure_comm(lambda a, b: lt(a, b, PRF), xb, yb)["rounds"] == 6
+    assert measure_comm(lambda a: lt_public(a, 5, PRF), xb)["rounds"] == 5
+    assert measure_comm(lambda a, b: ks_add(a, b, PRF), xb, yb)["rounds"] == 6
+    assert measure_comm(lambda a: b2a(a, PRF), xb)["rounds"] == 2
+    assert measure_comm(lambda a: a2b(a, PRF), share_a(x, jax.random.PRNGKey(0)))[
+        "rounds"
+    ] == 12
+
+
+def test_comm_bytes_linear_in_n():
+    for n in (64, 128, 256):
+        x = rng.integers(0, 2**32, n, dtype=np.uint32)
+        xb = _b(x, 6)
+        c = measure_comm(lambda a: eq_public(a, 3, PRF), xb)
+        assert c["bytes_per_party"] == 5 * 4 * n  # 5 AND-words/lane

@@ -1,0 +1,66 @@
+"""Tests: CRT metric (Eq. 1) and its empirical validation (§5.4)."""
+import jax
+import numpy as np
+
+from repro.core.crt import attacker_estimate, crt_rounds, sigma_s2, z_score
+from repro.core.noise import BetaNoise, ConstantNoise, TruncatedLaplace
+
+
+def test_z_score_matches_paper():
+    assert abs(z_score(0.999) - 3.291) < 1e-3
+
+
+def test_crt_orderings_match_paper_figures():
+    n, t = 1000, 50
+    beta_par = crt_rounds(BetaNoise(2, 6), "parallel", n, t)
+    tlap = TruncatedLaplace(0.5, 5e-5, 1.0)
+    tlap_par = crt_rounds(tlap, "parallel", n, t)
+    tlap_seq = crt_rounds(tlap, "sequential", n, t)
+    # Fig. 10a: parallel > sequential for narrow TLap; Fig. 11a: Beta > TLap
+    assert tlap_par > tlap_seq
+    assert beta_par > tlap_par
+
+
+def test_wide_tlap_closes_the_gap():
+    n, t = 10000, 500
+    wide = TruncatedLaplace(0.5, 5e-5, np.sqrt(n))  # b = 2 sqrt(N)
+    narrow = TruncatedLaplace(0.5, 5e-5, 1.0)
+    assert crt_rounds(wide, "sequential", n, t) > crt_rounds(narrow, "sequential", n, t)
+
+
+def test_error_margin_collapses_rounds():
+    """Fig. 11b: relaxing err from 1 tuple to 1% of N slashes r."""
+    n, t = 10000, 500
+    noise = TruncatedLaplace(0.5, 5e-5, 1.0)
+    r_tight = crt_rounds(noise, "parallel", n, t, err=1.0)
+    r_loose = crt_rounds(noise, "parallel", n, t, err=0.01 * n)
+    assert r_loose <= max(r_tight / 1000, 1.0)
+
+
+def test_constant_noise_is_trivially_recoverable():
+    # zero variance -> CRT = 1 round (the caveat the metric exposes)
+    assert crt_rounds(ConstantNoise(0.2), "sequential", 1000, 100) == 1.0
+
+
+def test_parallel_variance_law_of_total_variance():
+    n, t = 2000, 200
+    b = BetaNoise(2, 6)
+    free = n - t
+    a, bb = 2.0, 6.0
+    closed = free * a * bb * (a + bb + free) / ((a + bb) ** 2 * (a + bb + 1))
+    assert abs(sigma_s2(b, "parallel", n, t) - closed) / closed < 1e-9
+
+
+def test_attacker_simulation_validates_eq1():
+    """Run the Monte-Carlo attacker at r = CRT rounds: the estimate should be
+    within ~the error margin (statistically)."""
+    n, t = 5000, 250
+    noise = TruncatedLaplace(0.5, 5e-5, 10.0)
+    r = int(crt_rounds(noise, "sequential", n, t, err=5.0))
+    est = attacker_estimate(noise, "sequential", n, t, r, jax.random.PRNGKey(0))
+    assert est["abs_err"] < 15.0  # 3x margin for MC slack
+
+    # with far fewer rounds the estimate should typically be worse
+    est_few = attacker_estimate(noise, "sequential", n, t, max(r // 400, 2),
+                                jax.random.PRNGKey(1))
+    assert est_few["sigma_s_emp"] > 0

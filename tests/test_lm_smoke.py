@@ -1,0 +1,148 @@
+"""Per-architecture smoke tests: reduced config, one forward + train step +
+decode step on CPU, asserting output shapes and no NaNs (assignment req.)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import decode_step, forward, init_caches, init_params, loss_fn
+from repro.train import AdamWConfig, adamw_init, make_train_step
+
+
+def _batch(cfg, b=2, s=32):
+    out = {}
+    if cfg.input_mode == "embeddings":
+        if cfg.prefix_lm and cfg.n_prefix:
+            out["embeds"] = jnp.ones((b, cfg.n_prefix, cfg.d_model), jnp.float32) * 0.01
+            out["tokens"] = jnp.zeros((b, s - cfg.n_prefix), jnp.int32)
+            out["labels"] = jnp.ones((b, s - cfg.n_prefix), jnp.int32)
+        else:
+            out["embeds"] = jnp.ones((b, s, cfg.d_model), jnp.float32) * 0.01
+            out["labels"] = jnp.ones((b, s), jnp.int32)
+    else:
+        out["tokens"] = jnp.zeros((b, s), jnp.int32)
+        out["labels"] = jnp.ones((b, s), jnp.int32)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke(arch):
+    cfg = get_config(arch).reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+
+    logits, aux = forward(cfg, params, batch)
+    n_lab = batch["labels"].shape[1]
+    assert logits.shape[0] == 2 and logits.shape[2] == cfg.vocab_size
+    assert np.isfinite(np.asarray(logits)).all(), "NaN/inf logits"
+
+    # one real optimizer step
+    step = make_train_step(cfg, AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10))
+    params2, opt2, metrics = step(params, adamw_init(params), batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"])) and float(metrics["grad_norm"]) > 0
+
+    # params actually changed
+    diff = sum(
+        float(jnp.sum(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2))
+    )
+    assert diff > 0
+
+    # one decode step against a cache
+    caches = init_caches(cfg, 2, 64)
+    if cfg.input_mode == "embeddings" and not (cfg.prefix_lm and cfg.n_prefix):
+        tb = {"embeds": jnp.ones((2, 1, cfg.d_model), jnp.float32) * 0.01}
+    else:
+        tb = {"tokens": jnp.zeros((2, 1), jnp.int32)}
+    lg, caches2 = decode_step(cfg, params, caches, tb)
+    assert lg.shape == (2, 1, cfg.vocab_size)
+    assert np.isfinite(np.asarray(lg)).all()
+
+
+@pytest.mark.parametrize("arch", ["stablelm_1_6b", "mixtral_8x7b", "xlstm_1_3b"])
+def test_scan_equals_loop(arch):
+    """scan-over-layers must be numerically identical to the python loop."""
+    import dataclasses
+
+    cfg = get_config(arch).reduced()
+    cfg_scan = dataclasses.replace(cfg, scan_layers=True)
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    batch = _batch(cfg)
+    l1, _ = forward(cfg, params, batch)
+    l2, _ = forward(cfg_scan, params, batch)
+    # scan changes f32 fusion/reassociation inside the body: compare with an
+    # absolute tolerance sized to logit noise, not bitwise
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-3, atol=1e-3)
+
+
+def test_decode_matches_forward_full_attention():
+    """Greedy decode logits must match teacher-forced forward logits."""
+    cfg = get_config("stablelm_1_6b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(2))
+    b, s = 2, 12
+    toks = np.random.default_rng(0).integers(0, cfg.vocab_size, (b, s)).astype(np.int32)
+    full, _ = forward(cfg, params, {"tokens": jnp.asarray(toks)})
+
+    caches = init_caches(cfg, b, s + 4)
+    outs = []
+    for t in range(s):
+        lg, caches = decode_step(cfg, params, caches, {"tokens": jnp.asarray(toks[:, t : t + 1])})
+        outs.append(np.asarray(lg)[:, 0])
+    dec = np.stack(outs, axis=1)
+    np.testing.assert_allclose(dec, np.asarray(full), rtol=2e-3, atol=2e-3)
+
+
+def test_decode_matches_forward_recurrent():
+    """Same consistency for the RG-LRU/hybrid family."""
+    cfg = get_config("recurrentgemma_9b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(3))
+    b, s = 1, 10
+    toks = np.random.default_rng(1).integers(0, cfg.vocab_size, (b, s)).astype(np.int32)
+    full, _ = forward(cfg, params, {"tokens": jnp.asarray(toks)})
+    caches = init_caches(cfg, b, s + 4)
+    outs = []
+    for t in range(s):
+        lg, caches = decode_step(cfg, params, caches, {"tokens": jnp.asarray(toks[:, t : t + 1])})
+        outs.append(np.asarray(lg)[:, 0])
+    dec = np.stack(outs, axis=1)
+    np.testing.assert_allclose(dec, np.asarray(full), rtol=5e-3, atol=5e-3)
+
+
+def test_swa_mask_limits_context():
+    """With window w, logits at position t must not depend on tokens < t-w."""
+    import dataclasses
+
+    cfg = get_config("mixtral_8x7b").reduced()
+    cfg = dataclasses.replace(cfg, window=4, n_layers=1, block_pattern=("A",), scan_layers=False)
+    params = init_params(cfg, jax.random.PRNGKey(4))
+    rng = np.random.default_rng(2)
+    t1 = rng.integers(0, cfg.vocab_size, (1, 16)).astype(np.int32)
+    t2 = t1.copy()
+    t2[0, 0:4] = (t2[0, 0:4] + 1) % cfg.vocab_size  # change far-past tokens
+    l1, _ = forward(cfg, params, {"tokens": jnp.asarray(t1)})
+    l2, _ = forward(cfg, params, {"tokens": jnp.asarray(t2)})
+    # position 15 attends to [12..15] only -> unaffected by tokens 0..3
+    np.testing.assert_allclose(
+        np.asarray(l1)[0, -1], np.asarray(l2)[0, -1], rtol=1e-5, atol=1e-5
+    )
+    # but an early position IS affected
+    assert not np.allclose(np.asarray(l1)[0, 4], np.asarray(l2)[0, 4], atol=1e-5)
+
+
+def test_moe_capacity_policies():
+    from repro.models.moe import resolve_capacity
+
+    cfg = get_config("mixtral_8x7b").reduced()
+    n_tok = 512
+    full = resolve_capacity(
+        __import__("dataclasses").replace(cfg, capacity_policy="full"), n_tok
+    )
+    const = resolve_capacity(cfg, n_tok)
+    assert full == n_tok  # oblivious: nothing can drop
+    assert const < full  # reflex-style trim
+    tl = resolve_capacity(
+        __import__("dataclasses").replace(cfg, capacity_policy="reflex_tlap"), n_tok
+    )
+    assert const <= tl <= full or tl >= 8

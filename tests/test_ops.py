@@ -1,0 +1,146 @@
+"""Integration tests: oblivious operators vs. plaintext oracles."""
+import collections
+
+import jax
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.prf import setup_prf
+from repro.ops import (
+    Predicate,
+    SecretTable,
+    count_distinct,
+    count_valid,
+    oblivious_distinct,
+    oblivious_filter,
+    oblivious_groupby_count,
+    oblivious_join,
+    oblivious_orderby,
+    sum_column,
+)
+
+PRF = setup_prf(jax.random.PRNGKey(3))
+rng = np.random.default_rng(3)
+
+
+def _table(data, valid=None, seed=0):
+    return SecretTable.from_plaintext(data, jax.random.PRNGKey(seed), valid=valid)
+
+
+def test_filter_oblivious_size_invariant():
+    n = 48
+    t = {"a": rng.integers(0, 4, n).astype(np.uint32)}
+    tab = _table(t)
+    out = oblivious_filter(tab, [Predicate("a", "eq", 2)], PRF)
+    assert out.n == n  # no physical shrink
+    got = out.reveal()
+    assert (got["_valid"] == (t["a"] == 2)).all()
+
+
+def test_filter_multi_predicate():
+    n = 64
+    t = {
+        "a": rng.integers(0, 4, n).astype(np.uint32),
+        "b": rng.integers(0, 100, n).astype(np.uint32),
+        "c": rng.integers(0, 100, n).astype(np.uint32),
+    }
+    tab = _table(t)
+    preds = [
+        Predicate("a", "eq", 1),
+        Predicate("b", "lt", 60),
+        Predicate("c", "gt", 10),
+        Predicate("b", "le", "col:c"),
+    ]
+    out = oblivious_filter(tab, preds, PRF)
+    want = (t["a"] == 1) & (t["b"] < 60) & (t["c"] > 10) & (t["b"] <= t["c"])
+    assert (out.reveal()["_valid"] == want).all()
+
+
+def test_join_is_cartesian_sized_and_correct():
+    n1, n2 = 12, 9
+    l = {"pid": rng.integers(0, 5, n1).astype(np.uint32), "x": np.arange(n1, dtype=np.uint32)}
+    r = {"pid2": rng.integers(0, 5, n2).astype(np.uint32), "y": np.arange(n2, dtype=np.uint32)}
+    out = oblivious_join(_table(l, seed=1), _table(r, seed=2), ("pid", "pid2"), PRF)
+    assert out.n == n1 * n2
+    got = out.reveal_true_rows()
+    want = sorted(
+        (int(l["pid"][i]), int(l["x"][i]), int(r["y"][j]))
+        for i in range(n1)
+        for j in range(n2)
+        if l["pid"][i] == r["pid2"][j]
+    )
+    assert sorted(zip(got["pid"].tolist(), got["x"].tolist(), got["y"].tolist())) == want
+
+
+def test_join_respects_input_validity():
+    n1, n2 = 8, 8
+    l = {"pid": np.arange(n1, dtype=np.uint32) % 4}
+    r = {"pid2": np.arange(n2, dtype=np.uint32) % 4}
+    lv = np.zeros(n1, dtype=np.uint32); lv[:2] = 1
+    out = oblivious_join(_table(l, valid=lv, seed=3), _table(r, seed=4), ("pid", "pid2"), PRF)
+    got = out.reveal_true_rows()
+    assert set(got["pid"].tolist()) <= {0, 1}
+
+
+def test_groupby_count():
+    n = 40
+    k = rng.integers(0, 6, n).astype(np.uint32)
+    valid = (rng.random(n) < 0.75).astype(np.uint32)
+    out = oblivious_groupby_count(_table({"k": k}, valid=valid, seed=5), "k", PRF)
+    got = out.reveal()
+    mask = got["_valid"].astype(bool)
+    res = dict(zip(got["k"][mask].tolist(), got["cnt"][mask].tolist()))
+    want = dict(collections.Counter(k[valid.astype(bool)].tolist()))
+    assert res == want
+
+
+def test_orderby_limit():
+    n = 50
+    v = rng.integers(0, 500, n).astype(np.uint32)
+    valid = (rng.random(n) < 0.6).astype(np.uint32)
+    out = oblivious_orderby(_table({"v": v}, valid=valid, seed=6), "v", PRF,
+                            descending=True, limit=8)
+    got = out.reveal()
+    kept = got["v"][got["_valid"].astype(bool)]
+    want = np.sort(v[valid.astype(bool)])[::-1][:8]
+    assert (kept == want[: len(kept)]).all()
+
+
+def test_distinct_and_aggregates():
+    n = 36
+    pid = rng.integers(0, 9, n).astype(np.uint32)
+    valid = (rng.random(n) < 0.8).astype(np.uint32)
+    tab = _table({"pid": pid}, valid=valid, seed=7)
+    uniq = set(pid[valid.astype(bool)].tolist())
+
+    d = oblivious_distinct(tab, "pid", PRF)
+    assert sorted(d.reveal_true_rows()["pid"].tolist()) == sorted(uniq)
+
+    assert int(count_distinct(tab, "pid", PRF).reveal()["cnt"][0]) == len(uniq)
+    assert int(count_valid(tab, PRF).reveal()["cnt"][0]) == valid.sum()
+    assert int(sum_column(tab, "pid", PRF).reveal()["sum"][0]) == pid[valid.astype(bool)].sum()
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.lists(st.integers(0, 5), min_size=2, max_size=24),
+    st.lists(st.integers(0, 5), min_size=2, max_size=12),
+)
+def test_property_join_count_matches_plaintext(lk, rk):
+    l = {"k": np.array(lk, dtype=np.uint32)}
+    r = {"k2": np.array(rk, dtype=np.uint32)}
+    out = oblivious_join(_table(l, seed=8), _table(r, seed=9), ("k", "k2"), PRF)
+    got = int(out.reveal()["_valid"].sum())
+    want = sum(1 for a in lk for b in rk if a == b)
+    assert got == want
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.integers(0, 8), min_size=1, max_size=32))
+def test_property_groupby_total_equals_rows(ks):
+    k = np.array(ks, dtype=np.uint32)
+    out = oblivious_groupby_count(_table({"k": k}, seed=10), "k", PRF)
+    got = out.reveal()
+    mask = got["_valid"].astype(bool)
+    assert got["cnt"][mask].sum() == len(ks)  # counts partition the rows
+    assert mask.sum() == len(set(ks))  # one representative per group

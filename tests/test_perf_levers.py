@@ -1,0 +1,127 @@
+"""Correctness tests for the §Perf optimization levers: every beyond-paper
+optimization must be numerically equivalent (or bounded-error for lossy ones)
+to the baseline implementation."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import decode_step, forward, init_caches, init_params
+from repro.models.moe import moe_apply, moe_init
+
+
+def test_moe_gather_equals_einsum():
+    cfg = get_config("mixtral_8x7b").reduced()
+    params = moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model), jnp.float32) * 0.1
+    for cap_factor in (1.25, 0.5):  # with and without drops
+        c = dataclasses.replace(cfg, capacity_factor=cap_factor)
+        y1, a1 = moe_apply(params, dataclasses.replace(c, moe_impl="einsum"), x)
+        y2, a2 = moe_apply(params, dataclasses.replace(c, moe_impl="gather"), x)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-4, atol=1e-5)
+        assert float(a1) == float(a2)
+
+
+@pytest.mark.parametrize("arch", ["stablelm_1_6b", "minicpm3_4b", "mixtral_8x7b", "paligemma_3b"])
+def test_chunked_attention_equals_dense(arch):
+    cfg = get_config(arch).reduced()
+    cfg = dataclasses.replace(cfg, attn_chunk=16, window=8 if cfg.window else None)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    s = 40
+    if cfg.input_mode == "embeddings" and cfg.prefix_lm:
+        batch = {
+            "embeds": jax.random.normal(
+                jax.random.PRNGKey(1), (2, cfg.n_prefix, cfg.d_model)
+            ) * 0.05,
+            "tokens": jnp.arange(2 * (s - cfg.n_prefix), dtype=jnp.int32).reshape(2, -1)
+            % cfg.vocab_size,
+        }
+    else:
+        batch = {"tokens": jnp.arange(2 * s, dtype=jnp.int32).reshape(2, s) % cfg.vocab_size}
+    l1, _ = forward(dataclasses.replace(cfg, attn_impl="dense"), params, batch)
+    l2, _ = forward(dataclasses.replace(cfg, attn_impl="chunked"), params, batch)
+    assert np.isfinite(np.asarray(l2)).all()
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=2e-3, atol=2e-3)
+
+
+def test_int8_kv_cache_decode_accuracy():
+    cfg = get_config("stablelm_1_6b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(2))
+    b, s = 2, 12
+    toks = np.random.default_rng(0).integers(0, cfg.vocab_size, (b, s)).astype(np.int32)
+    full, _ = forward(cfg, params, {"tokens": jnp.asarray(toks)})
+    cfgq = dataclasses.replace(cfg, kv_quant=True)
+    caches = init_caches(cfgq, b, s + 4)
+    assert caches["0"]["k"].dtype == jnp.int8
+    outs = []
+    for t in range(s):
+        lg, caches = decode_step(cfgq, params, caches, {"tokens": jnp.asarray(toks[:, t : t + 1])})
+        outs.append(np.asarray(lg)[:, 0])
+    dec = np.stack(outs, axis=1)
+    assert np.abs(dec - np.asarray(full)).max() < 0.15
+    assert (dec.argmax(-1) == np.asarray(full).argmax(-1)).mean() > 0.95
+
+
+def test_bf16_decode_scores_close():
+    cfg = get_config("stablelm_1_6b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(3))
+    b = 2
+    caches1 = init_caches(cfg, b, 16)
+    cfg2 = dataclasses.replace(cfg, decode_score_dtype="bf16")
+    caches2 = init_caches(cfg2, b, 16)
+    tok = {"tokens": jnp.zeros((b, 1), jnp.int32)}
+    for _ in range(4):
+        l1, caches1 = decode_step(cfg, params, caches1, tok)
+        l2, caches2 = decode_step(cfg2, params, caches2, tok)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=0.1)
+
+
+def test_ce_einsum_equals_gather():
+    from repro.models.lm import loss_fn
+
+    cfg = get_config("stablelm_1_6b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(4))
+    batch = {
+        "tokens": jnp.arange(64, dtype=jnp.int32).reshape(2, 32) % cfg.vocab_size,
+        "labels": jnp.arange(64, dtype=jnp.int32).reshape(2, 32) % cfg.vocab_size,
+    }
+    l1, _ = loss_fn(dataclasses.replace(cfg, ce_impl="gather"), params, batch)
+    l2, _ = loss_fn(dataclasses.replace(cfg, ce_impl="einsum"), params, batch)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+
+
+def test_engine_jit_matches_eager():
+    """The per-op jit cache (engine §Perf optimization) is semantics-neutral.
+
+    Uses a sort-free plan: XLA-CPU compiles of bitonic networks take minutes
+    (the very reason jit_ops defaults to False for one-shot queries)."""
+    from repro.data import generate_healthlnk
+    from repro.engine import Engine
+    from repro.ops.filter import Predicate
+    from repro.plan.nodes import CountValid, Filter, Join, Scan
+
+    tables, plain = generate_healthlnk(n=12, seed=3, aspirin_frac=0.4, icd_heart_frac=0.3)
+    plan = CountValid(
+        Join(
+            Filter(Scan("diagnoses"), [Predicate("icd9", "eq", 414)]),
+            Filter(Scan("medications"), [Predicate("med", "eq", 1)]),
+            ("pid", "pid"),
+        )
+    )
+    outs = []
+    for jit_ops in (False, True):
+        eng = Engine(tables, key=jax.random.PRNGKey(5), jit_ops=jit_ops)
+        out, rep = eng.execute(plan)
+        outs.append(int(out.reveal_true_rows()["cnt"][0]))
+        assert rep.total_bytes > 0  # ledger replay works under jit too
+    d, m = plain["diagnoses"], plain["medications"]
+    want = sum(
+        1
+        for i in range(len(d["pid"]))
+        for j in range(len(m["pid"]))
+        if d["pid"][i] == m["pid"][j] and d["icd9"][i] == 414 and m["med"][j] == 1
+    )
+    assert outs[0] == outs[1] == want

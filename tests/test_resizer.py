@@ -1,0 +1,153 @@
+"""Tests: the Resizer operator — correctness, noise semantics, coin bias."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ledger import CommLedger
+from repro.core.noise import (
+    BetaNoise,
+    ConstantNoise,
+    NoTrim,
+    RevealNoise,
+    TruncatedLaplace,
+    UniformNoise,
+    shrinkwrap_default,
+)
+from repro.core.prf import setup_prf
+from repro.core.resizer import Resizer, ResizerConfig, oracle_true_count
+from repro.ops import SecretTable
+
+PRF = setup_prf(jax.random.PRNGKey(4))
+rng = np.random.default_rng(4)
+
+
+def _tab(n=256, sel=0.2, seed=0):
+    vals = rng.integers(0, 1000, n).astype(np.uint32)
+    valid = (rng.random(n) < sel).astype(np.uint32)
+    t = SecretTable.from_plaintext({"v": vals}, jax.random.PRNGKey(seed), valid=valid)
+    return t, vals, valid
+
+
+def _true_set(vals, valid):
+    return sorted(vals[valid.astype(bool)].tolist())
+
+
+@pytest.mark.parametrize("addition", ["parallel", "sequential"])
+@pytest.mark.parametrize("noise", [BetaNoise(2, 6), UniformNoise(0, 0.5), ConstantNoise(0.1)])
+def test_resize_preserves_true_rows(addition, noise):
+    tab, vals, valid = _tab()
+    cfg = ResizerConfig(noise=noise, addition=addition)
+    out, info = Resizer(cfg)(tab, PRF, jax.random.PRNGKey(11))
+    d = out.reveal()
+    assert _true_set(d["v"], d["_valid"]) == _true_set(vals, valid)
+    assert info["t"] <= info["s"] <= tab.n
+    assert out.n == info["s_padded"]
+
+
+def test_sequential_is_exact():
+    tab, vals, valid = _tab()
+    t = int(valid.sum())
+    cfg = ResizerConfig(noise=ConstantNoise(0.08), addition="sequential")
+    out, info = Resizer(cfg)(tab, PRF, jax.random.PRNGKey(12))
+    assert info["s"] == t + info["eta"]
+
+
+def test_reveal_mode_trims_everything():
+    tab, vals, valid = _tab()
+    out, info = Resizer(ResizerConfig(noise=RevealNoise()))(tab, PRF, jax.random.PRNGKey(13))
+    assert info["s"] == int(valid.sum())
+    d = out.reveal()
+    assert d["_valid"][: info["s"]].sum() == info["s"]
+
+
+def test_notrim_is_identity():
+    tab, _, _ = _tab()
+    out, info = Resizer(ResizerConfig(noise=NoTrim()))(tab, PRF, jax.random.PRNGKey(14))
+    assert out.n == tab.n and info.get("skipped")
+
+
+def test_bucketing_rounds_up():
+    tab, _, valid = _tab()
+    cfg = ResizerConfig(noise=RevealNoise(), bucket=32)
+    out, info = Resizer(cfg)(tab, PRF, jax.random.PRNGKey(15))
+    assert out.n % 32 == 0 and out.n >= info["s"]
+    # padded rows are invalid
+    d = out.reveal()
+    assert d["_valid"].sum() == int(valid.sum())
+
+
+def test_output_order_is_unlinked_from_input():
+    """After shuffle+trim, surviving true rows must not keep input order
+    (linkage mitigation, §4.4). Probabilistic: 64 rows, P(identity) ~ 0."""
+    n = 64
+    vals = np.arange(n, dtype=np.uint32)
+    tab = SecretTable.from_plaintext({"v": vals}, jax.random.PRNGKey(1))
+    out, _ = Resizer(ResizerConfig(noise=NoTrim()))(tab, PRF, jax.random.PRNGKey(16))
+    # NoTrim skips; use Uniform full-keep instead
+    out, _ = Resizer(ResizerConfig(noise=UniformNoise(0.99, 1.0)))(
+        tab, PRF, jax.random.PRNGKey(17)
+    )
+    d = out.reveal()
+    kept = d["v"][d["_valid"].astype(bool)]
+    assert not np.array_equal(kept, np.sort(kept))
+
+
+def test_coin_bias_paper_vs_corrected():
+    """Algorithm 2 as written is Irwin-Hall-biased; corrected mode is exact."""
+    n, sel, p = 512, 0.1, 0.3
+
+    class FixedP(BetaNoise):
+        def sample_p(self, key, n, t):
+            return p
+
+    tab, vals, valid = _tab(n, sel, seed=21)
+    t = int(valid.sum())
+    free = n - t
+    s_corr, s_paper = [], []
+    for i in range(20):
+        _, ic = Resizer(ResizerConfig(noise=FixedP(), coin_mode="corrected"))(
+            tab, PRF, jax.random.PRNGKey(300 + i)
+        )
+        _, ip = Resizer(ResizerConfig(noise=FixedP(), coin_mode="paper"))(
+            tab, PRF, jax.random.PRNGKey(400 + i)
+        )
+        s_corr.append(ic["s"])
+        s_paper.append(ip["s"])
+    p_corr = (np.mean(s_corr) - t) / free
+    p_paper = (np.mean(s_paper) - t) / free
+    ih3 = (3 * p) ** 3 / 6  # Irwin-Hall(3) CDF below 1
+    assert abs(p_corr - p) < 0.06
+    assert abs(p_paper - ih3) < 0.06
+    assert p_paper < p_corr  # the bias direction
+
+
+def test_tlap_calibration_matches_paper_example():
+    tl = shrinkwrap_default(sensitivity=1000)
+    # paper §4.3: eps=0.5, delta=5e-5, sens=1000 -> average noise ~18336
+    assert abs(tl.mean(10**9, 0) - 18336) / 18336 < 0.01
+
+
+def test_resizer_comm_linear_in_n():
+    costs = {}
+    for n in (128, 256):
+        tab, _, _ = _tab(n, seed=30)
+        cfg = ResizerConfig(noise=ConstantNoise(0.1))
+        with CommLedger() as led:
+            Resizer(cfg)(tab, PRF, jax.random.PRNGKey(31))
+        costs[n] = led.tally()["bytes_per_party"]
+    ratio = costs[256] / costs[128]
+    assert 1.8 < ratio < 2.2  # O(N)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(10, 60), st.floats(0.05, 0.9))
+def test_property_s_bounds(n, sel):
+    vals = rng.integers(0, 100, n).astype(np.uint32)
+    valid = (rng.random(n) < sel).astype(np.uint32)
+    tab = SecretTable.from_plaintext({"v": vals}, jax.random.PRNGKey(5), valid=valid)
+    t = int(valid.sum())
+    out, info = Resizer(ResizerConfig(noise=BetaNoise(2, 6)))(
+        tab, PRF, jax.random.PRNGKey(6)
+    )
+    assert t <= info["s"] <= n  # T <= S = T + eta <= N (paper §3.2)

@@ -1,0 +1,106 @@
+"""Unit tests: RSS share algebra and the interactive gates."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.ledger import measure_comm
+from repro.core.prf import setup_prf, zero_share_add, zero_share_xor
+from repro.core.ring import RING32
+from repro.core.sharing import (
+    AShare,
+    BShare,
+    and_,
+    const_a,
+    const_b,
+    mul,
+    or_,
+    reveal_a,
+    reveal_b,
+    select,
+    share_a,
+    share_b,
+)
+
+rng = np.random.default_rng(0)
+
+
+def _u32(n):
+    return rng.integers(0, 2**32, size=(n,), dtype=np.uint32)
+
+
+def test_share_reveal_roundtrip(prf, key):
+    x = _u32(257)
+    assert (np.asarray(reveal_a(share_a(x, key))) == x).all()
+    assert (np.asarray(reveal_b(share_b(x, key))) == x).all()
+
+
+def test_shares_individually_uniformish(key):
+    # no single share leg should equal the secret (they're masked)
+    x = np.zeros(4096, dtype=np.uint32)
+    sh = share_a(x, key)
+    for i in range(3):
+        leg = np.asarray(sh.shares[i])
+        assert (leg != 0).mean() > 0.99
+
+
+def test_linear_ops(prf, key):
+    x, y = _u32(64), _u32(64)
+    xa, ya = share_a(x, key), share_a(y, jax.random.fold_in(key, 1))
+    assert (np.asarray(reveal_a(xa + ya)) == x + y).all()
+    assert (np.asarray(reveal_a(xa - ya)) == x - y).all()
+    assert (np.asarray(reveal_a(xa.add_public(7))) == x + 7).all()
+    assert (np.asarray(reveal_a(xa.mul_public(3))) == x * 3).all()
+    assert (np.asarray(reveal_a(-xa)) == (0 - x.astype(np.uint64)).astype(np.uint32)).all()
+    assert (np.asarray(reveal_a(xa.sum())) == x.sum(dtype=np.uint32)).all()
+    assert (np.asarray(reveal_a(xa.cumsum())) == np.cumsum(x, dtype=np.uint32)).all()
+
+
+def test_mul_and_gates(prf, key):
+    x, y = _u32(128), _u32(128)
+    xa, ya = share_a(x, key), share_a(y, jax.random.fold_in(key, 1))
+    assert (np.asarray(reveal_a(mul(xa, ya, prf))) == x * y).all()
+    xb, yb = share_b(x, key), share_b(y, jax.random.fold_in(key, 1))
+    assert (np.asarray(reveal_b(and_(xb, yb, prf))) == (x & y)).all()
+    assert (np.asarray(reveal_b(or_(xb, yb, prf))) == (x | y)).all()
+
+
+def test_select(prf, key):
+    x, y = _u32(64), _u32(64)
+    bits = rng.integers(0, 2, 64).astype(np.uint32)
+    xb, yb = share_b(x, key), share_b(y, jax.random.fold_in(key, 1))
+    bb = share_b(bits, jax.random.fold_in(key, 2))
+    out = reveal_b(select(bb.lsb_mask(), xb, yb, prf))
+    assert (np.asarray(out) == np.where(bits == 1, x, y)).all()
+
+
+def test_zero_sharings(prf):
+    za = zero_share_add(prf, (100,), RING32)
+    assert (np.asarray(za[0] + za[1] + za[2]) == 0).all()
+    zx = zero_share_xor(prf, (100,), RING32)
+    assert (np.asarray(zx[0] ^ zx[1] ^ zx[2]) == 0).all()
+    # fresh counters give fresh randomness
+    za2 = zero_share_add(prf.fold(1), (100,), RING32)
+    assert not (np.asarray(za[0]) == np.asarray(za2[0])).all()
+
+
+def test_const_shares():
+    assert (np.asarray(reveal_a(const_a(5, (4,)))) == 5).all()
+    assert (np.asarray(reveal_b(const_b(5, (4,)))) == 5).all()
+
+
+def test_mul_comm_cost(prf, key):
+    x = share_a(_u32(64), key)
+    c = measure_comm(lambda a: mul(a, a, prf), x)
+    assert c == {"bytes_per_party": 64 * 4, "rounds": 1}
+
+
+def test_structural_ops(key):
+    x = _u32(24)
+    xa = share_a(x, key)
+    assert (np.asarray(reveal_a(xa.reshape(4, 6))) == x.reshape(4, 6)).all()
+    assert (np.asarray(reveal_a(xa[3:7])) == x[3:7]).all()
+    idx = np.array([3, 1, 2])
+    assert (np.asarray(reveal_a(xa.take(idx))) == x[idx]).all()
+    padded = xa.pad_rows(30)
+    r = np.asarray(reveal_a(padded))
+    assert (r[:24] == x).all() and (r[24:] == 0).all()

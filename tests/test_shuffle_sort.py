@@ -1,0 +1,91 @@
+"""Tests: secure shuffle (linkage, multiset, comm) and bitonic sort."""
+import jax
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ledger import measure_comm
+from repro.core.prf import setup_prf
+from repro.core.sharing import reveal_b, share_b
+from repro.core.shuffle import composed_permutation, secure_shuffle
+from repro.core.sort import bitonic_sort, sort_valid_first
+
+PRF = setup_prf(jax.random.PRNGKey(2))
+rng = np.random.default_rng(2)
+
+
+def _cols(n, seed=0):
+    k = rng.integers(0, 1000, n).astype(np.uint32)
+    p = rng.integers(0, 2**32, n, dtype=np.uint32)
+    return k, p, {
+        "k": share_b(k, jax.random.PRNGKey(seed)),
+        "p": share_b(p, jax.random.PRNGKey(seed + 1)),
+    }
+
+
+def test_shuffle_applies_hidden_common_permutation():
+    n = 64
+    k, p, cols = _cols(n)
+    out = secure_shuffle(cols, PRF)
+    ko, po = np.asarray(reveal_b(out["k"])), np.asarray(reveal_b(out["p"]))
+    pi = np.asarray(composed_permutation(PRF, n))
+    assert (ko == k[pi]).all() and (po == p[pi]).all()
+
+
+def test_shuffle_rerandomizes_shares():
+    n = 32
+    k, p, cols = _cols(n)
+    out = secure_shuffle(cols, PRF)
+    pi = np.asarray(composed_permutation(PRF, n))
+    # values moved, but every share leg must be freshly masked (not a pure
+    # permutation of the old legs — otherwise parties could link rows)
+    old = np.asarray(cols["k"].shares[0])
+    new = np.asarray(out["k"].shares[0])
+    assert not np.array_equal(np.sort(old), np.sort(new))
+
+
+def test_shuffle_comm_is_constant_rounds_linear_bytes():
+    for n in (64, 128):
+        _, _, cols = _cols(n)
+        c = measure_comm(lambda cc: secure_shuffle(cc, PRF), cols)
+        assert c["rounds"] == 3
+        assert c["bytes_per_party"] == 3 * n * 8  # 2 cols x 4B x 3 hops
+
+
+def test_bitonic_sort_matches_numpy():
+    n = 256
+    k, p, cols = _cols(n)
+    out = bitonic_sort(cols, "k", PRF)
+    ks = np.asarray(reveal_b(out["k"]))
+    ps = np.asarray(reveal_b(out["p"]))
+    assert (ks == np.sort(k)).all()
+    assert sorted(zip(ks.tolist(), ps.tolist())) == sorted(zip(k.tolist(), p.tolist()))
+
+
+def test_bitonic_sort_descending():
+    n = 64
+    k, _, cols = _cols(n)
+    out = bitonic_sort(cols, "k", PRF, descending=True)
+    ks = np.asarray(reveal_b(out["k"]))
+    assert (ks == np.sort(k)[::-1]).all()
+
+
+def test_sort_valid_first():
+    n = 128
+    v = (rng.random(n) < 0.4).astype(np.uint32)
+    cols = {"v": share_b(v, jax.random.PRNGKey(5))}
+    out = sort_valid_first(cols, "v", PRF)
+    vo = np.asarray(reveal_b(out["v"]))
+    t = int(v.sum())
+    assert (vo[:t] == 1).all() and (vo[t:] == 0).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 6))
+def test_property_sort_is_permutation(logn):
+    n = 1 << logn
+    k = rng.integers(0, 50, n).astype(np.uint32)
+    cols = {"k": share_b(k, jax.random.PRNGKey(9))}
+    out = bitonic_sort(cols, "k", PRF)
+    ks = np.asarray(reveal_b(out["k"]))
+    assert sorted(ks.tolist()) == sorted(k.tolist())
+    assert (np.diff(ks.astype(np.int64)) >= 0).all()

@@ -1,7 +1,22 @@
 """Pallas kernel micro-bench: interpret-mode vs jnp-reference wall time (CPU
-numbers are correctness-path only; BlockSpecs target TPU v5e VMEM)."""
+numbers are correctness-path only; BlockSpecs target TPU v5e VMEM), plus the
+fused-circuit and lazy-join sweeps introduced with the single-launch kernel
+layer. Emits ``BENCH_circuits.json`` at the repo root so the circuit/join
+perf trajectory is tracked PR-over-PR:
+
+* ``lt_public`` / ``a2b`` at N = 2^16: kernel launches, wall time, and ledger
+  tallies for the fused vs gate-by-gate paths (tallies must be identical —
+  comm is protocol-determined);
+* join sweep over payload width: intermediate bytes of the lazy
+  (O(N1*N2 + S*cols)) vs eager (O(N1*N2*cols)) join, and the largest payload
+  gather the Resizer realizes (== S for the lazy path).
+"""
 from __future__ import annotations
 
+import json
+import os
+
+import jax
 import numpy as np
 
 from repro.kernels.bitonic_stage.ops import stage_swap
@@ -11,6 +26,116 @@ from repro.kernels.shuffle_gather.ops import gather_rows
 from .common import emit, timeit
 
 N = 8192
+N_CIRCUIT = 1 << 16
+JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_circuits.json")
+
+
+def _bench_fused_circuits(rows, out):
+    from repro.core.circuits import a2b, lt_public
+    from repro.core.ledger import CommLedger
+    from repro.core.prf import setup_prf
+    from repro.core.sharing import share_a, share_b
+    from repro.kernels import (
+        launch_counts,
+        override_fusion,
+        override_kernels,
+        reset_launch_counts,
+        total_launches,
+    )
+
+    rng = np.random.default_rng(1)
+    prf = setup_prf(jax.random.PRNGKey(1))
+    x = rng.integers(0, 2**32, N_CIRCUIT, dtype=np.uint32)
+    xb = share_b(x, jax.random.PRNGKey(2))
+    xa = share_a(x, jax.random.PRNGKey(3))
+
+    cases = {
+        "lt_public": lambda: lt_public(xb, 0x1234_5678, prf),
+        "a2b": lambda: a2b(xa, prf),
+    }
+    for name, fn in cases.items():
+        entry = {"n": N_CIRCUIT}
+        for fused in (True, False):
+            tag = "fused" if fused else "unfused"
+            with override_kernels(True), override_fusion(fused):
+                reset_launch_counts()
+                with CommLedger() as led:
+                    jax.block_until_ready(fn().shares)
+                entry[f"launches_{tag}"] = total_launches()
+                entry[f"launch_kinds_{tag}"] = launch_counts()
+                entry[f"ledger_{tag}"] = led.tally()
+                dt = timeit(fn)
+            rows.append((f"circuit_{name}_{tag}", dt * 1e6, f"n={N_CIRCUIT}"))
+            entry[f"us_{tag}"] = dt * 1e6
+        entry["launch_reduction"] = entry["launches_unfused"] / max(
+            entry["launches_fused"], 1
+        )
+        entry["ledger_identical"] = entry["ledger_fused"] == entry["ledger_unfused"]
+        out[name] = entry
+        rows.append(
+            (
+                f"circuit_{name}_launches",
+                0.0,
+                f"{entry['launches_unfused']}->{entry['launches_fused']}"
+                f" ({entry['launch_reduction']:.1f}x)"
+                f" ledger_identical={entry['ledger_identical']}",
+            )
+        )
+
+
+def _bench_join_sweep(rows, out):
+    from repro.core.noise import ConstantNoise
+    from repro.core.prf import setup_prf
+    from repro.core.resizer import Resizer, ResizerConfig
+    from repro.ops import SecretTable, oblivious_join
+    from repro.ops.table import gather_log, reset_gather_log, table_nbytes
+
+    rng = np.random.default_rng(2)
+    prf = setup_prf(jax.random.PRNGKey(4))
+    n1 = n2 = 64
+    sweep = []
+    for n_cols in (1, 2, 4, 8):
+        l = {"k": rng.integers(0, 16, n1).astype(np.uint32)}
+        r = {"k2": rng.integers(0, 16, n2).astype(np.uint32)}
+        for c in range(n_cols):
+            l[f"lp{c}"] = rng.integers(0, 1000, n1).astype(np.uint32)
+            r[f"rp{c}"] = rng.integers(0, 1000, n2).astype(np.uint32)
+
+        def make():
+            return (
+                SecretTable.from_plaintext(l, jax.random.PRNGKey(5)),
+                SecretTable.from_plaintext(r, jax.random.PRNGKey(6)),
+            )
+
+        entry = {"n1": n1, "n2": n2, "payload_cols": 2 * n_cols}
+        resizer = Resizer(ResizerConfig(noise=ConstantNoise(0.05)))
+        for lazy in (True, False):
+            tag = "lazy" if lazy else "eager"
+            lt, rt = make()
+
+            def pipeline(lt=lt, rt=rt, lazy=lazy):
+                j = oblivious_join(lt, rt, ("k", "k2"), prf, lazy=lazy)
+                return resizer(j, prf, jax.random.PRNGKey(7))[0]
+
+            lt2, rt2 = make()
+            joined = oblivious_join(lt2, rt2, ("k", "k2"), prf, lazy=lazy)
+            entry[f"join_bytes_{tag}"] = table_nbytes(joined)
+            reset_gather_log()
+            trimmed = resizer(joined, prf, jax.random.PRNGKey(7))[0]
+            entry[f"trimmed_bytes_{tag}"] = table_nbytes(trimmed)
+            entry[f"max_gather_rows_{tag}"] = max(gather_log(), default=0)
+            entry[f"s_{tag}"] = trimmed.n
+            dt = timeit(pipeline, repeats=1)
+            entry[f"us_{tag}"] = dt * 1e6
+            rows.append(
+                (
+                    f"join_resize_{tag}_cols{2 * n_cols}",
+                    dt * 1e6,
+                    f"join_bytes={entry[f'join_bytes_{tag}']}",
+                )
+            )
+        sweep.append(entry)
+    out["join_sweep"] = sweep
 
 
 def run():
@@ -36,6 +161,12 @@ def run():
     for use in (True, False):
         dt = timeit(lambda: stage_swap(mask, own, other, alc, use_kernel=use))
         rows.append((f"kernel_bitonic_stage_{'pallas' if use else 'jnp'}", dt * 1e6, f"n={N}"))
+
+    artifact = {}
+    _bench_fused_circuits(rows, artifact)
+    _bench_join_sweep(rows, artifact)
+    with open(JSON_PATH, "w") as f:
+        json.dump(artifact, f, indent=2, sort_keys=True)
     return rows
 
 

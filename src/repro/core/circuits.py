@@ -19,12 +19,22 @@ bit2a           2                         2 (ring mults)
 b2a             2 (parallel bits)         2k
 a2b             2 ks_add          (12)    2 + 4 log2 k      (22)
 ==============  ========================  ==========================
+
+Execution paths: when ``repro.kernels.fusion_enabled()``, the gate loops route
+through the single-launch fused Pallas kernels (``ks_prefix`` for the
+Kogge-Stone levels and the equality AND-fold, ``a2b_fused`` for the full
+conversion / bit injection) — one kernel dispatch instead of one ``rss_gate``
+dispatch per level. The fused wrappers derive the per-level zero-sharings with
+the *same* PRF folds and log the *same* per-gate ledger entries as the
+gate-by-gate path below, so shares and (rounds, bytes/party) are bit-identical
+across paths; only launch count and memory traffic change (DESIGN.md §7).
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from .ledger import active_ledger, log_comm
+from ..kernels import fusion_enabled
+from .ledger import active_ledger, fused_scope, log_comm
 from .prf import PRFSetup
 from .sharing import AShare, BShare, and_, mul
 
@@ -45,12 +55,7 @@ __all__ = [
 
 
 def _fused(name: str, rounds: int):
-    led = active_ledger()
-    if led is None:
-        import contextlib
-
-        return contextlib.nullcontext()
-    return led.fused(name, rounds)
+    return fused_scope(name, rounds)
 
 
 def _and_pair(a1: BShare, b1: BShare, a2: BShare, b2: BShare, prf: PRFSetup):
@@ -67,6 +72,10 @@ def _and_pair(a1: BShare, b1: BShare, a2: BShare, b2: BShare, prf: PRFSetup):
 
 def _and_reduce_bits(v: BShare, prf: PRFSetup, width: int) -> BShare:
     """AND all ``width`` bits of each lane into the LSB (log2(width) rounds)."""
+    if fusion_enabled():
+        from ..kernels.ks_prefix.ops import and_fold_fused
+
+        return and_fold_fused(v, prf, width).and_public(v.ring.const(1))
     d = width // 2
     while d >= 1:
         v = and_(v, v >> d, prf.fold(d))
@@ -94,19 +103,31 @@ def eq_public(x: BShare, c, prf: PRFSetup, width: int | None = None) -> BShare:
 # Comparison: unsigned borrow-lookahead (Kogge-Stone prefix)
 # -----------------------------------------------------------------------------
 
+def _ks_levels(
+    g: BShare, p: BShare, prf: PRFSetup, width: int, fold_base: int
+) -> BShare:
+    """All Kogge-Stone levels of the (g, p) prefix recurrence; returns the
+    final g. One fused kernel launch, or one batched AND pair per level."""
+    if fusion_enabled():
+        from ..kernels.ks_prefix.ops import ks_levels_fused
+
+        return ks_levels_fused(g, p, prf, width, fold_base)
+    d = 1
+    while d < width:
+        pg, pp = _and_pair(p, g << d, p, p << d, prf.fold(fold_base + d))
+        g = g ^ pg
+        p = pp
+        d *= 2
+    return g
+
+
 def _borrow_prefix(g: BShare, p: BShare, prf: PRFSetup, width: int) -> BShare:
     """Inclusive prefix of the borrow recurrence B_j = g_j | (p_j & B_{j-1}).
 
     g and p are bit-disjoint so | == ^. Each Kogge-Stone level performs two
     independent ANDs, batched into one round.
     """
-    d = 1
-    while d < width:
-        pg, pp = _and_pair(p, g << d, p, p << d, prf.fold(100 + d))
-        g = g ^ pg
-        p = pp
-        d *= 2
-    return g
+    return _ks_levels(g, p, prf, width, fold_base=100)
 
 
 def lt(x: BShare, y: BShare, prf: PRFSetup, width: int | None = None) -> BShare:
@@ -175,12 +196,7 @@ def ks_add(x: BShare, y: BShare, prf: PRFSetup, width: int | None = None) -> BSh
     with _fused("ks_add", rounds=1 + levels):
         g = and_(x, y, prf.fold(11))
         p = x ^ y
-        d = 1
-        while d < width:
-            pg, pp = _and_pair(p, g << d, p, p << d, prf.fold(200 + d))
-            g = g ^ pg
-            p = pp
-            d *= 2
+        g = _ks_levels(g, p, prf, width, fold_base=200)
         carry = g << 1
         return x ^ y ^ carry
 
@@ -209,6 +225,10 @@ def bit2a(b: BShare, prf: PRFSetup) -> AShare:
     """
     ring = b.ring
     with _fused("bit2a", rounds=2):
+        if fusion_enabled():
+            from ..kernels.a2b_fused.ops import bit2a_fused
+
+            return bit2a_fused(b, prf)
         bits = b.shares & ring.const(1)
         a0, a1, a2 = (_trivial_a(bits[i], i) for i in range(3))
         t = a0 + a1 - mul(a0, a1, prf.fold(21)).mul_public(2)
@@ -238,8 +258,14 @@ def b2a(x: BShare, prf: PRFSetup, width: int | None = None) -> AShare:
 
 def a2b(x: AShare, prf: PRFSetup, width: int | None = None) -> BShare:
     """Arithmetic -> boolean: boolean-share each arithmetic leg trivially,
-    then two Kogge-Stone additions (2 * (1 + log2 k) rounds)."""
-    with _fused("a2b", rounds=2 * (1 + (width or x.ring.bits).bit_length() - 1)):
+    then two Kogge-Stone additions (2 * (1 + log2 k) rounds). One fused
+    kernel launch, or 2 * (1 + log2 k) gate launches."""
+    width = width or x.ring.bits
+    with _fused("a2b", rounds=2 * (1 + width.bit_length() - 1)):
+        if fusion_enabled():
+            from ..kernels.a2b_fused.ops import a2b_fused
+
+            return a2b_fused(x, prf, width)
         legs = [_trivial_b(x.shares[i], i) for i in range(3)]
         s = ks_add(legs[0], legs[1], prf.fold(31), width)
         return ks_add(s, legs[2], prf.fold(32), width)

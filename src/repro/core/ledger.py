@@ -28,7 +28,7 @@ import threading
 from collections import defaultdict
 from typing import Dict, List, Optional
 
-__all__ = ["CommLedger", "log_comm", "active_ledger", "measure_comm"]
+__all__ = ["CommLedger", "log_comm", "active_ledger", "fused_scope", "measure_comm"]
 
 _STATE = threading.local()
 
@@ -119,6 +119,15 @@ def log_comm(op: str, rounds: int, bytes_per_party: int) -> None:
     led = active_ledger()
     if led is not None:
         led.log(op, rounds, bytes_per_party)
+
+
+def fused_scope(op: str, rounds: int):
+    """``active_ledger().fused(...)`` or a no-op when no ledger is active —
+    the common pattern of every circuit that batches its gates into rounds."""
+    led = active_ledger()
+    if led is None:
+        return contextlib.nullcontext()
+    return led.fused(op, rounds)
 
 
 def measure_comm(fn, *args, **kwargs) -> Dict[str, float]:

@@ -27,6 +27,19 @@ on [0,1), still maskingly secure) to p, giving an exact Bernoulli(p).
 Reveal-and-trim opens k (public), so the trimmed size S becomes public — the
 controlled disclosure. Optional bucketing rounds S up to a bucket boundary:
 coarser disclosure, fewer downstream compilation shapes (beyond-paper).
+
+Lazy payload (DESIGN.md §7.2): when the input table carries
+:class:`~repro.ops.table.LazyGather` columns (the lazy join's un-expanded
+payload views), only the physical columns (k, valid, and any already-material
+columns) flow through the secure shuffle; the deferred payload is gathered
+directly from its base tables for the S surviving rows only — O(S * cols)
+instead of O(N * cols) host memory — then freshly re-randomized. The ledger
+still logs the full shuffle traffic for the deferred columns
+(``shuffle_deferred_payload``): in a real deployment the payload must ride
+the same 3-hop resharing, so the communication profile is unchanged; only the
+simulation's materialization is deferred. The trim-side linkage uses the
+simulation-side ``composed_permutation`` oracle, which a real deployment
+realizes by running the recorded hops on the payload columns.
 """
 from __future__ import annotations
 
@@ -170,9 +183,30 @@ class Resizer:
 
         # 3. break linkage: secure shuffle (Reflex) or Shrinkwrap's bitonic
         #    sort on the keep-bit (sort&cut baseline; keeps true+filler rows
-        #    at the front so revealing the sorted k discloses only S)
+        #    at the front so revealing the sorted k discloses only S).
+        #    Lazy (join-view) columns skip the physical shuffle: their shares
+        #    are gathered from the base tables only for the S kept rows below;
+        #    their shuffle traffic is still ledgered (comm is protocol-
+        #    determined — see module docstring). AShare-backed views are
+        #    excluded: the eager path a2b-converts them at full size before
+        #    shuffling, and deferring that conversion would change the ledger.
+        from ..ops.table import LazyGather
+
+        lazy_cols = {
+            name: c
+            for name, c in table.cols.items()
+            if isinstance(c, LazyGather)
+            and isinstance(c.base, BShare)
+            and not cfg.use_sort
+        }
         cols = {"__k": k_col, "__valid": table.valid}
-        cols.update({name: table.bshare_col(name, prf) for name in table.cols})
+        cols.update(
+            {
+                name: table.bshare_col(name, prf)
+                for name in table.cols
+                if name not in lazy_cols
+            }
+        )
         if cfg.use_sort:
             from .sort import bitonic_sort
             from ..ops.groupby import pad_pow2
@@ -186,6 +220,14 @@ class Resizer:
             n = padded.n
         else:
             shuffled = secure_shuffle(cols, prf.fold(821))
+            if lazy_cols:
+                from .shuffle import HOPS
+
+                lazy_row_bytes = sum(
+                    c.ring.bytes * (c.size // max(c.shape[0], 1))
+                    for c in lazy_cols.values()
+                )
+                log_comm("shuffle_deferred_payload", 0, HOPS * n * lazy_row_bytes)
         k_col = shuffled.pop("__k")
         valid = shuffled.pop("__valid")
 
@@ -204,7 +246,20 @@ class Resizer:
             s_padded = ((s + cfg.bucket - 1) // cfg.bucket) * cfg.bucket
         s_padded = min(max(s_padded, 1), n)
 
-        out = SecretTable(dict(shuffled), valid).gather_rows(jnp.asarray(keep))
+        keep = jnp.asarray(keep)
+        out = SecretTable(dict(shuffled), valid).gather_rows(keep)
+        if lazy_cols:
+            # Deferred payload: map the kept (shuffled) positions back through
+            # the composed permutation to product rows, gather exactly S rows
+            # from each base table, and re-randomize (the resharing the
+            # payload would have received in the shuffle hops).
+            from .shuffle import _rerandomize, composed_permutation
+
+            orig_rows = jnp.take(composed_permutation(prf.fold(821), n), keep)
+            for i, (name, lc) in enumerate(lazy_cols.items()):
+                out.cols[name] = _rerandomize(
+                    lc.gather(orig_rows), prf.fold(823), 860 + i
+                )
         if s_padded > s:
             out = out.pad_rows(s_padded)
 

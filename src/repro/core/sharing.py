@@ -31,6 +31,7 @@ from typing import Callable, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..kernels import kernels_enabled
 from .ledger import log_comm
 from .prf import PRFSetup, rand_replicated, zero_share_add, zero_share_xor
 from .ring import Ring, default_ring
@@ -286,8 +287,8 @@ def _cross_terms_xor(xs: jnp.ndarray, ys: jnp.ndarray) -> jnp.ndarray:
 
 
 def _kernel_gate(xs, ys, alpha, boolean: bool):
-    from ..kernels import kernels_enabled
-
+    """Single-gate kernel dispatch (the *fused* multi-gate circuits route in
+    core/circuits.py instead and never reach this per-gate path)."""
     if not kernels_enabled():
         return None
     from ..kernels.rss_gate.ops import gate

@@ -24,7 +24,7 @@ from typing import Dict, Sequence, Union
 import jax
 import jax.numpy as jnp
 
-from .ledger import active_ledger, log_comm
+from .ledger import fused_scope, log_comm
 from .prf import PRFSetup, zero_share_add, zero_share_xor
 from .sharing import AShare, BShare
 
@@ -88,11 +88,7 @@ def secure_shuffle(
 
     take = gather_fn or (lambda shares, perm: jnp.take(shares, perm, axis=1))
 
-    led = active_ledger()
-    import contextlib
-
-    scope = led.fused("shuffle", rounds=HOPS) if led is not None else contextlib.nullcontext()
-    with scope:
+    with fused_scope("shuffle", rounds=HOPS):
         out = dict(cols)
         for hop in range(HOPS):
             perm = _hop_perm(prf, hop, n)

@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import OrderedDict
 from typing import Callable, Dict, List, Optional
 
 import jax
@@ -100,8 +101,26 @@ class Engine:
     # process-wide jit cache: operator protocols are pure functions of
     # (static node spec, table shapes) — reusing compiled executables across
     # Engine instances removes both eager-dispatch overhead and recompiles
-    # (a beyond-paper optimization; see EXPERIMENTS.md §Perf)
-    _JIT_CACHE: Dict = {}
+    # (a beyond-paper optimization; see EXPERIMENTS.md §Perf). LRU-bounded:
+    # a long-running serving session sees an unbounded stream of (query,
+    # revealed-size) shapes, so the cache would otherwise grow without limit;
+    # eviction only costs a recompile on a shape not seen recently.
+    _JIT_CACHE: "OrderedDict" = OrderedDict()
+    _JIT_CACHE_MAX = 128
+
+    @classmethod
+    def _jit_cache_get(cls, key):
+        hit = cls._JIT_CACHE.get(key)
+        if hit is not None:
+            cls._JIT_CACHE.move_to_end(key)
+        return hit
+
+    @classmethod
+    def _jit_cache_put(cls, key, value) -> None:
+        cls._JIT_CACHE[key] = value
+        cls._JIT_CACHE.move_to_end(key)
+        while len(cls._JIT_CACHE) > cls._JIT_CACHE_MAX:
+            cls._JIT_CACHE.popitem(last=False)
 
     def __init__(
         self,
@@ -198,7 +217,7 @@ class Engine:
         if not self.jit_ops:
             return fn(prf, *children)
         key = self._cache_key(node, children)
-        jitted = Engine._JIT_CACHE.get(key)
+        jitted = Engine._jit_cache_get(key)
         if jitted is None:
             # Capture the ledger profile once at trace time: jit re-executions
             # skip the Python body, so replay the recorded cost on cache hits.
@@ -211,7 +230,7 @@ class Engine:
                 return out
 
             jitted = (jax.jit(traced), profile)
-            Engine._JIT_CACHE[key] = jitted
+            Engine._jit_cache_put(key, jitted)
         jfn, profile = jitted
         out = jfn(prf, *children)
         if profile.get("tally"):

@@ -1,6 +1,6 @@
 """Pallas TPU kernels for the MPC engine's compute hot spots.
 
-Three kernels cover the protocol-local inner loops that dominate the engine's
+Five kernels cover the protocol-local inner loops that dominate the engine's
 arithmetic (the *communication* between parties is JAX-level and cannot live
 inside a kernel — on a real 3-TPU deployment each kernel body runs per-party
 between round boundaries; in this simulation the 3-share axis is local, so the
@@ -8,6 +8,13 @@ fused body is exactly the simulation hot loop):
 
 * ``rss_gate``      — cross-term + re-randomization of the 1-round AND / mul
                       gate (every comparison circuit bottoms out here)
+* ``ks_prefix``     — an entire Kogge-Stone borrow/carry prefix (all log2 k
+                      levels, both independent AND pairs per level) plus the
+                      equality AND-fold tree, in ONE launch instead of one
+                      ``rss_gate`` launch per level
+* ``a2b_fused``     — the full arithmetic->boolean conversion (two chained
+                      Kogge-Stone adders, 12 gate rounds) and the fused
+                      ``bit2a`` double-multiply, each in ONE launch
 * ``shuffle_gather``— permutation row-gather (the secure shuffle's data move)
 * ``bitonic_stage`` — fused conditional-swap of one sort stage across all
                       payload columns
@@ -16,13 +23,95 @@ Each kernel directory has ``<name>.py`` (pl.pallas_call + BlockSpec),
 ``ops.py`` (jit'd wrapper with padding + interpret-mode switch), and
 ``ref.py`` (pure-jnp oracle). CPU validation uses ``interpret=True``; the
 BlockSpecs are sized for TPU v5e VMEM (~16 MiB/core).
+
+Switches
+--------
+``REPRO_USE_PALLAS=1`` enables the kernel paths; ``REPRO_FUSE_CIRCUITS=0``
+keeps kernels on but forces the gate-by-gate circuit path (used by parity
+tests and the fused-vs-unfused benchmark). Both can be overridden per-thread
+with :func:`override_kernels` / :func:`override_fusion` so tests and benches
+work without mutating the environment.
+
+Launch accounting
+-----------------
+Every ``ops.py`` wrapper records the kernel dispatches it issues from Python
+(trace-time accounting: a jit-cached re-execution of an enclosing function is
+not re-counted — the engine's protocol layer runs eagerly by default, where
+the count equals real dispatches). ``launch_counts()`` is what
+``benchmarks/bench_kernels.py`` uses to demonstrate the fused-kernel launch
+reduction.
 """
 from __future__ import annotations
 
+import contextlib
 import os
+import threading
+from collections import Counter
+from typing import Dict, Iterator, Optional
 
 _USE_KERNELS = os.environ.get("REPRO_USE_PALLAS", "0") == "1"
+_FUSE_DEFAULT = os.environ.get("REPRO_FUSE_CIRCUITS", "1") == "1"
+
+_STATE = threading.local()
 
 
 def kernels_enabled() -> bool:
-    return _USE_KERNELS
+    ov = getattr(_STATE, "kernels", None)
+    return _USE_KERNELS if ov is None else ov
+
+
+def fusion_enabled() -> bool:
+    """True when circuits should route through the single-launch fused
+    kernels (requires the kernel layer itself to be enabled)."""
+    if not kernels_enabled():
+        return False
+    ov = getattr(_STATE, "fusion", None)
+    return _FUSE_DEFAULT if ov is None else ov
+
+
+@contextlib.contextmanager
+def override_kernels(enabled: Optional[bool]) -> Iterator[None]:
+    """Thread-locally force the kernel layer on/off (None = env default)."""
+    prev = getattr(_STATE, "kernels", None)
+    _STATE.kernels = enabled
+    try:
+        yield
+    finally:
+        _STATE.kernels = prev
+
+
+@contextlib.contextmanager
+def override_fusion(enabled: Optional[bool]) -> Iterator[None]:
+    """Thread-locally force circuit fusion on/off (None = env default)."""
+    prev = getattr(_STATE, "fusion", None)
+    _STATE.fusion = enabled
+    try:
+        yield
+    finally:
+        _STATE.fusion = prev
+
+
+# -----------------------------------------------------------------------------
+# Launch accounting
+# -----------------------------------------------------------------------------
+
+def _counter() -> Counter:
+    if not hasattr(_STATE, "launches"):
+        _STATE.launches = Counter()
+    return _STATE.launches
+
+
+def record_launch(kind: str, n: int = 1) -> None:
+    _counter()[kind] += n
+
+
+def launch_counts() -> Dict[str, int]:
+    return dict(_counter())
+
+
+def total_launches() -> int:
+    return sum(_counter().values())
+
+
+def reset_launch_counts() -> None:
+    _counter().clear()

@@ -1,0 +1,1 @@
+from .ops import a2b_fused, bit2a_fused  # noqa: F401

@@ -1,0 +1,119 @@
+"""Pallas kernels: single-launch share conversions.
+
+``a2b`` (arithmetic -> boolean) is the most launch-hungry circuit in the
+engine: boolean-share each arithmetic leg trivially, then run TWO chained
+Kogge-Stone adders — gate-by-gate that is 2 x (1 + log2 k) = 12 ``rss_gate``
+dispatches for 32-bit words, and the Resizer's parallel noise addition runs
+one per tuple batch. The ``a2b_fused`` kernel executes the whole conversion
+(leg construction, both adders, all prefix levels) in one launch: the share
+triple is read from HBM once and written once.
+
+``bit2a_fused`` fuses the two dependent ring multiplications of the bit
+injection b = b0 ^ b1 ^ b2 emulated arithmetically (u ^ v = u + v - 2uv),
+halving the launches of ``bit2a`` / ``b2a``.
+
+As everywhere in this kernel layer, the PRF-derived re-randomization words
+are computed *outside* and streamed in (randomness/communication is protocol
+state, not launch state): ``alphas`` packs, per Kogge-Stone adder, [1 init
+gate word, 2 words per level], i.e. 2*(1 + 2*L) words total for a2b.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..ks_prefix.ks_prefix import _cross_add, _cross_xor
+
+BLOCK = 2048
+
+
+def _ks_add_body(
+    x: jnp.ndarray, y: jnp.ndarray, a: jnp.ndarray, shifts: Tuple[int, ...]
+) -> jnp.ndarray:
+    """One full boolean Kogge-Stone addition; a: (3, 1 + 2*len(shifts), B)."""
+    g = _cross_xor(x, y) ^ a[:, 0]
+    p = x ^ y
+    for lvl, d in enumerate(shifts):
+        pg = _cross_xor(p, g << d) ^ a[:, 1 + 2 * lvl]
+        pp = _cross_xor(p, p << d) ^ a[:, 2 + 2 * lvl]
+        g = g ^ pg
+        p = pp
+    return x ^ y ^ (g << 1)
+
+
+def _trivial_legs(xs: jnp.ndarray):
+    """Boolean share (x_i, 0, 0)/(0, x_i, 0)/(0, 0, x_i) of each arithmetic
+    leg — locally constructible, no communication."""
+    z = jnp.zeros_like(xs[0:1])
+    l0 = jnp.concatenate([xs[0:1], z, z], axis=0)
+    l1 = jnp.concatenate([z, xs[1:2], z], axis=0)
+    l2 = jnp.concatenate([z, z, xs[2:3]], axis=0)
+    return l0, l1, l2
+
+
+def _a2b_kernel(x_ref, a_ref, o_ref, *, shifts: Tuple[int, ...]):
+    xs = x_ref[...]  # (3, BLOCK) arithmetic share triple
+    a = a_ref[...]  # (3, 2*(1+2L), BLOCK)
+    l0, l1, l2 = _trivial_legs(xs)
+    words = 1 + 2 * len(shifts)
+    s = _ks_add_body(l0, l1, a[:, :words], shifts)
+    o_ref[...] = _ks_add_body(s, l2, a[:, words:], shifts)
+
+
+def _bit2a_kernel(b_ref, a_ref, o_ref):
+    b = b_ref[...]
+    bs = b & b.dtype.type(1)  # LSB of each boolean leg
+    a = a_ref[...]  # (3, 2, BLOCK) additive zero-sharings
+    a0, a1, a2 = _trivial_legs(bs)
+    two = b.dtype.type(2)
+    t = a0 + a1 - two * (_cross_add(a0, a1) + a[:, 0])
+    o_ref[...] = t + a2 - two * (_cross_add(t, a2) + a[:, 1])
+
+
+@functools.partial(jax.jit, static_argnames=("shifts", "interpret", "block"))
+def a2b_kernel(
+    xs: jax.Array,
+    alphas: jax.Array,
+    shifts: Tuple[int, ...],
+    interpret: bool = True,
+    block: int = BLOCK,
+) -> jax.Array:
+    """xs: (3, N) arithmetic shares; alphas: (3, 2*(1+2L), N)."""
+    n = xs.shape[1]
+    grid = (n // block,)
+    spec2 = pl.BlockSpec((3, block), lambda i: (0, i))
+    spec3 = pl.BlockSpec((3, alphas.shape[1], block), lambda i: (0, 0, i))
+    return pl.pallas_call(
+        functools.partial(_a2b_kernel, shifts=shifts),
+        grid=grid,
+        in_specs=[spec2, spec3],
+        out_specs=spec2,
+        out_shape=jax.ShapeDtypeStruct(xs.shape, xs.dtype),
+        interpret=interpret,
+    )(xs, alphas)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block"))
+def bit2a_kernel(
+    bs: jax.Array,
+    alphas: jax.Array,
+    interpret: bool = True,
+    block: int = BLOCK,
+) -> jax.Array:
+    """bs: (3, N) boolean shares (LSB used); alphas: (3, 2, N) additive."""
+    n = bs.shape[1]
+    grid = (n // block,)
+    spec2 = pl.BlockSpec((3, block), lambda i: (0, i))
+    spec3 = pl.BlockSpec((3, 2, block), lambda i: (0, 0, i))
+    return pl.pallas_call(
+        _bit2a_kernel,
+        grid=grid,
+        in_specs=[spec2, spec3],
+        out_specs=spec2,
+        out_shape=jax.ShapeDtypeStruct(bs.shape, bs.dtype),
+        interpret=interpret,
+    )(bs, alphas)

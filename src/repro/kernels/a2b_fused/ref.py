@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the fused share-conversion kernels."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from ..ks_prefix.ref import _cross_add, _cross_xor
+
+
+def _trivial_legs(xs: jnp.ndarray):
+    z = jnp.zeros_like(xs[0:1])
+    l0 = jnp.concatenate([xs[0:1], z, z], axis=0)
+    l1 = jnp.concatenate([z, xs[1:2], z], axis=0)
+    l2 = jnp.concatenate([z, z, xs[2:3]], axis=0)
+    return l0, l1, l2
+
+
+def ks_add_ref(
+    x: jnp.ndarray, y: jnp.ndarray, a: jnp.ndarray, shifts: Tuple[int, ...]
+) -> jnp.ndarray:
+    g = _cross_xor(x, y) ^ a[:, 0]
+    p = x ^ y
+    for lvl, d in enumerate(shifts):
+        pg = _cross_xor(p, g << d) ^ a[:, 1 + 2 * lvl]
+        pp = _cross_xor(p, p << d) ^ a[:, 2 + 2 * lvl]
+        g = g ^ pg
+        p = pp
+    return x ^ y ^ (g << 1)
+
+
+def a2b_ref(
+    xs: jnp.ndarray, alphas: jnp.ndarray, shifts: Tuple[int, ...]
+) -> jnp.ndarray:
+    """xs: (3, N) arithmetic shares; alphas: (3, 2*(1+2L), N)."""
+    l0, l1, l2 = _trivial_legs(xs)
+    words = 1 + 2 * len(shifts)
+    s = ks_add_ref(l0, l1, alphas[:, :words], shifts)
+    return ks_add_ref(s, l2, alphas[:, words:], shifts)
+
+
+def bit2a_ref(bs: jnp.ndarray, alphas: jnp.ndarray) -> jnp.ndarray:
+    """bs: (3, N) boolean shares (LSB used); alphas: (3, 2, N) additive."""
+    b = bs & bs.dtype.type(1)
+    a0, a1, a2 = _trivial_legs(b)
+    two = bs.dtype.type(2)
+    t = a0 + a1 - two * (_cross_add(a0, a1) + alphas[:, 0])
+    return t + a2 - two * (_cross_add(t, a2) + alphas[:, 1])

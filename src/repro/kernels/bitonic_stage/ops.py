@@ -4,14 +4,16 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from .. import record_launch
 from .bitonic_stage import BLOCK, bitonic_swap
 from .ref import bitonic_swap_ref
 
 
 def stage_swap(mask, own, other, alpha, use_kernel: bool = True, block: int = BLOCK):
     """mask: (3, N); own/other/alpha: (3, C, N). Returns own ^ select-diff."""
-    if not use_kernel:
+    if not use_kernel or own.size == 0:
         return bitonic_swap_ref(mask, own, other, alpha)
+    record_launch("bitonic_stage")
     n = own.shape[2]
     block = min(block, max(128, 1 << (n - 1).bit_length()))
     pad = (-n) % block

@@ -1,0 +1,1 @@
+from .ops import and_fold_fused, ks_levels_fused  # noqa: F401

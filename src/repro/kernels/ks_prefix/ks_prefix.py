@@ -1,0 +1,134 @@
+"""Pallas kernels: fused Kogge-Stone prefix + equality AND-fold.
+
+The comparison circuits (`lt`, `lt_public`, `ks_add`, and through them `a2b`)
+spend all their interactive gates inside one of two loops over XOR-replicated
+shares:
+
+* the Kogge-Stone borrow/carry prefix — per level ``d``::
+
+      pg = (p AND (g << d)) ^ alpha_pg      # two independent ANDs,
+      pp = (p AND (p << d)) ^ alpha_pp      # batched into one comm round
+      g, p = g ^ pg, pp
+
+* the equality AND-fold tree — per level ``d``::
+
+      v = (v AND (v >> d)) ^ alpha
+
+Gate-by-gate execution dispatches one ``rss_gate`` launch per level (5 for a
+32-bit word), each doing an HBM round-trip of the full (3, N) share triple.
+These kernels run *all* levels in one launch: shares stay resident in VMEM,
+the per-level cross-terms + re-randomization are register-level ops, and only
+the final ``g`` (resp. folded ``v``) is written back.
+
+The per-level zero-sharings ``alpha`` are PRF-derived *outside* the kernel
+(they must match the unfused path bit-for-bit, and communication/randomness
+derivation is protocol-level, not launch-level) and streamed in as one stacked
+(3, W, N) operand, where W = alpha words across all levels.
+
+Tiling matches ``rss_gate``: lanes blocked at ``BLOCK`` (multiple of 128 for
+VPU lane alignment), the 3-share axis whole inside the block. Worst case
+(width 64: W = 12) is 3 x 14 x BLOCK x 8 B ~ 2.6 MiB of VMEM at BLOCK=2048 —
+inside v5e's ~16 MiB.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 2048
+
+
+def _cross_xor(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Party-local AND cross terms: z'_i = (x_i&y_i) ^ (x_i&y_{i+1}) ^
+    (x_{i+1}&y_i); static 3-way roll inside VMEM. (Kernel-layer counterpart
+    of ``core.sharing._cross_terms_xor``; also used by ``a2b_fused``.)"""
+    xn = jnp.roll(x, -1, axis=0)
+    yn = jnp.roll(y, -1, axis=0)
+    return (x & y) ^ (x & yn) ^ (xn & y)
+
+
+def _cross_add(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Arithmetic (mul-gate) cross terms: z'_i = x_i*y_i + x_i*y_{i+1} +
+    x_{i+1}*y_i."""
+    xn = jnp.roll(x, -1, axis=0)
+    yn = jnp.roll(y, -1, axis=0)
+    return x * y + x * yn + xn * y
+
+
+def _ks_prefix_kernel(g_ref, p_ref, a_ref, o_ref, *, shifts: Tuple[int, ...]):
+    g = g_ref[...]  # (3, BLOCK)
+    p = p_ref[...]
+    a = a_ref[...]  # (3, 2*len(shifts), BLOCK)
+    for lvl, d in enumerate(shifts):
+        pg = _cross_xor(p, g << d) ^ a[:, 2 * lvl]
+        pp = _cross_xor(p, p << d) ^ a[:, 2 * lvl + 1]
+        g = g ^ pg
+        p = pp
+    o_ref[...] = g
+
+
+def _and_fold_kernel(v_ref, a_ref, o_ref, *, shifts: Tuple[int, ...]):
+    v = v_ref[...]  # (3, BLOCK)
+    a = a_ref[...]  # (3, len(shifts), BLOCK)
+    for lvl, d in enumerate(shifts):
+        v = _cross_xor(v, v >> d) ^ a[:, lvl]
+    o_ref[...] = v
+
+
+@functools.partial(jax.jit, static_argnames=("shifts", "interpret", "block"))
+def ks_prefix(
+    g: jax.Array,
+    p: jax.Array,
+    alphas: jax.Array,
+    shifts: Tuple[int, ...],
+    interpret: bool = True,
+    block: int = BLOCK,
+) -> jax.Array:
+    """All Kogge-Stone levels in one launch.
+
+    g, p: (3, N); alphas: (3, 2*len(shifts), N); N % block == 0 (wrapper
+    pads). Returns the final prefix ``g``.
+    """
+    n = g.shape[1]
+    grid = (n // block,)
+    spec2 = pl.BlockSpec((3, block), lambda i: (0, i))
+    spec3 = pl.BlockSpec((3, alphas.shape[1], block), lambda i: (0, 0, i))
+    return pl.pallas_call(
+        functools.partial(_ks_prefix_kernel, shifts=shifts),
+        grid=grid,
+        in_specs=[spec2, spec2, spec3],
+        out_specs=spec2,
+        out_shape=jax.ShapeDtypeStruct(g.shape, g.dtype),
+        interpret=interpret,
+    )(g, p, alphas)
+
+
+@functools.partial(jax.jit, static_argnames=("shifts", "interpret", "block"))
+def and_fold(
+    v: jax.Array,
+    alphas: jax.Array,
+    shifts: Tuple[int, ...],
+    interpret: bool = True,
+    block: int = BLOCK,
+) -> jax.Array:
+    """The equality circuit's AND-reduce tree in one launch.
+
+    v: (3, N); alphas: (3, len(shifts), N). Returns the folded word (the
+    conjunction of all ``width`` bits lands in the LSB; caller masks).
+    """
+    n = v.shape[1]
+    grid = (n // block,)
+    spec2 = pl.BlockSpec((3, block), lambda i: (0, i))
+    spec3 = pl.BlockSpec((3, alphas.shape[1], block), lambda i: (0, 0, i))
+    return pl.pallas_call(
+        functools.partial(_and_fold_kernel, shifts=shifts),
+        grid=grid,
+        in_specs=[spec2, spec3],
+        out_specs=spec2,
+        out_shape=jax.ShapeDtypeStruct(v.shape, v.dtype),
+        interpret=interpret,
+    )(v, alphas)

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for the fused Kogge-Stone prefix / AND-fold kernels."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def _cross_xor(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    xn = jnp.roll(x, -1, axis=0)
+    yn = jnp.roll(y, -1, axis=0)
+    return (x & y) ^ (x & yn) ^ (xn & y)
+
+
+def _cross_add(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    xn = jnp.roll(x, -1, axis=0)
+    yn = jnp.roll(y, -1, axis=0)
+    return x * y + x * yn + xn * y
+
+
+def ks_prefix_ref(
+    g: jnp.ndarray, p: jnp.ndarray, alphas: jnp.ndarray, shifts: Tuple[int, ...]
+) -> jnp.ndarray:
+    """g, p: (3, N); alphas: (3, 2*len(shifts), N)."""
+    for lvl, d in enumerate(shifts):
+        pg = _cross_xor(p, g << d) ^ alphas[:, 2 * lvl]
+        pp = _cross_xor(p, p << d) ^ alphas[:, 2 * lvl + 1]
+        g = g ^ pg
+        p = pp
+    return g
+
+
+def and_fold_ref(
+    v: jnp.ndarray, alphas: jnp.ndarray, shifts: Tuple[int, ...]
+) -> jnp.ndarray:
+    """v: (3, N); alphas: (3, len(shifts), N)."""
+    for lvl, d in enumerate(shifts):
+        v = _cross_xor(v, v >> d) ^ alphas[:, lvl]
+    return v
+
+
+def ks_shifts(width: int) -> Tuple[int, ...]:
+    """Doubling shift schedule of the Kogge-Stone loop (d = 1, 2, ... < width),
+    matching ``circuits._ks_levels`` exactly (including non-power-of-2
+    widths)."""
+    shifts = []
+    d = 1
+    while d < width:
+        shifts.append(d)
+        d *= 2
+    return tuple(shifts)
+
+
+def fold_shifts(width: int) -> Tuple[int, ...]:
+    """Halving shift schedule of the equality AND-fold tree (d = width//2,
+    ..., 1), matching ``circuits._and_reduce_bits`` exactly."""
+    shifts = []
+    d = width // 2
+    while d >= 1:
+        shifts.append(d)
+        d //= 2
+    return tuple(shifts)

@@ -6,13 +6,15 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from .. import record_launch
 from .ref import rss_gate_ref
 from .rss_gate import BLOCK, rss_gate
 
 
 def gate(xs, ys, alpha, boolean: bool = True, use_kernel: bool = True, block: int = BLOCK):
-    if not use_kernel:
+    if not use_kernel or xs.size == 0:  # pallas_call cannot slice 0-lane operands
         return rss_gate_ref(xs, ys, alpha, boolean)
+    record_launch("rss_gate")
     shape = xs.shape
     flat = lambda a: a.reshape(3, -1)
     x, y, al = flat(xs), flat(ys), flat(alpha)

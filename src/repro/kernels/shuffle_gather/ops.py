@@ -6,6 +6,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from .. import record_launch
 from .ref import shuffle_gather_ref
 from .shuffle_gather import BLOCK_ROWS, shuffle_gather
 
@@ -15,8 +16,9 @@ VMEM_LIMIT_BYTES = 8 * 2**20
 def gather_rows(table, perm, use_kernel: bool = True, block_rows: int = BLOCK_ROWS):
     """table: (N, C); perm: (N,) int32. Returns table[perm]."""
     n, c = table.shape
-    if not use_kernel or table.size * table.dtype.itemsize > VMEM_LIMIT_BYTES:
+    if not use_kernel or table.size == 0 or table.size * table.dtype.itemsize > VMEM_LIMIT_BYTES:
         return shuffle_gather_ref(table, perm)
+    record_launch("shuffle_gather")
     block_rows = min(block_rows, max(8, 1 << (n - 1).bit_length()))
     pad = (-n) % block_rows
     if pad:

@@ -99,10 +99,14 @@ def parse_collectives(hlo_text: str) -> CollectiveStats:
         total = 0
         for op in operands.split(","):
             op = op.strip().lstrip("%")
-            # operands may carry inline annotations; keep the name token
-            op = op.split(" ")[0]
-            if op in shapes:
-                total += shape_bytes(shapes[op])
+            # Two operand spellings across jaxlib versions: a bare name
+            # ("%foo") resolved via the definition table, or an inline-typed
+            # operand ("f32[4,32]{1,0} %foo") whose shape is right there.
+            head = op.split(" ")[0]
+            if _SHAPE_RE.search(head):
+                total += shape_bytes(head)
+            elif head in shapes:
+                total += shape_bytes(shapes[head])
         count_by[kind] += 1
         bytes_by[kind] += total
     return CollectiveStats(bytes_by, count_by)

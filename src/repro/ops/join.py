@@ -1,26 +1,80 @@
-"""Oblivious equi-join (nested-loop / Cartesian product).
+"""Oblivious equi-join (nested-loop / Cartesian product), lazy-materializing.
 
 The fully-oblivious join returns a secret-shared result *in the size of the
-Cartesian product* |R1| x |R2| (paper §1, citing Secrecy): row (i, j) carries
-both sides' columns and
+Cartesian product* |R1| x |R2| (paper §1, citing Secrecy): row r = (i, j)
+carries both sides' columns and
 ``valid = valid1[i] AND valid2[j] AND (key1[i] == key2[j])``.
 
 Cost: one vectorized equality over N1*N2 lanes (5 rounds) + 2 ANDs. This
 ballooning is precisely what makes the Resizer valuable: trimming the join
 output from N1*N2 to S = T + eta shrinks every downstream operator.
 
+Materialization strategy (DESIGN.md §7.2): only the ``valid`` column is ever
+computed at the product size — tile-by-tile, gathering the *base* key/valid
+columns per tile through the public product-layout index maps and running the
+(fused) equality kernel on each tile, so peak temporary memory is
+O(N1*N2 + tile). Payload columns are carried as :class:`LazyGather`
+(base-column, index-map) views and expanded only at the next Resizer's
+reveal-and-trim (S rows) or on first direct column access — join memory drops
+from O(N1*N2 * cols) to O(N1*N2 + S * cols). The communication ledger is
+unchanged: the tiled equality logs the same per-lane bytes and the same round
+count as one product-wide circuit (independent tiles share rounds), matching
+the eager path's tally exactly.
+
 An optional extra predicate ("theta" part, e.g. ``d.time <= m.time`` in the
 Aspirin Count query) is evaluated on the product and ANDed in.
+
+``lazy=False`` keeps the original expand-everything path (the benchmarks'
+baseline).
 """
 from __future__ import annotations
 
+import os
 from typing import Optional, Tuple
 
+import jax.numpy as jnp
+
 from ..core.circuits import and_bit, eq, le
+from ..core.ledger import fused_scope
 from ..core.prf import PRFSetup
-from .table import SecretTable
+from ..core.sharing import BShare
+from .table import LazyGather, SecretTable
 
 __all__ = ["oblivious_join"]
+
+# Product-grid rows per valid-computation tile; bounds temporary memory at
+# O(tile) share words while the public index maps stay O(N1*N2).
+def _tile_from_env() -> int:
+    raw = os.environ.get("REPRO_JOIN_TILE", "")
+    if not raw:
+        return 1 << 16
+    try:
+        tile = int(raw)
+    except ValueError as e:
+        raise ValueError(f"REPRO_JOIN_TILE must be an integer, got {raw!r}") from e
+    if tile < 1:
+        raise ValueError(f"REPRO_JOIN_TILE must be >= 1, got {tile}")
+    return tile
+
+
+DEFAULT_TILE = _tile_from_env()
+
+
+def _disambiguate(cols: dict, name: str) -> str:
+    out_name = name
+    suffix = 0
+    while out_name in cols:
+        suffix += 1
+        out_name = f"r{suffix}.{name}"
+    return out_name
+
+
+def _as_lazy(col, idx: jnp.ndarray) -> LazyGather:
+    """View ``col`` through the product index map; composes if ``col`` is
+    itself a lazy view (join-after-join)."""
+    if isinstance(col, LazyGather):
+        return LazyGather(col.base, jnp.take(col.index, idx, axis=0))
+    return LazyGather(col, idx)
 
 
 def oblivious_join(
@@ -29,12 +83,83 @@ def oblivious_join(
     on: Tuple[str, str],
     prf: PRFSetup,
     theta: Optional[Tuple[str, str, str]] = None,
+    lazy: bool = True,
+    tile: int = DEFAULT_TILE,
 ) -> SecretTable:
     """Equi-join ``left.on[0] == right.on[1]``; output size = n1 * n2.
 
     ``theta``: optional extra condition (left_col, op, right_col) with
     op in {"le", "eq"} evaluated obliviously on the product.
     """
+    if not lazy:
+        return _eager_join(left, right, on, prf, theta)
+
+    n1, n2 = left.n, right.n
+    total = n1 * n2
+    tile = max(1, tile)
+    lk, rk = on
+
+    # Public product layout: row r = (i * n2 + j).
+    li = jnp.repeat(jnp.arange(n1, dtype=jnp.int32), n2)
+    ri = jnp.tile(jnp.arange(n2, dtype=jnp.int32), n1)
+
+    # Base columns the valid circuit needs (N1 / N2 sized, never expanded).
+    lkey = left.bshare_col(lk, prf)
+    rkey = right.bshare_col(rk, prf)
+    lvalid, rvalid = left.valid, right.valid
+    tl = tr = None
+    if theta is not None:
+        tcol_l, top, tcol_r = theta
+        if top not in ("le", "eq"):
+            raise ValueError(f"unsupported theta op {top}")
+        tl = left.bshare_col(tcol_l, prf)
+        tr = right.bshare_col(tcol_r, prf)
+
+    # Round count of the product-wide circuit (tiles are independent and
+    # share rounds; see module docstring).
+    levels = lkey.ring.bits.bit_length() - 1
+    rounds = levels + 2  # eq + AND(valid1, valid2) + AND(match)
+    if theta is not None:
+        rounds += (1 + levels if top == "le" else levels) + 1
+
+    valid_tiles = [BShare(jnp.zeros((3, 0), dtype=lvalid.shares.dtype))]
+    with fused_scope("join_valid", rounds=rounds):
+        for t0 in range(0, total, tile):
+            sl = slice(t0, min(t0 + tile, total))
+            p = prf.fold(500).fold(t0 // tile)  # fresh randomness per tile
+            lit, rit = li[sl], ri[sl]
+            match = eq(lkey.take(lit), rkey.take(rit), p.fold(501))
+            both = and_bit(lvalid.take(lit), rvalid.take(rit), p.fold(502))
+            v = and_bit(both, match, p.fold(503))
+            if theta is not None:
+                xl, xr = tl.take(lit), tr.take(rit)
+                extra = (
+                    le(xl, xr, p.fold(504)) if top == "le" else eq(xl, xr, p.fold(504))
+                )
+                v = and_bit(v, extra, p.fold(505))
+            valid_tiles.append(v)
+    # The empty seed tile keeps the n1*n2 == 0 edge well-formed (the loop
+    # body never runs; the eager path likewise returns an empty table).
+    valid = valid_tiles[1] if len(valid_tiles) == 2 else BShare.concat(valid_tiles)
+
+    # Payload: (base-table, index-map) views — nothing expanded.
+    cols: dict = {}
+    for name, col in left.cols.items():
+        cols[name] = _as_lazy(col, li)
+    for name, col in right.cols.items():
+        cols[_disambiguate(cols, name)] = _as_lazy(col, ri)
+    return SecretTable(cols, valid)
+
+
+def _eager_join(
+    left: SecretTable,
+    right: SecretTable,
+    on: Tuple[str, str],
+    prf: PRFSetup,
+    theta: Optional[Tuple[str, str, str]] = None,
+) -> SecretTable:
+    """The original expand-everything join: every payload column is
+    materialized at the full |R1| x |R2| size before any trimming."""
     n1, n2 = left.n, right.n
     lk, rk = on
 
@@ -50,16 +175,11 @@ def oblivious_join(
         )
 
     cols = {}
-    for name, col in left.cols.items():
-        cols[name] = expand_left(col)
-    for name, col in right.cols.items():
+    for name in left.cols:
+        cols[name] = expand_left(left.col(name))
+    for name in right.cols:
         # Disambiguate collisions (engine usually prefixes table aliases).
-        out_name = name
-        suffix = 0
-        while out_name in cols:
-            suffix += 1
-            out_name = f"r{suffix}.{name}"
-        cols[out_name] = expand_right(col)
+        cols[_disambiguate(cols, name)] = expand_right(right.col(name))
 
     lkey = expand_left(left.bshare_col(lk, prf))
     rkey = expand_right(right.bshare_col(rk, prf))

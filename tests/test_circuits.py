@@ -2,7 +2,6 @@
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.circuits import (
     a2b,
@@ -70,25 +69,6 @@ def test_narrow_width_comparison():
     xb = _b(x, 3)
     got = np.asarray(reveal_b(lt_public(xb, c, PRF, width=16)))
     assert (got == (x < c)).all()
-
-
-@settings(max_examples=25, deadline=None)
-@given(
-    st.lists(st.integers(0, 2**32 - 1), min_size=1, max_size=40),
-    st.integers(0, 2**32 - 2),
-)
-def test_property_compare_matches_plaintext(vals, c):
-    x = np.array(vals, dtype=np.uint32)
-    xb = _b(x, 4)
-    assert (np.asarray(reveal_b(lt_public(xb, c, PRF))) == (x < c)).all()
-    assert (np.asarray(reveal_b(eq_public(xb, c, PRF))) == (x == c)).all()
-
-
-@settings(max_examples=25, deadline=None)
-@given(st.lists(st.integers(0, 2**32 - 1), min_size=1, max_size=40))
-def test_property_b2a_roundtrip(vals):
-    x = np.array(vals, dtype=np.uint32)
-    assert (np.asarray(reveal_a(b2a(_b(x, 5), PRF))) == x).all()
 
 
 def test_circuit_round_counts():

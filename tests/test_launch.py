@@ -123,7 +123,8 @@ b_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), batch_specs(cfg, batch, me
 fn = jax.jit(lambda p, b: loss_fn(cfg, p, b)[0], in_shardings=(p_sh, b_sh))
 with mesh:
     compiled = fn.lower(params, batch).compile()
-ca = compiled.cost_analysis()
+from repro.launch.roofline import cost_analysis_of
+ca = cost_analysis_of(compiled)  # version-tolerant (list vs dict)
 st = parse_collectives(compiled.as_text())
 assert st.total_bytes > 0, "expected collectives from TP sharding"
 print("MINI_DRYRUN_OK", ca.get("flops", 0) > 0, st.count_by_kind)

@@ -1,0 +1,246 @@
+"""Lazy-materialization join tests (DESIGN.md §7.2).
+
+The structural guarantee under test: payload columns are NEVER expanded at
+the |R1| x |R2| product size — they ride as LazyGather views until the next
+Resizer's reveal-and-trim gathers exactly the S surviving rows (or until an
+operator's first direct column access) — while values, revealed results, and
+ledger tallies stay identical to the eager path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.ledger import CommLedger
+from repro.core.noise import ConstantNoise
+from repro.core.prf import setup_prf
+from repro.core.resizer import Resizer, ResizerConfig
+from repro.ops import Predicate, SecretTable, oblivious_filter, oblivious_join
+from repro.ops.table import (
+    LazyGather,
+    gather_log,
+    reset_gather_log,
+    table_nbytes,
+)
+
+PRF = setup_prf(jax.random.PRNGKey(6))
+rng = np.random.default_rng(6)
+
+
+def _tables(n1=12, n2=9, extra_cols=0, seed=0):
+    l = {
+        "pid": rng.integers(0, 5, n1).astype(np.uint32),
+        "x": np.arange(n1, dtype=np.uint32),
+    }
+    r = {
+        "pid2": rng.integers(0, 5, n2).astype(np.uint32),
+        "y": np.arange(n2, dtype=np.uint32),
+    }
+    for c in range(extra_cols):
+        l[f"lc{c}"] = rng.integers(0, 100, n1).astype(np.uint32)
+        r[f"rc{c}"] = rng.integers(0, 100, n2).astype(np.uint32)
+    lt = SecretTable.from_plaintext(l, jax.random.PRNGKey(seed + 1))
+    rt = SecretTable.from_plaintext(r, jax.random.PRNGKey(seed + 2))
+    return l, r, lt, rt
+
+
+@pytest.mark.parametrize("tile", [7, 1 << 16])
+def test_lazy_join_matches_plaintext(tile):
+    l, r, lt, rt = _tables()
+    out = oblivious_join(lt, rt, ("pid", "pid2"), PRF, tile=tile)
+    assert out.n == lt.n * rt.n
+    assert all(isinstance(c, LazyGather) for c in out.cols.values())
+    got = out.reveal_true_rows()
+    want = sorted(
+        (int(l["pid"][i]), int(l["x"][i]), int(r["y"][j]))
+        for i in range(lt.n)
+        for j in range(rt.n)
+        if l["pid"][i] == r["pid2"][j]
+    )
+    assert sorted(zip(got["pid"].tolist(), got["x"].tolist(), got["y"].tolist())) == want
+
+
+def test_lazy_matches_eager_including_theta():
+    _, _, lt, rt = _tables(seed=10)
+    for theta in (None, ("x", "le", "y"), ("x", "eq", "y")):
+        a = oblivious_join(lt, rt, ("pid", "pid2"), PRF, theta=theta, tile=17)
+        b = oblivious_join(lt, rt, ("pid", "pid2"), PRF, theta=theta, lazy=False)
+        da, db = a.reveal(), b.reveal()
+        assert set(da) == set(db)
+        np.testing.assert_array_equal(da["_valid"], db["_valid"])
+        for k in da:
+            np.testing.assert_array_equal(da[k], db[k])
+
+
+def test_join_ledger_parity_lazy_vs_eager():
+    _, _, lt, rt = _tables(seed=20)
+    tallies = {}
+    for lazy in (True, False):
+        with CommLedger() as led:
+            oblivious_join(lt, rt, ("pid", "pid2"), PRF, lazy=lazy, tile=13)
+        tallies[lazy] = led.tally()
+    assert tallies[True] == tallies[False]
+
+
+def test_payload_never_materialized_before_trim():
+    """The acceptance-criteria guarantee: no payload gather at product size;
+    the Resizer realizes exactly S rows per column."""
+    _, _, lt, rt = _tables(extra_cols=2, seed=30)
+    total = lt.n * rt.n
+    joined = oblivious_join(lt, rt, ("pid", "pid2"), PRF)
+    reset_gather_log()
+    out, info = Resizer(ResizerConfig(noise=ConstantNoise(0.1)))(
+        joined, PRF, jax.random.PRNGKey(7)
+    )
+    log = gather_log()
+    assert log, "lazy columns were never gathered"
+    assert max(log) == info["s"] < total
+    assert out.n == info["s_padded"]
+    # post-trim columns are physical shares of the right size
+    assert not out.lazy_names()
+
+
+def test_resize_values_and_ledger_match_eager():
+    _, _, lt, rt = _tables(extra_cols=1, seed=40)
+    results = {}
+    for lazy in (True, False):
+        joined = oblivious_join(lt, rt, ("pid", "pid2"), PRF, lazy=lazy)
+        with CommLedger() as led:
+            out, info = Resizer(ResizerConfig(noise=ConstantNoise(0.1)))(
+                joined, PRF, jax.random.PRNGKey(11)
+            )
+        results[lazy] = (out.reveal_true_rows(), info, led.tally())
+    dl, il, tl = results[True]
+    de, ie, te = results[False]
+    assert il["s"] == ie["s"]
+    assert tl == te  # deferred-payload shuffle bytes are still ledgered
+    assert set(dl) == set(de)
+    for k in dl:
+        assert sorted(dl[k].tolist()) == sorted(de[k].tolist())
+
+
+def test_lazy_footprint_scales_without_cols():
+    """O(N1*N2 + S*cols), not O(N1*N2*cols): adding payload columns must not
+    grow the lazy join's held bytes by anything close to a product-size
+    column (the eager per-column increment)."""
+    sizes = {}
+    for lazy in (True, False):
+        _, _, lt, rt = _tables(n1=32, n2=32, extra_cols=0, seed=50)
+        few = table_nbytes(oblivious_join(lt, rt, ("pid", "pid2"), PRF, lazy=lazy))
+        _, _, lt, rt = _tables(n1=32, n2=32, extra_cols=4, seed=50)
+        many = table_nbytes(oblivious_join(lt, rt, ("pid", "pid2"), PRF, lazy=lazy))
+        sizes[lazy] = (few, many)
+    product_col_bytes = 3 * 32 * 32 * 4  # one materialized product-size column
+    lazy_growth = sizes[True][1] - sizes[True][0]
+    eager_growth = sizes[False][1] - sizes[False][0]
+    assert eager_growth == 8 * product_col_bytes  # 8 extra expanded columns
+    assert lazy_growth < product_col_bytes  # bases only: O(n1 + n2) per col
+    assert sizes[True][1] < sizes[False][1] / 3
+
+
+def test_gather_rows_composes_lazily():
+    _, _, lt, rt = _tables(seed=60)
+    joined = oblivious_join(lt, rt, ("pid", "pid2"), PRF)
+    head = joined.gather_rows(jnp.arange(10))
+    assert head.n == 10
+    assert all(isinstance(c, LazyGather) for c in head.cols.values())
+    full = joined.reveal()
+    sub = head.reveal()
+    for k in sub:
+        np.testing.assert_array_equal(sub[k], full[k][:10])
+
+
+def test_first_access_materializes_in_place():
+    _, _, lt, rt = _tables(seed=70)
+    joined = oblivious_join(lt, rt, ("pid", "pid2"), PRF)
+    assert isinstance(joined.cols["x"], LazyGather)
+    col = joined.col("x")
+    assert not isinstance(col, LazyGather)
+    assert not isinstance(joined.cols["x"], LazyGather)  # cached
+    assert isinstance(joined.cols["y"], LazyGather)  # others untouched
+
+
+def test_filter_preserves_laziness_of_untouched_cols():
+    l, r, lt, rt = _tables(extra_cols=1, seed=80)
+    joined = oblivious_join(lt, rt, ("pid", "pid2"), PRF)
+    out = oblivious_filter(joined, [Predicate("x", "lt", 6)], PRF)
+    assert isinstance(out.cols["y"], LazyGather)
+    assert isinstance(out.cols["lc0"], LazyGather)
+    got = out.reveal_true_rows()
+    want = sorted(
+        (int(l["x"][i]), int(r["y"][j]))
+        for i in range(lt.n)
+        for j in range(rt.n)
+        if l["pid"][i] == r["pid2"][j] and l["x"][i] < 6
+    )
+    assert sorted(zip(got["x"].tolist(), got["y"].tolist())) == want
+
+
+def test_join_after_join_composes_views():
+    """A second join over a lazy table must compose index maps, not stack
+    LazyGather-of-LazyGather."""
+    _, _, lt, rt = _tables(n1=6, n2=5, seed=90)
+    j1 = oblivious_join(lt, rt, ("pid", "pid2"), PRF)
+    third = SecretTable.from_plaintext(
+        {"pid3": rng.integers(0, 5, 4).astype(np.uint32)}, jax.random.PRNGKey(99)
+    )
+    j2 = oblivious_join(j1, third, ("pid", "pid3"), PRF)
+    assert j2.n == j1.n * third.n
+    for c in j2.cols.values():
+        assert isinstance(c, LazyGather)
+        assert not isinstance(c.base, LazyGather)
+    # count parity with the eager path
+    e1 = oblivious_join(lt, rt, ("pid", "pid2"), PRF, lazy=False)
+    e2 = oblivious_join(e1, third, ("pid", "pid3"), PRF, lazy=False)
+    assert int(j2.reveal()["_valid"].sum()) == int(e2.reveal()["_valid"].sum())
+
+
+def test_empty_input_join():
+    """A zero-row side must yield an empty (well-formed) product, matching
+    the eager path."""
+    _, _, lt, rt = _tables(seed=110)
+    empty = SecretTable(
+        {"pid2": rt.cols["pid2"].take(jnp.arange(0))},
+        rt.valid.take(jnp.arange(0)),
+    )
+    for lazy in (True, False):
+        out = oblivious_join(lt, empty, ("pid", "pid2"), PRF, lazy=lazy)
+        assert out.n == 0
+        assert out.reveal()["_valid"].shape == (0,)
+
+
+def test_ashare_payload_matches_eager_through_resize():
+    """AShare-backed payload (e.g. a groupby count) must take the eager
+    conversion path in the Resizer: same ledger, same output values."""
+    from repro.core.sharing import share_a
+
+    _, _, lt, rt = _tables(seed=120)
+    acol = share_a(np.arange(lt.n, dtype=np.uint32), jax.random.PRNGKey(121))
+    lt.cols["agg"] = acol
+    results = {}
+    for lazy in (True, False):
+        joined = oblivious_join(lt, rt, ("pid", "pid2"), PRF, lazy=lazy)
+        with CommLedger() as led:
+            out, info = Resizer(ResizerConfig(noise=ConstantNoise(0.1)))(
+                joined, PRF, jax.random.PRNGKey(12)
+            )
+        results[lazy] = (out.reveal_true_rows(), led.tally())
+    dl, tl = results[True]
+    de, te = results[False]
+    assert tl == te
+    assert sorted(dl["agg"].tolist()) == sorted(de["agg"].tolist())
+
+
+def test_sortcut_resizer_materializes_lazy_cols():
+    """The sort&cut baseline needs physical columns; it must still be correct
+    on a lazy input table."""
+    _, _, lt, rt = _tables(seed=100)
+    joined = oblivious_join(lt, rt, ("pid", "pid2"), PRF)
+    eager = oblivious_join(lt, rt, ("pid", "pid2"), PRF, lazy=False)
+    cfg = ResizerConfig(noise=ConstantNoise(0.1), use_sort=True)
+    out_l, info_l = Resizer(cfg)(joined, PRF, jax.random.PRNGKey(13))
+    out_e, info_e = Resizer(cfg)(eager, PRF, jax.random.PRNGKey(13))
+    assert info_l["s"] == info_e["s"]
+    dl, de = out_l.reveal_true_rows(), out_e.reveal_true_rows()
+    for k in dl:
+        assert sorted(dl[k].tolist()) == sorted(de[k].tolist())

@@ -10,15 +10,22 @@ from repro.models import decode_step, forward, init_caches, init_params, loss_fn
 from repro.train import AdamWConfig, adamw_init, make_train_step
 
 
+def _embeds(cfg, b, s):
+    # Must vary across the feature dim: LayerNorm maps a feature-constant
+    # vector to exactly zero, which makes a pure-embeddings model (musicgen)
+    # output zero logits and zero gradients.
+    return jax.random.normal(jax.random.PRNGKey(17), (b, s, cfg.d_model)) * 0.02
+
+
 def _batch(cfg, b=2, s=32):
     out = {}
     if cfg.input_mode == "embeddings":
         if cfg.prefix_lm and cfg.n_prefix:
-            out["embeds"] = jnp.ones((b, cfg.n_prefix, cfg.d_model), jnp.float32) * 0.01
+            out["embeds"] = _embeds(cfg, b, cfg.n_prefix)
             out["tokens"] = jnp.zeros((b, s - cfg.n_prefix), jnp.int32)
             out["labels"] = jnp.ones((b, s - cfg.n_prefix), jnp.int32)
         else:
-            out["embeds"] = jnp.ones((b, s, cfg.d_model), jnp.float32) * 0.01
+            out["embeds"] = _embeds(cfg, b, s)
             out["labels"] = jnp.ones((b, s), jnp.int32)
     else:
         out["tokens"] = jnp.zeros((b, s), jnp.int32)

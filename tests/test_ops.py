@@ -3,7 +3,6 @@ import collections
 
 import jax
 import numpy as np
-from hypothesis import given, settings, strategies as st
 
 from repro.core.prf import setup_prf
 from repro.ops import (
@@ -119,28 +118,3 @@ def test_distinct_and_aggregates():
     assert int(count_distinct(tab, "pid", PRF).reveal()["cnt"][0]) == len(uniq)
     assert int(count_valid(tab, PRF).reveal()["cnt"][0]) == valid.sum()
     assert int(sum_column(tab, "pid", PRF).reveal()["sum"][0]) == pid[valid.astype(bool)].sum()
-
-
-@settings(max_examples=15, deadline=None)
-@given(
-    st.lists(st.integers(0, 5), min_size=2, max_size=24),
-    st.lists(st.integers(0, 5), min_size=2, max_size=12),
-)
-def test_property_join_count_matches_plaintext(lk, rk):
-    l = {"k": np.array(lk, dtype=np.uint32)}
-    r = {"k2": np.array(rk, dtype=np.uint32)}
-    out = oblivious_join(_table(l, seed=8), _table(r, seed=9), ("k", "k2"), PRF)
-    got = int(out.reveal()["_valid"].sum())
-    want = sum(1 for a in lk for b in rk if a == b)
-    assert got == want
-
-
-@settings(max_examples=15, deadline=None)
-@given(st.lists(st.integers(0, 8), min_size=1, max_size=32))
-def test_property_groupby_total_equals_rows(ks):
-    k = np.array(ks, dtype=np.uint32)
-    out = oblivious_groupby_count(_table({"k": k}, seed=10), "k", PRF)
-    got = out.reveal()
-    mask = got["_valid"].astype(bool)
-    assert got["cnt"][mask].sum() == len(ks)  # counts partition the rows
-    assert mask.sum() == len(set(ks))  # one representative per group

@@ -1,0 +1,123 @@
+"""Hypothesis property tests for circuits, operators, Resizer, sort, Waksman.
+
+Collected only when ``hypothesis`` is installed (see requirements-dev.txt);
+the deterministic tests for the same modules live in their own files and run
+everywhere. Keeping the property suite in one guarded module lets the tier-1
+command collect on a bare ``requirements.txt`` environment.
+"""
+import jax
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.circuits import b2a, eq_public, lt_public
+from repro.core.noise import BetaNoise
+from repro.core.prf import setup_prf
+from repro.core.resizer import Resizer, ResizerConfig
+from repro.core.sharing import reveal_a, reveal_b, share_b
+from repro.core.sort import bitonic_sort
+from repro.core.waksman import apply_network, route
+from repro.ops import SecretTable, oblivious_groupby_count, oblivious_join
+
+PRF = setup_prf(jax.random.PRNGKey(1))
+rng = np.random.default_rng(1)
+
+
+def _b(x, tag=0):
+    return share_b(x, jax.random.PRNGKey(100 + tag))
+
+
+def _table(data, valid=None, seed=0):
+    return SecretTable.from_plaintext(data, jax.random.PRNGKey(seed), valid=valid)
+
+
+# -- circuits -----------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.lists(st.integers(0, 2**32 - 1), min_size=1, max_size=40),
+    st.integers(0, 2**32 - 2),
+)
+def test_property_compare_matches_plaintext(vals, c):
+    x = np.array(vals, dtype=np.uint32)
+    xb = _b(x, 4)
+    assert (np.asarray(reveal_b(lt_public(xb, c, PRF))) == (x < c)).all()
+    assert (np.asarray(reveal_b(eq_public(xb, c, PRF))) == (x == c)).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 2**32 - 1), min_size=1, max_size=40))
+def test_property_b2a_roundtrip(vals):
+    x = np.array(vals, dtype=np.uint32)
+    assert (np.asarray(reveal_a(b2a(_b(x, 5), PRF))) == x).all()
+
+
+# -- operators ----------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.lists(st.integers(0, 5), min_size=2, max_size=24),
+    st.lists(st.integers(0, 5), min_size=2, max_size=12),
+)
+def test_property_join_count_matches_plaintext(lk, rk):
+    l = {"k": np.array(lk, dtype=np.uint32)}
+    r = {"k2": np.array(rk, dtype=np.uint32)}
+    out = oblivious_join(_table(l, seed=8), _table(r, seed=9), ("k", "k2"), PRF)
+    got = int(out.reveal()["_valid"].sum())
+    want = sum(1 for a in lk for b in rk if a == b)
+    assert got == want
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.integers(0, 8), min_size=1, max_size=32))
+def test_property_groupby_total_equals_rows(ks):
+    k = np.array(ks, dtype=np.uint32)
+    out = oblivious_groupby_count(_table({"k": k}, seed=10), "k", PRF)
+    got = out.reveal()
+    mask = got["_valid"].astype(bool)
+    assert got["cnt"][mask].sum() == len(ks)  # counts partition the rows
+    assert mask.sum() == len(set(ks))  # one representative per group
+
+
+# -- resizer ------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(10, 60), st.floats(0.05, 0.9))
+def test_property_s_bounds(n, sel):
+    vals = rng.integers(0, 100, n).astype(np.uint32)
+    valid = (rng.random(n) < sel).astype(np.uint32)
+    tab = SecretTable.from_plaintext({"v": vals}, jax.random.PRNGKey(5), valid=valid)
+    t = int(valid.sum())
+    out, info = Resizer(ResizerConfig(noise=BetaNoise(2, 6)))(
+        tab, PRF, jax.random.PRNGKey(6)
+    )
+    assert t <= info["s"] <= n  # T <= S = T + eta <= N (paper §3.2)
+
+
+# -- sort ---------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 6))
+def test_property_sort_is_permutation(logn):
+    n = 1 << logn
+    k = rng.integers(0, 50, n).astype(np.uint32)
+    cols = {"k": share_b(k, jax.random.PRNGKey(9))}
+    out = bitonic_sort(cols, "k", PRF)
+    ks = np.asarray(reveal_b(out["k"]))
+    assert sorted(ks.tolist()) == sorted(k.tolist())
+    assert (np.diff(ks.astype(np.int64)) >= 0).all()
+
+
+# -- Waksman routing ----------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 5), st.integers(0, 2**31 - 1))
+def test_property_routing(logn, seed):
+    n = 1 << logn
+    perm = np.random.default_rng(seed).permutation(n)
+    payload = np.random.default_rng(seed + 1).integers(0, 1000, n)
+    out = apply_network(route(perm), payload)
+    np.testing.assert_array_equal(out, payload[perm])

@@ -2,7 +2,6 @@
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.ledger import CommLedger
 from repro.core.noise import (
@@ -138,16 +137,3 @@ def test_resizer_comm_linear_in_n():
         costs[n] = led.tally()["bytes_per_party"]
     ratio = costs[256] / costs[128]
     assert 1.8 < ratio < 2.2  # O(N)
-
-
-@settings(max_examples=10, deadline=None)
-@given(st.integers(10, 60), st.floats(0.05, 0.9))
-def test_property_s_bounds(n, sel):
-    vals = rng.integers(0, 100, n).astype(np.uint32)
-    valid = (rng.random(n) < sel).astype(np.uint32)
-    tab = SecretTable.from_plaintext({"v": vals}, jax.random.PRNGKey(5), valid=valid)
-    t = int(valid.sum())
-    out, info = Resizer(ResizerConfig(noise=BetaNoise(2, 6)))(
-        tab, PRF, jax.random.PRNGKey(6)
-    )
-    assert t <= info["s"] <= n  # T <= S = T + eta <= N (paper §3.2)

@@ -2,7 +2,6 @@
 must be exactly realized; switch count matches the closed form."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.waksman import apply_network, n_switches, route
 
@@ -29,13 +28,3 @@ def test_switch_count_closed_form():
     for m in range(1, 8):
         n = 1 << m
         assert n_switches(n) == n * m - n + 1
-
-
-@settings(max_examples=20, deadline=None)
-@given(st.integers(1, 5), st.integers(0, 2**31 - 1))
-def test_property_routing(logn, seed):
-    n = 1 << logn
-    perm = np.random.default_rng(seed).permutation(n)
-    payload = np.random.default_rng(seed + 1).integers(0, 1000, n)
-    out = apply_network(route(perm), payload)
-    np.testing.assert_array_equal(out, payload[perm])

@@ -1,0 +1,100 @@
+"""Service-layer sweep: SQL compile time, plan-cache hit rate, accountant
+overhead, and the escalation path, over the four HealthLnK queries submitted
+as SQL through :class:`AnalyticsService` by several tenants.
+
+Emits ``BENCH_service.json`` at the repo root with machine-readable per-node
+``ExecutionReport.to_dict()`` payloads alongside the service counters (the
+compile-cache sweep the CI artifacts track).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+from benchmarks.common import Row, timeit
+from repro.core.noise import TruncatedLaplace
+from repro.data import generate_healthlnk
+from repro.data.queries import QUERY_SQL
+from repro.service import AnalyticsService, PrivacyAccountant
+from repro.sql import compile_logical, compile_query
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_service.json")
+
+N_ROWS = 24  # CPU-scale (see benchmarks/common.py)
+TENANTS = ("alice", "bob", "carol")
+
+
+def run() -> list:
+    rows: list[Row] = []
+    artifact: dict = {"n_rows": N_ROWS, "queries": {}, "compile_us": {}}
+
+    # -- pure SQL->plan compile time (parse + optimize, no placement) ---------
+    for name, sql in QUERY_SQL.items():
+        us = timeit(lambda s=sql: compile_logical(s), repeats=5) * 1e6
+        rows.append((f"sql_compile_{name}", us, "parse+optimize"))
+        artifact["compile_us"][name] = us
+    us = timeit(
+        lambda: compile_query(
+            QUERY_SQL["three_join"],
+            placement="cost_based",
+            noise=TruncatedLaplace(eps=0.5, sensitivity=4),
+        ),
+        repeats=5,
+    ) * 1e6
+    rows.append(("sql_compile_three_join_placed", us, "with cost_based placement"))
+    artifact["compile_us"]["three_join_placed"] = us
+
+    # -- multi-tenant service sweep: 3 tenants x 4 queries x 2 passes ---------
+    tables, _ = generate_healthlnk(n=N_ROWS, seed=3, aspirin_frac=0.4,
+                                   icd_heart_frac=0.3)
+    svc = AnalyticsService(
+        tables,
+        noise=TruncatedLaplace(eps=0.5, sensitivity=4),
+        placement="after_joins",
+        accountant=PrivacyAccountant(policy="escalate"),
+        key=jax.random.PRNGKey(0),
+    )
+    compile_s = acct_s = exec_s = 0.0
+    for _ in range(2):
+        for tenant in TENANTS:
+            session = svc.session(tenant)
+            for name, sql in QUERY_SQL.items():
+                t0 = time.perf_counter()
+                res = session.submit(sql)
+                exec_s += time.perf_counter() - t0
+                compile_s += res.compile_seconds
+                acct_s += res.accountant_seconds
+                artifact["queries"].setdefault(name, res.report.to_dict())
+
+    cache = svc.cache_stats()
+    n_q = svc.stats["queries"]
+    rows.append(("service_plan_cache_hit_rate", cache["hit_rate"] * 100, f"{cache['hits']}/{cache['hits'] + cache['misses']} lookups"))
+    rows.append(("service_compile_us_per_query", compile_s / n_q * 1e6, "amortized, cache-assisted"))
+    rows.append(("service_accountant_us_per_query", acct_s / n_q * 1e6, "admit+record"))
+    rows.append(("service_total_us_per_query", exec_s / n_q * 1e6, f"{n_q} queries, {len(TENANTS)} tenants"))
+    rows.append(("service_escalations", float(svc.accountant.escalation_count), "budget-driven noise widenings"))
+
+    artifact["plan_cache"] = cache
+    artifact["accountant"] = {
+        "status": svc.accountant.status(),
+        "escalations": svc.accountant.escalation_count,
+        "overhead_us_per_query": acct_s / n_q * 1e6,
+    }
+    artifact["service"] = {
+        "queries": n_q,
+        "tenants": len(TENANTS),
+        "compile_us_per_query": compile_s / n_q * 1e6,
+        "total_us_per_query": exec_s / n_q * 1e6,
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(artifact, f, indent=2, sort_keys=True, default=float)
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

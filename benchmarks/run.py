@@ -20,6 +20,7 @@ MODULES = [
     "bench_crt_distributions",  # Fig 11
     "bench_security_tradeoff",  # §5.4 example
     "bench_kernels",  # kernel layer
+    "bench_service",  # SQL/service layer -> BENCH_service.json
     "bench_lm_roofline",  # LM dry-run roofline table
 ]
 

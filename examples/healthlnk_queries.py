@@ -1,56 +1,100 @@
-"""HealthLnK workloads end-to-end: the paper's four queries (Table 2) under
-fully-oblivious / sort&cut / Reflex / revealed execution, with result
-validation against the plaintext oracle and a runtime + communication
-comparison table (the Fig. 8 experiment, interactive edition).
+"""HealthLnK workloads end-to-end, SQL edition: the paper's four queries
+(Table 2) submitted as SQL strings through the multi-tenant
+:class:`AnalyticsService` — parse -> optimize -> Resizer placement -> execute,
+with plan-cache and CRT-budget telemetry, result validation against the
+plaintext oracle, and a runtime + communication comparison across
+fully-oblivious / Reflex / revealed placements (the Fig. 8 experiment,
+interactive edition).
 
 Run:  PYTHONPATH=src python examples/healthlnk_queries.py [n_rows]
 """
 import sys
-import time
 
 import jax
 
-from repro.core.noise import RevealNoise, TruncatedLaplace
-from repro.core.resizer import ResizerConfig
-from repro.data import all_query_plans, generate_healthlnk, plaintext_oracle
-from repro.engine import Engine
-from repro.plan import insert_resizers
+from repro.core.noise import NoTrim, RevealNoise, TruncatedLaplace
+from repro.data import generate_healthlnk, plaintext_oracle
+from repro.data.queries import QUERY_SQL
+from repro.service import AnalyticsService, PrivacyAccountant
+
+
+def check(result, oracle):
+    rows = result.rows
+    if "cnt" in rows and len(rows["cnt"]) == 1:
+        shown = int(rows["cnt"][0])
+        return shown, (shown == oracle if isinstance(oracle, int) else True)
+    if "pid" in rows:
+        shown = sorted(set(rows["pid"].tolist()))
+        return shown, shown == oracle
+    return "(table)", True
 
 
 def main():
     n = int(sys.argv[1]) if len(sys.argv) > 1 else 24
-    tables, plain = generate_healthlnk(n=n, seed=3, aspirin_frac=0.35, icd_heart_frac=0.3)
+    tables, plain = generate_healthlnk(
+        n=n, seed=3, aspirin_frac=0.35, icd_heart_frac=0.3
+    )
     tlap = TruncatedLaplace(eps=0.5, delta=5e-5, sensitivity=max(n // 8, 1))
     modes = {
-        "fully_oblivious": None,
-        "sortcut": ResizerConfig(noise=tlap, addition="sequential", use_sort=True),
-        "reflex": ResizerConfig(noise=tlap, addition="parallel"),
-        "revealed": ResizerConfig(noise=RevealNoise()),
+        "fully_oblivious": dict(noise=NoTrim(), placement="none"),
+        "reflex": dict(noise=tlap, placement="all_internal"),
+        "revealed": dict(noise=RevealNoise(), placement="all_internal"),
     }
-    print(f"{'query':<16}{'mode':<18}{'sec':>8}{'MiB/party':>12}{'rounds':>9}  result")
-    for qname, plan in all_query_plans().items():
-        oracle = plaintext_oracle(qname, plain)
-        for mode, cfg in modes.items():
-            p = plan if cfg is None else insert_resizers(
-                plan, lambda _: cfg, placement="all_internal"
-            )
-            eng = Engine(tables, key=jax.random.PRNGKey(5))
-            t0 = time.perf_counter()
-            out, rep = eng.execute(p)
-            dt = time.perf_counter() - t0
-            res = out.reveal_true_rows()
-            if "cnt" in res and len(res["cnt"]) == 1:
-                shown = int(res["cnt"][0])
-                ok = shown == oracle if isinstance(oracle, int) else True
-            elif "pid" in res:
-                shown = sorted(set(res["pid"].tolist()))
-                ok = shown == oracle
-            else:
-                shown, ok = "(table)", True
+    print(
+        f"{'query':<16}{'mode':<18}{'sec':>8}{'MiB/party':>12}{'rounds':>9}"
+        f"{'cache':>7}  result"
+    )
+    for mode, cfg in modes.items():
+        svc = AnalyticsService(
+            tables,
+            accountant=PrivacyAccountant(policy="escalate"),
+            key=jax.random.PRNGKey(5),
+            **cfg,
+        )
+        session = svc.session("example")
+        for qname, sql in QUERY_SQL.items():
+            res = session.submit(sql)
+            shown, ok = check(res, plaintext_oracle(qname, plain))
             print(
-                f"{qname:<16}{mode:<18}{dt:>8.2f}{rep.total_bytes/2**20:>12.3f}"
-                f"{rep.total_rounds:>9}  {'OK' if ok else 'MISMATCH'} {shown}"
+                f"{qname:<16}{mode:<18}{res.report.total_seconds:>8.2f}"
+                f"{res.report.total_bytes / 2**20:>12.3f}"
+                f"{res.report.total_rounds:>9}"
+                f"{'hit' if res.cache_hit else 'miss':>7}"
+                f"  {'OK' if ok else 'MISMATCH'} {shown}"
             )
+        # resubmit the first query: the plan cache serves it, and the
+        # accountant keeps charging the CRT budget per disclosure
+        res = session.submit(QUERY_SQL["comorbidity"])
+        stats = svc.cache_stats()
+        print(
+            f"  [{mode}] plan-cache hit rate {stats['hit_rate']:.0%} "
+            f"({stats['hits']}/{stats['hits'] + stats['misses']}), "
+            f"escalations {svc.accountant.escalation_count}"
+        )
+    # a fresh service under a tight budget: watch the escalation ladder fire
+    print("\nescalation-ladder demo (fresh tight-budget service):")
+    svc = AnalyticsService(
+        tables,
+        noise=TruncatedLaplace(eps=2.0, sensitivity=1),
+        addition="sequential",
+        placement="after_joins",
+        accountant=PrivacyAccountant(policy="escalate"),
+        key=jax.random.PRNGKey(7),
+    )
+    session = svc.session("attacker")
+    for i in range(6):
+        res = session.submit(QUERY_SQL["dosage_study"])
+        note = (
+            "escalated -> " + res.escalations[-1]["to"].split("|")[0]
+            if res.escalations
+            else "ok"
+        )
+        print(f"  submit {i + 1}: {note}")
+    for st in svc.accountant.status():
+        print(
+            f"  {st['strategy'].split('|')[0]:<60} observed {st['observed']}"
+            f"/{st['budget']}"
+        )
 
 
 if __name__ == "__main__":

@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import numpy as np
@@ -89,6 +89,16 @@ class TruncatedLaplace(NoiseStrategy):
     delta: float = 0.00005
     sensitivity: float = 1.0
     name: str = "tlap"
+    # moments cache: the grid integration costs 200k points and mean()/var()
+    # are called in loops by the cost model and the privacy accountant.
+    _moments_cache: Optional[Tuple[float, float]] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False
+    )
+    # how many grid integrations this instance has run (regression-tested:
+    # repeated mean()/var() calls must not re-integrate)
+    integrations: int = dataclasses.field(
+        default=0, init=False, repr=False, compare=False
+    )
 
     @property
     def b(self) -> float:
@@ -114,7 +124,11 @@ class TruncatedLaplace(NoiseStrategy):
         return self.mu - self.b * math.log(2.0 * (1.0 - u))
 
     def _moments(self) -> Tuple[float, float]:
-        # numeric moments of the truncated distribution (grid integration)
+        # numeric moments of the truncated distribution (grid integration),
+        # computed once per instance — parameters are set at construction
+        if self._moments_cache is not None:
+            return self._moments_cache
+        self.integrations += 1
         lo, hi = 0.0, self.mu + 40.0 * self.b
         xs = np.linspace(lo, hi, 200001)
         pdf = np.exp(-np.abs(xs - self.mu) / self.b) / (2.0 * self.b)
@@ -122,6 +136,7 @@ class TruncatedLaplace(NoiseStrategy):
         pdf /= z
         m = float(np.trapezoid(xs * pdf, xs))
         v = float(np.trapezoid((xs - m) ** 2 * pdf, xs))
+        self._moments_cache = (m, v)
         return m, v
 
     def mean(self, n: int, t: int) -> float:

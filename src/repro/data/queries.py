@@ -33,6 +33,8 @@ __all__ = [
     "aspirin_count_plan",
     "three_join_plan",
     "all_query_plans",
+    "all_query_sql",
+    "QUERY_SQL",
 ]
 
 
@@ -90,3 +92,40 @@ def all_query_plans():
         "aspirin_count": aspirin_count_plan(),
         "three_join": three_join_plan(),
     }
+
+
+# -----------------------------------------------------------------------------
+# SQL forms — goldens for the SQL frontend (repro.sql): each string must
+# compile to a plan structurally equal to its hand-compiled twin above
+# (tests/test_sql.py; `python -m repro.sql --check`). Comma-FROM pools go
+# through cost-based join reordering; explicit JOIN chains are honored as
+# written, which is how the three-join golden pins the paper's join order.
+# -----------------------------------------------------------------------------
+
+QUERY_SQL = {
+    "comorbidity": (
+        "SELECT major_icd9, COUNT(*) AS cnt FROM diagnoses "
+        "GROUP BY major_icd9 ORDER BY COUNT(*) DESC LIMIT 10"
+    ),
+    "dosage_study": (
+        "SELECT DISTINCT d.pid FROM diagnoses d, medications m "
+        f"WHERE d.pid = m.pid AND d.icd9 = {ICD9_CIRCULATORY} "
+        f"AND m.med = {MED_ASPIRIN} AND m.dosage = {DOSAGE_325MG}"
+    ),
+    "aspirin_count": (
+        "SELECT COUNT(DISTINCT d.pid) FROM diagnoses d "
+        "JOIN medications m ON d.pid = m.pid AND d.time <= m.time "
+        f"WHERE d.icd9 = {ICD9_HEART_414} AND m.med = {MED_ASPIRIN}"
+    ),
+    "three_join": (
+        "SELECT COUNT(DISTINCT d.pid) FROM diagnoses d "
+        "JOIN medications m ON d.pid = m.pid AND d.time <= m.time "
+        "JOIN demographics demo ON d.pid = demo.pid "
+        "JOIN demographics demo2 ON d.pid = demo2.pid "
+        f"WHERE d.diag = {DIAG_HEART_DISEASE} AND m.med = {MED_ASPIRIN}"
+    ),
+}
+
+
+def all_query_sql():
+    return dict(QUERY_SQL)

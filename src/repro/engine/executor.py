@@ -12,6 +12,7 @@ benchmarks print and what reproduces the paper's Figures 6-9.
 from __future__ import annotations
 
 import dataclasses
+import json
 import time
 from collections import OrderedDict
 from typing import Callable, Dict, List, Optional
@@ -74,6 +75,39 @@ class ExecutionReport:
     @property
     def total_rounds(self) -> int:
         return sum(s.rounds for s in self.nodes)
+
+    def to_dict(self) -> Dict:
+        """JSON-safe per-node report (machine-readable twin of summary())."""
+
+        def safe(v):
+            if isinstance(v, dict):
+                return {k: safe(x) for k, x in v.items()}
+            if isinstance(v, (list, tuple)):
+                return [safe(x) for x in v]
+            if hasattr(v, "item"):  # numpy / jax scalars
+                return v.item()
+            return v
+
+        return {
+            "nodes": [
+                {
+                    "node": s.node,
+                    "n_in": int(s.n_in),
+                    "n_out": int(s.n_out),
+                    "seconds": float(s.seconds),
+                    "bytes_per_party": int(s.bytes_per_party),
+                    "rounds": int(s.rounds),
+                    "extra": safe(s.extra),
+                }
+                for s in self.nodes
+            ],
+            "total_seconds": float(self.total_seconds),
+            "total_bytes": int(self.total_bytes),
+            "total_rounds": int(self.total_rounds),
+        }
+
+    def to_json(self, indent: Optional[int] = None) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
 
     def summary(self) -> str:
         lines = [
@@ -139,9 +173,11 @@ class Engine:
         self.bucket_fn = bucket_fn
         self.jit_ops = jit_ops
         self._resize_ctr = 0
+        self._last_resize_info: Optional[Dict] = None
 
     def execute(self, plan: PlanNode) -> tuple[SecretTable, ExecutionReport]:
         report = ExecutionReport()
+        self._last_resize_info = None  # never carry info across runs
         out = self._run(plan, report)
         return out, report
 
@@ -158,7 +194,10 @@ class Engine:
         n_in = children[0].n if children else 0
         extra = {}
         if isinstance(node, Resize):
-            extra = getattr(self, "_last_resize_info", {})
+            # consume the info this node's _apply just produced; clearing it
+            # keeps a later Resize (or a later run) from reporting stale info
+            extra = self._last_resize_info or {}
+            self._last_resize_info = None
         report.nodes.append(
             NodeStats(
                 node=node.describe(),

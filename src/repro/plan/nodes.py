@@ -98,7 +98,10 @@ class GroupByCount(PlanNode):
     count_name: str = "cnt"
 
     def describe(self) -> str:
-        return f"GroupByCount({self.key})"
+        # count_name is part of the node's identity: describe() feeds plan
+        # fingerprints (sql/compile.py) and jit-cache keys, and two plans
+        # differing only in the count column name are different plans
+        return f"GroupByCount({self.key}->{self.count_name})"
 
 
 @dataclasses.dataclass

@@ -1,0 +1,18 @@
+"""Multi-tenant analytics service: SQL sessions, plan cache, CRT budget."""
+from .accountant import (  # noqa: F401
+    PrivacyAccountant,
+    QueryRefused,
+    escalate_strategy,
+    strategy_key,
+)
+from .service import AnalyticsService, QueryResult, TenantSession  # noqa: F401
+
+__all__ = [
+    "AnalyticsService",
+    "PrivacyAccountant",
+    "QueryRefused",
+    "QueryResult",
+    "TenantSession",
+    "escalate_strategy",
+    "strategy_key",
+]

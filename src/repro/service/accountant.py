@@ -1,0 +1,247 @@
+"""PrivacyAccountant: the CRT metric enforced as a runtime budget.
+
+The paper's Cardinality Recovery Threshold (core/crt.py, §3.3) says how many
+*equivalent observations* r of a noisy intermediate size S = T + eta an
+attacker needs to pin the true size T within ±err at confidence alpha. The
+offline metric guards nothing: an engine that happily serves observation
+r + 1 hands the attacker exactly the sample mean it needs. This module turns
+the metric into an admission-control budget (DESIGN.md §9).
+
+**What counts as one observation.** Every non-NoTrim ``Resize`` node reveals
+one noisy size S when it trims. Two reveals are *equivalent* — i.i.d. draws
+of the same S distribution — iff they resize the same logical intermediate
+(structurally identical subplan over the same base tables, hence the same T)
+using the same noise strategy and addition design. The observation signature
+is therefore ``(fingerprint(child subplan), strategy key, addition)``; the
+budget for a signature is ``floor(crt_rounds(noise, addition, N, T, err,
+confidence))``, initialized on first observation (when N and T are known) and
+decremented on every subsequent one. Budgets are *global* across tenants —
+colluding tenants submitting the same query are one attacker.
+
+**Depletion.** When a signature's budget is exhausted the accountant either
+refuses the query (``policy="refuse"``) or escalates the noise strategy
+(``policy="escalate"``): TLap eps is halved (4x the variance, so ~4x the
+fresh budget) until ``min_eps``, then the Resizer degenerates to NoTrim —
+no trim, no disclosure, no budget to spend. Observations under the escalated
+strategy form a *new* signature: mixing draws from different distributions
+does not refund the attacker's spent observations (Eq. 1 assumes i.i.d.
+noise), so per-strategy accounting is conservative and correct.
+
+Simulation note: T is read from the Resizer's oracle info — the coordinator-
+side trusted state a real deployment would hold as each party's share of the
+accounting, or bound via a DP estimate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+from ..core.crt import crt_rounds
+from ..core.noise import BetaNoise, NoiseStrategy, NoTrim, TruncatedLaplace
+from ..engine.executor import ExecutionReport
+from ..plan.nodes import PlanNode, Resize
+from ..sql.compile import plan_fingerprint
+
+__all__ = ["PrivacyAccountant", "QueryRefused", "strategy_key", "escalate_strategy"]
+
+
+class QueryRefused(RuntimeError):
+    """Raised under ``policy='refuse'`` when a query would spend an
+    observation a signature's CRT budget no longer covers."""
+
+    def __init__(self, signature: Tuple[str, str], observed: int, budget: int):
+        self.signature = signature
+        self.observed = observed
+        self.budget = budget
+        super().__init__(
+            f"CRT budget exhausted for resize of:\n{signature[0]}\n"
+            f"strategy={signature[1]}: "
+            f"{observed}/{budget} observations already disclosed"
+        )
+
+
+def strategy_key(noise: NoiseStrategy, addition: str) -> str:
+    """Stable identity of a (noise strategy, addition design) pair — dataclass
+    repr carries every calibration parameter."""
+    return f"{noise!r}|{addition}"
+
+
+def escalate_strategy(
+    noise: NoiseStrategy, min_eps: float = 0.0625
+) -> Optional[NoiseStrategy]:
+    """Next rung of the noise ladder, or None if there is none (NoTrim).
+
+    TLap: halve eps (b doubles, Var(eta) ~ 4x, so Eq. 1 gives ~4x budget)
+    until min_eps, then NoTrim. Beta: halve (alpha, beta) — same mean
+    fraction, fatter spread — until alpha < 0.5, then NoTrim. Everything
+    else jumps straight to NoTrim (fully oblivious: nothing disclosed).
+    """
+    if isinstance(noise, NoTrim):
+        return None
+    if isinstance(noise, TruncatedLaplace) and noise.eps / 2.0 >= min_eps:
+        return TruncatedLaplace(
+            eps=noise.eps / 2.0, delta=noise.delta, sensitivity=noise.sensitivity
+        )
+    if isinstance(noise, BetaNoise) and noise.alpha / 2.0 >= 0.5:
+        return BetaNoise(alpha=noise.alpha / 2.0, beta=noise.beta / 2.0)
+    return NoTrim()
+
+
+@dataclasses.dataclass
+class _SigState:
+    observed: int = 0
+    budget: Optional[int] = None  # set at first observation (needs N, T)
+    n: int = 0
+    t: int = 0
+
+
+class PrivacyAccountant:
+    """Tracks per-signature observation counts against ``crt_rounds`` and
+    rewrites (or refuses) plans whose next reveal would exceed the budget."""
+
+    def __init__(
+        self,
+        err: float = 1.0,
+        confidence: float = 0.999,
+        policy: str = "escalate",  # "escalate" | "refuse"
+        min_eps: float = 0.0625,
+    ):
+        if policy not in ("escalate", "refuse"):
+            raise ValueError(f"unknown policy {policy!r}")
+        self.err = err
+        self.confidence = confidence
+        self.policy = policy
+        self.min_eps = min_eps
+        self._state: Dict[Tuple[str, str], _SigState] = {}
+        self.escalation_count = 0
+        self.refusal_count = 0
+
+    # -- signatures -----------------------------------------------------------
+    def signature(self, node: Resize) -> Tuple[str, str]:
+        # strategy_key already embeds the addition design
+        return (
+            plan_fingerprint(node.child),
+            strategy_key(node.cfg.noise, node.cfg.addition),
+        )
+
+    def budget_for(self, noise: NoiseStrategy, addition: str, n: int, t: int) -> int:
+        """floor(crt_rounds): the number of equivalent observations that may
+        be disclosed before the attacker's Eq. 1 estimator reaches ±err at
+        the configured confidence."""
+        return int(
+            math.floor(
+                crt_rounds(noise, addition, n, t, err=self.err,
+                           confidence=self.confidence)
+            )
+        )
+
+    def remaining(self, sig: Tuple[str, str]) -> Optional[int]:
+        st = self._state.get(sig)
+        if st is None or st.budget is None:
+            return None  # not yet observed: first observation is always free
+        return st.budget - st.observed
+
+    # -- admission ------------------------------------------------------------
+    def admit(self, plan: PlanNode) -> Tuple[PlanNode, List[Dict]]:
+        """Check every Resize in the plan against its budget. Returns a
+        (possibly rewritten) plan plus the escalation records. Raises
+        :class:`QueryRefused` under ``policy='refuse'``. The input plan is
+        never mutated (it may be cache-shared).
+
+        A plan may contain several Resizes with the *same* signature
+        (duplicated subtrees, e.g. a self-join); ``planned`` charges them
+        against the remaining budget as a group so a single admit cannot
+        overdraw a known budget. (A signature's very first budget is only
+        learned at execution, so duplicates inside the first-ever plan for a
+        signature may still spend up to that plan's multiplicity.)"""
+        escalations: List[Dict] = []
+        planned: Dict[Tuple[str, str], int] = {}
+
+        def rewrite(node: PlanNode) -> PlanNode:
+            old_children = node.children()
+            new_children = [rewrite(c) for c in old_children]
+            if any(n is not o for n, o in zip(new_children, old_children)):
+                node = node.replace_children(new_children)  # preserve identity
+                # when nothing changed: cache hits stay shared objects
+            if not isinstance(node, Resize) or isinstance(node.cfg.noise, NoTrim):
+                return node
+            while True:
+                sig = self.signature(node)
+                rem = self.remaining(sig)
+                if rem is None or rem - planned.get(sig, 0) > 0:
+                    planned[sig] = planned.get(sig, 0) + 1
+                    return node
+                st = self._state[sig]
+                if self.policy == "refuse":
+                    self.refusal_count += 1
+                    raise QueryRefused(sig, st.observed, st.budget)
+                nxt = escalate_strategy(node.cfg.noise, self.min_eps)
+                if nxt is None:
+                    return node  # already NoTrim: nothing disclosed
+                self.escalation_count += 1
+                escalations.append(
+                    {
+                        "from": strategy_key(node.cfg.noise, node.cfg.addition),
+                        "to": strategy_key(nxt, node.cfg.addition),
+                        "observed": st.observed,
+                        "budget": st.budget,
+                    }
+                )
+                node = Resize(
+                    node.child, dataclasses.replace(node.cfg, noise=nxt)
+                )
+                if isinstance(nxt, NoTrim):
+                    return node
+
+        return rewrite(plan), escalations
+
+    # -- recording ------------------------------------------------------------
+    def record(self, plan: PlanNode, report: ExecutionReport) -> None:
+        """Charge one observation per executed non-NoTrim Resize, matching
+        plan Resize nodes (post-order == execution order) to the report's
+        per-node resize info to learn (N, T) for budget initialization."""
+        resizes: List[Resize] = []
+
+        def collect(node: PlanNode) -> None:
+            for c in node.children():
+                collect(c)
+            if isinstance(node, Resize):
+                resizes.append(node)
+
+        collect(plan)
+        infos = [s.extra for s in report.nodes if s.node.startswith("Resize")]
+        if len(infos) != len(resizes):
+            raise RuntimeError(
+                f"report has {len(infos)} resize entries for "
+                f"{len(resizes)} Resize nodes — cannot attribute observations"
+            )
+        for node, info in zip(resizes, infos):
+            if isinstance(node.cfg.noise, NoTrim) or info.get("skipped"):
+                continue
+            sig = self.signature(node)
+            st = self._state.setdefault(sig, _SigState())
+            if st.budget is None:
+                st.n, st.t = int(info["n"]), int(info["t"])
+                st.budget = max(
+                    self.budget_for(
+                        node.cfg.noise, node.cfg.addition, st.n, st.t
+                    ),
+                    1,
+                )
+            st.observed += 1
+
+    # -- reporting ------------------------------------------------------------
+    def status(self) -> List[Dict]:
+        return [
+            {
+                "subplan": sig[0].splitlines()[0],
+                "strategy": sig[1],
+                "observed": st.observed,
+                "budget": st.budget,
+                "remaining": None if st.budget is None else st.budget - st.observed,
+                "n": st.n,
+                "t": st.t,
+            }
+            for sig, st in self._state.items()
+        ]

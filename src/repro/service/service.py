@@ -1,0 +1,210 @@
+"""AnalyticsService: a multi-tenant SQL front end over the Engine.
+
+Each tenant opens a :class:`TenantSession` and submits SQL strings; the
+service compiles them through :mod:`repro.sql` (predicate pushdown, cost-based
+join ordering, Resizer placement), runs them on one shared :class:`Engine`
+(whose process-wide ``_JIT_CACHE`` already reuses compiled operator
+executables across queries), and returns revealed results plus the full
+per-node :class:`ExecutionReport`.
+
+Two service-level layers sit on top (DESIGN.md §9):
+
+* **Compiled-plan cache** — keyed on ``(normalized logical plan fingerprint,
+  placement, strategy, bucketed base-table shapes)``. Differently-written but
+  equivalent SQL (aliases, whitespace, predicate spelling) normalizes to the
+  same fingerprint and reuses the same *physical plan object*, which keeps
+  the Engine's per-op jit cache keys stable too. Shapes are bucketed to the
+  next power of two so a growing base table does not thrash the cache.
+* **PrivacyAccountant** — every submit is admission-checked against the CRT
+  budget before execution and charged after (accountant.py). Budgets are
+  global across tenants.
+
+Per-query noise freshness: the Engine folds a monotonically increasing
+counter into every Resizer's PRNG key, so repeated executions of the same
+plan draw i.i.d. noise — exactly the attacker model CRT prices.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from ..core.noise import NoiseStrategy, shrinkwrap_default
+from ..engine.executor import Engine, ExecutionReport
+from ..ops.table import SecretTable
+from ..plan.nodes import PlanNode
+from ..sql.catalog import Catalog
+from ..sql.compile import (
+    compile_logical,
+    default_cost_model,
+    plan_fingerprint,
+)
+from ..plan.policies import insert_resizers
+from ..core.resizer import ResizerConfig
+from .accountant import PrivacyAccountant, QueryRefused, strategy_key
+
+__all__ = ["AnalyticsService", "TenantSession", "QueryResult"]
+
+
+def _bucket_pow2(n: int) -> int:
+    return 1 << max(int(n) - 1, 1).bit_length()
+
+
+@dataclasses.dataclass
+class QueryResult:
+    tenant: str
+    sql: str
+    plan: PlanNode
+    table: SecretTable
+    rows: Optional[Dict[str, np.ndarray]]
+    report: ExecutionReport
+    cache_hit: bool
+    compile_seconds: float
+    accountant_seconds: float
+    escalations: List[Dict]
+
+
+class TenantSession:
+    def __init__(self, service: "AnalyticsService", tenant: str):
+        self.service = service
+        self.tenant = tenant
+
+    def submit(self, sql: str) -> QueryResult:
+        return self.service.submit(self.tenant, sql)
+
+
+class AnalyticsService:
+    def __init__(
+        self,
+        tables: Dict[str, SecretTable],
+        *,
+        catalog: Optional[Catalog] = None,
+        noise: Optional[NoiseStrategy] = None,
+        addition: str = "parallel",
+        placement: str = "cost_based",
+        accountant: Optional[PrivacyAccountant] = None,
+        key: Optional[jax.Array] = None,
+        jit_ops: bool = False,
+        plan_cache_size: int = 256,
+        reveal_results: bool = True,
+        reorder_joins: bool = True,
+    ):
+        self.tables = tables
+        self.catalog = catalog or Catalog.from_tables(tables)
+        self.noise = noise if noise is not None else shrinkwrap_default()
+        self.addition = addition
+        self.placement = placement
+        self.accountant = accountant or PrivacyAccountant()
+        self.reveal_results = reveal_results
+        self.reorder_joins = reorder_joins
+        self.engine = Engine(
+            tables, key=key if key is not None else jax.random.PRNGKey(0),
+            jit_ops=jit_ops,
+        )
+        self._plan_cache: "OrderedDict" = OrderedDict()
+        self._plan_cache_max = plan_cache_size
+        self.stats = {
+            "queries": 0,
+            "plan_cache_hits": 0,
+            "plan_cache_misses": 0,
+            "refusals": 0,
+            "per_tenant": {},
+        }
+
+    # -- sessions -------------------------------------------------------------
+    def session(self, tenant: str) -> TenantSession:
+        self.stats["per_tenant"].setdefault(tenant, 0)
+        return TenantSession(self, tenant)
+
+    # -- compile + cache ------------------------------------------------------
+    def _shape_key(self) -> tuple:
+        return tuple(
+            (name, _bucket_pow2(t.n)) for name, t in sorted(self.tables.items())
+        )
+
+    def compile(self, sql: str) -> tuple[PlanNode, bool, float]:
+        """SQL -> physical plan via the cache; returns (plan, hit, seconds)."""
+        t0 = time.perf_counter()
+        cm = default_cost_model(self.catalog, noise=self.noise)
+        logical = compile_logical(
+            sql, self.catalog, cost_model=cm, reorder_joins=self.reorder_joins
+        )
+        cache_key = (
+            plan_fingerprint(logical),
+            self.placement,
+            strategy_key(self.noise, self.addition),
+            self._shape_key(),
+        )
+        plan = self._plan_cache.get(cache_key)
+        hit = plan is not None
+        if hit:
+            self._plan_cache.move_to_end(cache_key)
+            self.stats["plan_cache_hits"] += 1
+        else:
+            self.stats["plan_cache_misses"] += 1
+            if self.placement == "none":
+                plan = logical
+            else:
+                cfg = ResizerConfig(noise=self.noise, addition=self.addition)
+                plan = insert_resizers(
+                    logical, lambda _n: cfg, placement=self.placement,
+                    cost_model=cm,
+                )
+            self._plan_cache[cache_key] = plan
+            while len(self._plan_cache) > self._plan_cache_max:
+                self._plan_cache.popitem(last=False)
+        return plan, hit, time.perf_counter() - t0
+
+    # -- the query path -------------------------------------------------------
+    def submit(self, tenant: str, sql: str) -> QueryResult:
+        plan, hit, compile_s = self.compile(sql)
+        ta = time.perf_counter()
+        try:
+            admitted, escalations = self.accountant.admit(plan)
+        except QueryRefused:
+            self.stats["refusals"] += 1
+            raise
+        acct_s = time.perf_counter() - ta
+
+        out, report = self.engine.execute(admitted)
+
+        ta = time.perf_counter()
+        self.accountant.record(admitted, report)
+        acct_s += time.perf_counter() - ta
+
+        self.stats["queries"] += 1
+        self.stats["per_tenant"][tenant] = self.stats["per_tenant"].get(tenant, 0) + 1
+        rows = out.reveal_true_rows() if self.reveal_results else None
+        return QueryResult(
+            tenant=tenant,
+            sql=sql,
+            plan=admitted,
+            table=out,
+            rows=rows,
+            report=report,
+            cache_hit=hit,
+            compile_seconds=compile_s,
+            accountant_seconds=acct_s,
+            escalations=escalations,
+        )
+
+    # -- reporting ------------------------------------------------------------
+    def cache_stats(self) -> Dict[str, float]:
+        h, m = self.stats["plan_cache_hits"], self.stats["plan_cache_misses"]
+        return {
+            "hits": h,
+            "misses": m,
+            "hit_rate": h / max(h + m, 1),
+            "size": len(self._plan_cache),
+        }
+
+    def status(self) -> Dict:
+        return {
+            **self.stats,
+            "plan_cache": self.cache_stats(),
+            "accountant": self.accountant.status(),
+        }

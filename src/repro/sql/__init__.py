@@ -1,0 +1,32 @@
+"""SQL frontend: dialect tokenizer/parser, optimizing compiler, renderer.
+
+``sql.compile(q)`` turns a SQL string into a Resizer-placed physical
+:class:`~repro.plan.nodes.PlanNode` tree ready for the Engine — see
+DESIGN.md §9 and ``python -m repro.sql --help``.
+"""
+from .catalog import Catalog, HEALTHLNK_CATALOG  # noqa: F401
+from .compile import (  # noqa: F401
+    compile_logical,
+    compile_query,
+    default_cost_model,
+    plan_fingerprint,
+)
+from .lexer import SqlError, tokenize  # noqa: F401
+from .parser import parse  # noqa: F401
+from .render import render_sql  # noqa: F401
+
+compile = compile_query  # the ISSUE-facing name: sql.compile(q)
+
+__all__ = [
+    "Catalog",
+    "HEALTHLNK_CATALOG",
+    "SqlError",
+    "compile",
+    "compile_query",
+    "compile_logical",
+    "default_cost_model",
+    "parse",
+    "plan_fingerprint",
+    "render_sql",
+    "tokenize",
+]

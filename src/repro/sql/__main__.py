@@ -1,0 +1,52 @@
+"""CLI: parse/compile SQL against the HealthLnK catalog.
+
+    python -m repro.sql --check          # compile the four golden queries
+    python -m repro.sql "SELECT ..."     # pretty-print the compiled plan
+
+``--check`` is the CI smoke step: it verifies each golden SQL string parses
+and compiles to a plan structurally equal to its hand-compiled twin in
+data/queries.py, and exits non-zero on any mismatch.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def check() -> int:
+    from ..data.queries import all_query_plans, all_query_sql
+    from .compile import compile_logical, plan_fingerprint
+
+    plans = all_query_plans()
+    failures = 0
+    for name, sql_text in all_query_sql().items():
+        try:
+            compiled = compile_logical(sql_text)
+        except Exception as e:  # noqa: BLE001 — report and keep checking
+            print(f"FAIL {name}: {type(e).__name__}: {e}")
+            failures += 1
+            continue
+        if compiled != plans[name]:
+            print(f"FAIL {name}: compiled plan differs from hand-compiled plan")
+            print("  compiled:\n" + plan_fingerprint(compiled))
+            print("  expected:\n" + plan_fingerprint(plans[name]))
+            failures += 1
+        else:
+            print(f"OK   {name}")
+    return 1 if failures else 0
+
+
+def main(argv) -> int:
+    if not argv or argv[0] in ("-h", "--help"):
+        print(__doc__)
+        return 0
+    if argv[0] == "--check":
+        return check()
+    from .compile import compile_query
+
+    plan = compile_query(" ".join(argv))
+    print(plan.pretty())
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,45 @@
+"""Table catalog: the schema (and optional sizes) the SQL compiler binds to.
+
+A plan executes against whatever tables the :class:`~repro.engine.Engine` was
+given; the compiler only needs column names for resolution and row counts for
+the cost model. ``Catalog.from_tables`` derives both from a live table dict.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+__all__ = ["Catalog", "HEALTHLNK_CATALOG"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Catalog:
+    tables: Dict[str, List[str]]  # table name -> ordered column names
+    sizes: Optional[Dict[str, int]] = None  # table name -> row count
+
+    def columns(self, table: str) -> List[str]:
+        return self.tables[table]
+
+    def size(self, table: str, default: int = 1000) -> int:
+        if self.sizes and table in self.sizes:
+            return self.sizes[table]
+        return default
+
+    @classmethod
+    def from_tables(cls, tables) -> "Catalog":
+        """Derive a catalog from ``{name: SecretTable}`` (column order is the
+        table's own dict order, matching what operators will see)."""
+        return cls(
+            tables={name: list(t.cols) for name, t in tables.items()},
+            sizes={name: t.n for name, t in tables.items()},
+        )
+
+
+# Column order mirrors data/healthlnk.py's dict construction order.
+HEALTHLNK_CATALOG = Catalog(
+    tables={
+        "diagnoses": ["pid", "icd9", "diag", "time", "major_icd9"],
+        "medications": ["pid", "med", "dosage", "time"],
+        "demographics": ["pid", "zip"],
+    }
+)

@@ -1,0 +1,516 @@
+"""SQL -> PlanNode compiler with a rule-based logical optimizer (DESIGN.md §9).
+
+Pipeline::
+
+    parse(sql)                    # AST (parser.py)
+      -> resolve                  # aliases, columns, ambiguity checks
+      -> classify conditions      # per-table (pushdown) / equi-join / theta
+      -> join order               # explicit JOINs honored as written;
+                                  # comma-FROM pools reordered cost-based
+                                  # (left-deep enumeration over plan/cost.py)
+      -> terminal ops             # GROUP BY / DISTINCT / COUNT / ORDER BY
+      -> insert_resizers(...)     # Resizer placement policy (plan/policies.py)
+
+Schema tracking mirrors :func:`repro.ops.join.oblivious_join`'s column
+disambiguation exactly (right-side collisions get ``r<k>.`` prefixes), so a
+qualified reference like ``d.pid`` resolves to the physical column name the
+executed join output will actually carry.
+
+Projection is not an operator: the engine's tables carry every column through
+(an oblivious projection is free/local), so a plain ``SELECT cols`` compiles
+to its FROM/WHERE subtree and the service projects at reveal time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from ..core.resizer import ResizerConfig
+from ..ops.filter import Predicate
+# the executed join's own collision-renaming IS the compiler's schema rule:
+# importing it makes drift between compiled names and runtime names impossible
+from ..ops.join import _disambiguate
+from ..plan.cost import CostModel
+from ..plan.nodes import (
+    CountDistinct,
+    CountValid,
+    Distinct,
+    Filter,
+    GroupByCount,
+    Join,
+    OrderBy,
+    PlanNode,
+    Scan,
+)
+from ..plan.policies import insert_resizers
+from .catalog import Catalog, HEALTHLNK_CATALOG
+from .lexer import SqlError
+from .parser import (
+    ColumnRef,
+    Condition,
+    CountDistinctItem,
+    CountStar,
+    SelectStmt,
+    TableRef,
+    parse,
+)
+
+__all__ = [
+    "compile_query",
+    "compile_logical",
+    "default_cost_model",
+    "plan_fingerprint",
+    "Schema",
+]
+
+MAX_REORDER_TABLES = 7  # left-deep enumeration is k! — plenty for analytics
+
+
+# -----------------------------------------------------------------------------
+# Schema tracking
+# -----------------------------------------------------------------------------
+
+
+
+@dataclasses.dataclass
+class Schema:
+    """Ordered physical-name -> (alias, source column) map for a subtree."""
+
+    entries: Dict[str, Tuple[str, str]]  # insertion-ordered
+
+    @classmethod
+    def for_table(cls, alias: str, columns: Sequence[str]) -> "Schema":
+        return cls({c: (alias, c) for c in columns})
+
+    @property
+    def aliases(self) -> frozenset:
+        return frozenset(a for a, _ in self.entries.values())
+
+    def physical(self, alias: str, col: str) -> str:
+        for phys, (a, c) in self.entries.items():
+            if a == alias and c == col:
+                return phys
+        raise KeyError((alias, col))
+
+    def merge(self, right: "Schema") -> "Schema":
+        merged = dict(self.entries)
+        for phys_r, origin in right.entries.items():
+            merged[_disambiguate(merged, phys_r)] = origin
+        return Schema(merged)
+
+
+@dataclasses.dataclass
+class _SubPlan:
+    node: PlanNode
+    schema: Schema
+
+
+# -----------------------------------------------------------------------------
+# Resolution
+# -----------------------------------------------------------------------------
+
+class _Resolver:
+    def __init__(self, stmt: SelectStmt, catalog: Catalog, sql: str):
+        self.stmt = stmt
+        self.catalog = catalog
+        self.sql = sql
+        refs = list(stmt.tables) + [j.table for j in stmt.joins]
+        self.alias_to_table: Dict[str, str] = {}
+        self.from_order: List[str] = []  # aliases in FROM appearance order
+        for ref in refs:
+            if ref.table not in catalog.tables:
+                raise SqlError(f"unknown table {ref.table!r}", sql, ref.pos)
+            if ref.alias in self.alias_to_table:
+                raise SqlError(f"duplicate table alias {ref.alias!r}", sql, ref.pos)
+            self.alias_to_table[ref.alias] = ref.table
+            self.from_order.append(ref.alias)
+
+    def owner(self, col: ColumnRef) -> str:
+        """Alias owning the column; raises on unknown/ambiguous references."""
+        if col.alias is not None:
+            table = self.alias_to_table.get(col.alias)
+            if table is None:
+                raise SqlError(f"unknown table alias {col.alias!r}", self.sql, col.pos)
+            if col.name not in self.catalog.columns(table):
+                raise SqlError(
+                    f"unknown column {col.alias}.{col.name} (table {table!r} has "
+                    f"{', '.join(self.catalog.columns(table))})",
+                    self.sql,
+                    col.pos,
+                )
+            return col.alias
+        owners = [
+            a
+            for a in self.from_order
+            if col.name in self.catalog.columns(self.alias_to_table[a])
+        ]
+        if not owners:
+            raise SqlError(f"unknown column {col.name!r}", self.sql, col.pos)
+        if len(owners) > 1:
+            raise SqlError(
+                f"ambiguous column {col.name!r} (in "
+                + ", ".join(self.alias_to_table[a] for a in owners)
+                + ") — qualify it",
+                self.sql,
+                col.pos,
+            )
+        return owners[0]
+
+
+# -----------------------------------------------------------------------------
+# Condition classification + join construction
+# -----------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Cond:
+    """Resolved condition: sides are (alias, column) pairs or an int."""
+
+    cond: Condition
+    left_owner: str
+    right_owner: Optional[str]  # None when right is a literal
+
+    @property
+    def cross(self) -> bool:
+        return self.right_owner is not None and self.right_owner != self.left_owner
+
+
+def _resolve_conditions(conds: Sequence[Condition], res: _Resolver) -> List[_Cond]:
+    out = []
+    for c in conds:
+        if c.op == "ne":
+            raise SqlError("'<>' is not supported by the oblivious operators",
+                           res.sql, c.pos)
+        lo = res.owner(c.left)
+        ro = res.owner(c.right) if isinstance(c.right, ColumnRef) else None
+        out.append(_Cond(c, lo, ro))
+    return out
+
+
+def _single_table_predicate(c: _Cond, res: _Resolver) -> Predicate:
+    cond = c.cond
+    if c.right_owner is None:
+        op, val = cond.op, int(cond.right)
+        if op == "ge":  # integer domain: x >= v  <=>  x > v-1
+            op, val = "gt", val - 1
+        return Predicate(cond.left.name, op, val)
+    # same-table column pair: normalize gt/ge by swapping sides
+    l, r, op = cond.left.name, cond.right.name, cond.op
+    if op in ("gt", "ge"):
+        l, r, op = r, l, {"gt": "lt", "ge": "le"}[op]
+    return Predicate(l, op, f"col:{r}")
+
+
+def _leaf(alias: str, preds: List[Predicate], res: _Resolver) -> _SubPlan:
+    table = res.alias_to_table[alias]
+    node: PlanNode = Scan(table)
+    if preds:
+        node = Filter(node, preds)
+    return _SubPlan(node, Schema.for_table(alias, res.catalog.columns(table)))
+
+
+def _attach_join(
+    tree: _SubPlan, leaf: _SubPlan, conds: List[_Cond], res: _Resolver
+) -> _SubPlan:
+    """Join ``leaf`` onto ``tree`` using every condition now in scope: the
+    first equality becomes ``on``, one more le/eq (correctly oriented) becomes
+    ``theta``, anything left becomes a post-join Filter."""
+    tree_aliases = tree.schema.aliases
+    on: Optional[Tuple[str, str]] = None
+    theta: Optional[Tuple[str, str, str]] = None
+    leftovers: List[_Cond] = []
+
+    for c in sorted(conds, key=lambda c: (c.cond.op != "eq", c.cond.pos)):
+        cond = c.cond
+        l_in_tree = c.left_owner in tree_aliases
+        if cond.op == "eq":
+            l, r = (cond.left, cond.right) if l_in_tree else (cond.right, cond.left)
+            pair = (
+                tree.schema.physical(res.owner(l), l.name),
+                leaf.schema.physical(res.owner(r), r.name),
+            )
+            if on is None:
+                on = pair
+            elif theta is None:
+                theta = (pair[0], "eq", pair[1])
+            else:
+                leftovers.append(c)
+            continue
+        op = cond.op
+        l, r = cond.left, cond.right
+        if op in ("gt", "ge"):  # normalize to lt/le by swapping sides
+            l, r, op = r, l, {"gt": "lt", "ge": "le"}[op]
+            l_in_tree = not l_in_tree
+        if op == "le" and theta is None and l_in_tree:
+            theta = (
+                tree.schema.physical(res.owner(l), l.name),
+                "le",
+                leaf.schema.physical(res.owner(r), r.name),
+            )
+        else:
+            leftovers.append(c)
+
+    if on is None:
+        raise SqlError(
+            f"join with {'/'.join(sorted(leaf.schema.aliases))} requires an "
+            "equality condition (cartesian products are not supported)",
+            res.sql,
+        )
+    merged = tree.schema.merge(leaf.schema)
+    node: PlanNode = Join(tree.node, leaf.node, on, theta=theta)
+    if leftovers:
+        preds = []
+        for c in leftovers:
+            l, r, op = c.cond.left, c.cond.right, c.cond.op
+            if op in ("gt", "ge"):
+                l, r, op = r, l, {"gt": "lt", "ge": "le"}[op]
+            preds.append(
+                Predicate(
+                    merged.physical(res.owner(l), l.name),
+                    op,
+                    "col:" + merged.physical(res.owner(r), r.name),
+                )
+            )
+        node = Filter(node, preds)
+    return _SubPlan(node, merged)
+
+
+def _build_in_order(
+    order: Sequence[str],
+    leaves: Dict[str, _SubPlan],
+    cross: List[_Cond],
+    res: _Resolver,
+) -> _SubPlan:
+    tree = leaves[order[0]]
+    pending = list(cross)
+    for alias in order[1:]:
+        in_scope = [
+            c
+            for c in pending
+            if {c.left_owner, c.right_owner}
+            <= (tree.schema.aliases | {alias})
+            and alias in (c.left_owner, c.right_owner)
+        ]
+        pending = [c for c in pending if c not in in_scope]
+        tree = _attach_join(tree, leaves[alias], in_scope, res)
+    if pending:
+        c = pending[0]
+        raise SqlError(f"condition {c.cond} could not be attached to any join",
+                       res.sql, c.cond.pos)
+    return tree
+
+
+def _reorder_pool(
+    pool: List[str], cross: List[_Cond], leaves: Dict[str, _SubPlan],
+    res: _Resolver, cost_model: CostModel,
+) -> _SubPlan:
+    """Cost-based left-deep join ordering for a comma-FROM pool: enumerate
+    connected permutations (FROM order first, so ties keep the user's order)
+    and keep the cheapest tree under the cost model."""
+    if len(pool) == 1:
+        return leaves[pool[0]]
+    if len(pool) > MAX_REORDER_TABLES:
+        raise SqlError(
+            f"comma-FROM join pools are limited to {MAX_REORDER_TABLES} tables "
+            "(use explicit JOIN ... ON to fix the order)",
+            res.sql,
+        )
+    equi_edges = {
+        frozenset((c.left_owner, c.right_owner)) for c in cross if c.cond.op == "eq"
+    }
+
+    def connected(prefix_set: frozenset, nxt: str) -> bool:
+        return any(frozenset((a, nxt)) in equi_edges for a in prefix_set)
+
+    best: Optional[Tuple[float, _SubPlan]] = None
+    for perm in itertools.permutations(pool):
+        ok = all(
+            connected(frozenset(perm[:i]), perm[i]) for i in range(1, len(perm))
+        )
+        if not ok:
+            continue
+        try:
+            tree = _build_in_order(perm, leaves, cross, res)
+        except SqlError:
+            continue
+        score = cost_model.plan_bytes(tree.node)
+        if best is None or score < best[0]:
+            best = (score, tree)
+    if best is None:
+        raise SqlError(
+            "tables in FROM are not connected by equality join conditions",
+            res.sql,
+        )
+    return best[1]
+
+
+# -----------------------------------------------------------------------------
+# Terminal operators
+# -----------------------------------------------------------------------------
+
+def _apply_terminals(
+    stmt: SelectStmt, sub: _SubPlan, res: _Resolver, sql: str
+) -> PlanNode:
+    node = sub.node
+
+    def phys(col: ColumnRef) -> str:
+        return sub.schema.physical(res.owner(col), col.name)
+
+    count_name: Optional[str] = None
+    if stmt.group_by is not None:
+        key = phys(stmt.group_by)
+        counts = [i for i in stmt.items if isinstance(i, CountStar)]
+        plain = [i for i in stmt.items if isinstance(i, ColumnRef)]
+        if len(counts) != 1 or any(
+            isinstance(i, CountDistinctItem) for i in stmt.items
+        ):
+            raise SqlError(
+                "GROUP BY queries must select exactly one COUNT(*) "
+                "(plus the grouping column)", sql,
+            )
+        if any(phys(c) != key for c in plain):
+            raise SqlError(
+                "GROUP BY queries may only select the grouping column and "
+                "COUNT(*)", sql,
+            )
+        count_name = counts[0].alias or "cnt"
+        node = GroupByCount(node, key, count_name=count_name)
+    elif stmt.items and all(
+        isinstance(i, (CountStar, CountDistinctItem)) for i in stmt.items
+    ):
+        if len(stmt.items) != 1:
+            raise SqlError("only a single aggregate per query is supported", sql)
+        item = stmt.items[0]
+        if isinstance(item, CountStar):
+            node = CountValid(node)
+        else:
+            node = CountDistinct(node, phys(item.col))
+    elif stmt.distinct:
+        if len(stmt.items) != 1 or not isinstance(stmt.items[0], ColumnRef):
+            raise SqlError("DISTINCT supports exactly one selected column", sql)
+        node = Distinct(node, phys(stmt.items[0]))
+    elif any(isinstance(i, (CountStar, CountDistinctItem)) for i in stmt.items):
+        raise SqlError("aggregates cannot be mixed with plain columns "
+                       "without GROUP BY", sql)
+
+    if stmt.order_by is not None:
+        if isinstance(node, (CountValid, CountDistinct)):
+            raise SqlError(
+                "ORDER BY is meaningless over a bare aggregate (single row)", sql
+            )
+        if isinstance(stmt.order_by, CountStar):
+            if count_name is None:
+                raise SqlError("ORDER BY COUNT(*) requires GROUP BY", sql)
+            order_col = count_name
+        elif (
+            count_name is not None
+            and stmt.order_by.alias is None
+            and stmt.order_by.name == count_name
+        ):
+            order_col = count_name
+        else:
+            order_col = phys(stmt.order_by)
+            if count_name is not None and order_col != node.key:
+                # the GroupByCount output carries only the key and the count
+                raise SqlError(
+                    f"ORDER BY {stmt.order_by} is not in the GROUP BY output "
+                    f"(order by the grouping column or COUNT(*))",
+                    sql,
+                    stmt.order_by.pos,
+                )
+        node = OrderBy(node, order_col, descending=stmt.order_desc, limit=stmt.limit)
+    elif stmt.limit is not None:
+        raise SqlError("LIMIT requires ORDER BY", sql)
+    return node
+
+
+# -----------------------------------------------------------------------------
+# Entry points
+# -----------------------------------------------------------------------------
+
+def default_cost_model(catalog: Catalog, noise=None) -> CostModel:
+    return CostModel(
+        table_sizes={t: catalog.size(t) for t in catalog.tables},
+        table_cols={t: len(cols) for t, cols in catalog.tables.items()},
+        noise=noise,
+    )
+
+
+def compile_logical(
+    sql: str,
+    catalog: Catalog = HEALTHLNK_CATALOG,
+    *,
+    cost_model: Optional[CostModel] = None,
+    reorder_joins: bool = True,
+) -> PlanNode:
+    """SQL -> optimized logical plan (no Resizers): parse, resolve, push
+    predicates below joins, order joins, attach terminals."""
+    stmt = parse(sql)
+    res = _Resolver(stmt, catalog, sql)
+    conds = _resolve_conditions(
+        list(stmt.where) + [c for j in stmt.joins for c in j.conds], res
+    )
+    # predicate pushdown: single-table conditions land on their base scans,
+    # in SQL appearance order
+    per_alias: Dict[str, List[Predicate]] = {a: [] for a in res.from_order}
+    cross: List[_Cond] = []
+    for c in sorted(conds, key=lambda c: c.cond.pos):
+        if c.cross:
+            cross.append(c)
+        else:
+            per_alias[c.left_owner].append(_single_table_predicate(c, res))
+    leaves = {a: _leaf(a, per_alias[a], res) for a in res.from_order}
+
+    if stmt.joins:
+        order = [stmt.tables[0].alias] + [j.table.alias for j in stmt.joins]
+        sub = _build_in_order(order, leaves, cross, res)
+    else:
+        pool = [t.alias for t in stmt.tables]
+        if reorder_joins and len(pool) > 1:
+            cm = cost_model or default_cost_model(catalog)
+            sub = _reorder_pool(pool, cross, leaves, res, cm)
+        else:
+            sub = _build_in_order(pool, leaves, cross, res)
+
+    return _apply_terminals(stmt, sub, res, sql)
+
+
+def compile_query(
+    sql: str,
+    catalog: Catalog = HEALTHLNK_CATALOG,
+    *,
+    placement: str = "none",
+    noise=None,
+    cfg_factory: Optional[Callable[[PlanNode], Optional[ResizerConfig]]] = None,
+    addition: str = "parallel",
+    cost_model: Optional[CostModel] = None,
+    reorder_joins: bool = True,
+) -> PlanNode:
+    """SQL -> fully Resizer-placed physical plan.
+
+    ``noise`` (a NoiseStrategy) builds a constant ResizerConfig factory;
+    pass ``cfg_factory`` instead for per-node configs. ``placement`` follows
+    :func:`repro.plan.policies.insert_resizers`; ``cost_based`` placement uses
+    ``cost_model`` (defaulting to one derived from the catalog sizes).
+    """
+    plan = compile_logical(
+        sql, catalog, cost_model=cost_model, reorder_joins=reorder_joins
+    )
+    if placement == "none":
+        return plan
+    if cfg_factory is None:
+        if noise is None:
+            raise ValueError("placement != 'none' requires noise= or cfg_factory=")
+        cfg = ResizerConfig(noise=noise, addition=addition)
+        cfg_factory = lambda _node: cfg
+    cm = cost_model
+    if placement == "cost_based" and cm is None:
+        cm = default_cost_model(catalog, noise=noise)
+    return insert_resizers(plan, cfg_factory, placement=placement, cost_model=cm)
+
+
+def plan_fingerprint(plan: PlanNode) -> str:
+    """Stable structural identity of a plan (cache keys, accountant
+    signatures): the pretty-printed tree fully determines operators,
+    predicates, join conditions, and resizer configs."""
+    return plan.pretty()

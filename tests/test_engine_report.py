@@ -1,0 +1,86 @@
+"""Engine reporting satellites: per-node resize info (no stale reuse across
+nodes or runs), ExecutionReport.to_json, TruncatedLaplace moments caching."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.noise import BetaNoise, TruncatedLaplace
+from repro.core.resizer import ResizerConfig
+from repro.data import generate_healthlnk
+from repro.engine import Engine
+from repro.ops.filter import Predicate
+from repro.plan.nodes import Filter, Join, Resize, Scan
+
+
+@pytest.fixture(scope="module")
+def tables():
+    return generate_healthlnk(n=12, seed=1)[0]
+
+
+def _two_resize_plan():
+    """Two Resize nodes with different input sizes (12 and 144): stale-info
+    reuse would report the first node's info on the second."""
+    d = Resize(
+        Filter(Scan("diagnoses"), [Predicate("icd9", "eq", 414)]),
+        ResizerConfig(noise=BetaNoise(2, 6)),
+    )
+    return Resize(
+        Join(d, Scan("medications"), ("pid", "pid")),
+        ResizerConfig(noise=BetaNoise(2, 6)),
+    )
+
+
+def test_resize_info_is_per_node(tables):
+    eng = Engine(tables, key=jax.random.PRNGKey(0))
+    _, rep = eng.execute(_two_resize_plan())
+    infos = [s for s in rep.nodes if s.node.startswith("Resize")]
+    assert len(infos) == 2
+    assert infos[0].extra["n"] == 12  # first resizer saw the filtered scan
+    assert infos[1].extra["n"] == infos[0].n_out * 12  # second saw the join
+    assert infos[0].extra != infos[1].extra
+    # nothing lingers for the next run
+    assert eng._last_resize_info is None
+
+
+def test_resize_info_not_reused_across_runs(tables):
+    eng = Engine(tables, key=jax.random.PRNGKey(0))
+    eng.execute(_two_resize_plan())
+    # a plan whose Resize is NoTrim-free but... run a plain plan: no resize
+    _, rep2 = eng.execute(Filter(Scan("diagnoses"), [Predicate("icd9", "eq", 1)]))
+    assert all(not s.node.startswith("Resize") for s in rep2.nodes)
+    assert eng._last_resize_info is None
+
+
+def test_report_to_json_round_trips(tables):
+    eng = Engine(tables, key=jax.random.PRNGKey(0))
+    _, rep = eng.execute(_two_resize_plan())
+    blob = json.loads(rep.to_json())
+    assert blob["total_bytes"] == rep.total_bytes
+    assert blob["total_rounds"] == rep.total_rounds
+    assert len(blob["nodes"]) == len(rep.nodes)
+    for nd, s in zip(blob["nodes"], rep.nodes):
+        assert nd["node"] == s.node
+        assert nd["bytes_per_party"] == s.bytes_per_party
+    # every extra value made it through JSON-safe coercion
+    rz = [n for n in blob["nodes"] if n["node"].startswith("Resize")]
+    assert all(isinstance(n["extra"]["s"], int) for n in rz)
+
+
+def test_tlap_moments_cached():
+    tl = TruncatedLaplace(eps=0.5, delta=5e-5, sensitivity=3)
+    assert tl.integrations == 0
+    m1 = tl.mean(1000, 10)
+    assert tl.integrations == 1  # one grid integration
+    v1 = tl.var(1000, 10)
+    m2 = tl.mean(5000, 99)  # moments don't depend on (n, t)
+    assert tl.integrations == 1  # ...and none of these re-integrated
+    assert m1 == m2 and v1 == tl.var(1, 0)
+    # a differently-calibrated instance integrates on its own
+    tl2 = TruncatedLaplace(eps=0.25, delta=5e-5, sensitivity=3)
+    assert tl2.mean(1000, 10) != m1
+    assert tl.integrations == 1 and tl2.integrations == 1
+    # cached moments match a fresh computation exactly
+    fresh = TruncatedLaplace(eps=0.5, delta=5e-5, sensitivity=3)
+    np.testing.assert_allclose([m1, v1], [fresh.mean(0, 0), fresh.var(0, 0)])

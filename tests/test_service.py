@@ -1,0 +1,214 @@
+"""AnalyticsService: plan cache, per-tenant sessions, and the CRT budget
+enforced by PrivacyAccountant (block / escalate at observation r + 1)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.crt import attacker_estimate, crt_rounds
+from repro.core.noise import ConstantNoise, NoTrim, TruncatedLaplace
+from repro.data import generate_healthlnk, plaintext_oracle
+from repro.data.queries import QUERY_SQL
+from repro.service import (
+    AnalyticsService,
+    PrivacyAccountant,
+    QueryRefused,
+    escalate_strategy,
+)
+
+DOSAGE = QUERY_SQL["dosage_study"]
+
+
+@pytest.fixture(scope="module")
+def data():
+    return generate_healthlnk(n=16, seed=3, aspirin_frac=0.5, icd_heart_frac=0.4)
+
+
+def make_service(tables, noise, policy="escalate", **kw):
+    return AnalyticsService(
+        tables,
+        noise=noise,
+        addition="sequential",
+        placement="after_joins",
+        accountant=PrivacyAccountant(policy=policy),
+        key=jax.random.PRNGKey(9),
+        **kw,
+    )
+
+
+# -----------------------------------------------------------------------------
+# Query path + plan cache
+# -----------------------------------------------------------------------------
+
+def test_submit_returns_correct_result(data):
+    tables, plain = data
+    svc = make_service(tables, TruncatedLaplace(eps=0.5, sensitivity=4))
+    r = svc.session("alice").submit(DOSAGE)
+    got = sorted(set(r.rows["pid"].tolist()))
+    assert got == plaintext_oracle("dosage_study", plain)
+    assert not r.cache_hit and r.compile_seconds > 0
+
+
+def test_plan_cache_hits_on_equivalent_sql(data):
+    tables, _ = data
+    svc = make_service(tables, TruncatedLaplace(eps=0.5, sensitivity=4))
+    s = svc.session("alice")
+    r1 = s.submit(DOSAGE)
+    r2 = s.submit(DOSAGE)
+    # same logical plan spelled differently (aliases, case, clause order)
+    r3 = svc.session("bob").submit(
+        "select distinct x.pid from diagnoses x, medications y "
+        "where x.pid = y.pid and x.icd9 = 390 and y.med = 1 and y.dosage = 325"
+    )
+    assert not r1.cache_hit and r2.cache_hit and r3.cache_hit
+    assert r1.plan is r2.plan
+    assert svc.cache_stats()["hit_rate"] == pytest.approx(2 / 3)
+    assert svc.stats["per_tenant"] == {"alice": 2, "bob": 1}
+
+
+def test_results_identical_across_cache_hit(data):
+    tables, _ = data
+    svc = make_service(tables, NoTrim())
+    a = svc.session("t").submit(DOSAGE)
+    b = svc.session("t").submit(DOSAGE)
+    assert b.cache_hit
+    for k in a.rows:
+        np.testing.assert_array_equal(a.rows[k], b.rows[k])
+
+
+# -----------------------------------------------------------------------------
+# PrivacyAccountant: budget, refusal, escalation
+# -----------------------------------------------------------------------------
+
+def test_refuse_policy_blocks_observation_r_plus_1(data):
+    """Acceptance: with a zero-variance strategy under sequential addition,
+    crt_rounds == 1, so the budget is exactly one observation — the second
+    equivalent query must be refused."""
+    tables, _ = data
+    noise = ConstantNoise(0.2)
+    assert crt_rounds(noise, "sequential", 256, 10) == 1.0
+    svc = make_service(tables, noise, policy="refuse")
+    s = svc.session("alice")
+    s.submit(DOSAGE)
+    with pytest.raises(QueryRefused) as ei:
+        svc.session("mallory").submit(DOSAGE)  # budgets are cross-tenant
+    assert "CRT budget exhausted" in str(ei.value)
+    assert svc.accountant.status()[0]["remaining"] == 0
+
+
+def test_escalate_policy_rewrites_noise_then_goes_oblivious(data):
+    tables, _ = data
+    svc = make_service(tables, ConstantNoise(0.2))
+    s = svc.session("alice")
+    r1 = s.submit(DOSAGE)
+    assert not r1.escalations
+    (info1,) = [s_.extra for s_ in r1.report.nodes if s_.node.startswith("Resize")]
+    assert "skipped" not in info1  # first observation: real trim
+    r2 = s.submit(DOSAGE)
+    assert len(r2.escalations) == 1
+    assert "NoTrim" in r2.escalations[0]["to"]  # const has no wider rung
+    (info2,) = [s_.extra for s_ in r2.report.nodes if s_.node.startswith("Resize")]
+    assert info2.get("skipped")  # NoTrim resizer: nothing trimmed or disclosed
+    assert info2["s"] == info2["n"]
+    # the cached plan object was not mutated by the rewrite
+    assert r2.cache_hit and r2.plan is not r1.plan
+
+
+def test_tlap_escalation_ladder_widens_eps():
+    tl = TruncatedLaplace(eps=0.5, delta=5e-5, sensitivity=2)
+    nxt = escalate_strategy(tl)
+    assert isinstance(nxt, TruncatedLaplace) and nxt.eps == 0.25
+    assert nxt.sensitivity == 2 and nxt.delta == 5e-5
+    # variance grows ~4x per rung => ~4x budget per Eq. 1
+    assert nxt.var(1000, 10) > 3.5 * tl.var(1000, 10)
+    # the ladder bottoms out at NoTrim
+    rung = tl
+    for _ in range(10):
+        rung = escalate_strategy(rung)
+        if isinstance(rung, NoTrim):
+            break
+    assert isinstance(rung, NoTrim)
+    assert escalate_strategy(NoTrim()) is None
+
+
+def test_repeated_query_attacker_is_capped_at_crt(data):
+    """Drive the §3.3 attacker: the accountant allows exactly r =
+    floor(crt_rounds) equivalent observations; attacker_estimate shows r
+    observations suffice for a ±err estimate (the budget is tight, not
+    slack), and the (r+1)-th is refused."""
+    tables, _ = data
+    noise = TruncatedLaplace(eps=1.5, delta=5e-5, sensitivity=1)
+    acct = PrivacyAccountant(err=1.0, confidence=0.999, policy="refuse")
+    svc = AnalyticsService(
+        tables,
+        noise=noise,
+        addition="sequential",
+        placement="after_joins",
+        accountant=acct,
+        key=jax.random.PRNGKey(11),
+    )
+    s = svc.session("attacker")
+    r_budget = None
+    submitted = 0
+    with pytest.raises(QueryRefused):
+        for _ in range(50):  # far above any sane budget for these params
+            s.submit(DOSAGE)
+            submitted += 1
+            if r_budget is None:
+                st = acct.status()[0]
+                r_budget = st["budget"]
+    assert submitted == r_budget  # blocked exactly at observation r + 1
+    st = acct.status()[0]
+    assert r_budget == acct.budget_for(noise, "sequential", st["n"], st["t"])
+    assert 1 < r_budget < 50
+
+    # with the r observations the service disclosed, the Eq. 1 estimator
+    # already reaches the ±err target — the budget is the right boundary
+    est = attacker_estimate(
+        noise, "sequential", st["n"], st["t"], rounds=r_budget,
+        key=jax.random.PRNGKey(3),
+    )
+    assert est["abs_err"] <= acct.err + noise.var(st["n"], st["t"]) ** 0.5
+
+
+def test_duplicate_signatures_in_one_plan_cannot_overdraw():
+    """Regression: a plan carrying two Resizes with the same signature (e.g.
+    a self-join's duplicated filtered scan) must charge them as a group —
+    with 1 observation remaining, only one may be admitted."""
+    from repro.core.resizer import ResizerConfig
+    from repro.ops.filter import Predicate
+    from repro.plan.nodes import Filter, Join, Resize, Scan
+    from repro.service.accountant import _SigState
+
+    cfg = ResizerConfig(noise=ConstantNoise(0.2), addition="sequential")
+    rz = lambda: Resize(
+        Filter(Scan("demographics"), [Predicate("zip", "eq", 1)]), cfg
+    )
+    plan = Join(rz(), rz(), ("pid", "pid"))
+
+    acct = PrivacyAccountant(policy="refuse")
+    sig = acct.signature(plan.children()[0])
+    assert sig == acct.signature(plan.children()[1])
+    acct._state[sig] = _SigState(observed=2, budget=3, n=16, t=4)
+
+    with pytest.raises(QueryRefused):  # second duplicate exceeds remaining=1
+        acct.admit(plan)
+
+    acct2 = PrivacyAccountant(policy="escalate")
+    acct2._state[sig] = _SigState(observed=2, budget=3, n=16, t=4)
+    admitted, escalations = acct2.admit(plan)
+    assert len(escalations) == 1  # one admitted as-is, one escalated
+    noises = [c.cfg.noise for c in admitted.children()]
+    assert sum(isinstance(nz, NoTrim) for nz in noises) == 1
+    assert sum(isinstance(nz, ConstantNoise) for nz in noises) == 1
+
+
+def test_accountant_separates_signatures(data):
+    """Different subplans (and different strategies) deplete independently."""
+    tables, _ = data
+    svc = make_service(tables, ConstantNoise(0.2), policy="refuse")
+    s = svc.session("alice")
+    s.submit(DOSAGE)
+    # a different query: fresh signature, its first observation is admitted
+    s.submit(QUERY_SQL["aspirin_count"])
+    sigs = svc.accountant.status()
+    assert len(sigs) == 2 and all(x["observed"] == 1 for x in sigs)

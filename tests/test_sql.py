@@ -1,0 +1,255 @@
+"""SQL frontend: golden parity with the hand-compiled HealthLnK plans,
+optimizer behavior (pushdown, join ordering), and parser error messages."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.noise import BetaNoise
+from repro.core.resizer import ResizerConfig
+from repro.data import all_query_plans, generate_healthlnk
+from repro.data.queries import QUERY_SQL
+from repro.engine import Engine
+from repro.plan import insert_resizers
+from repro.plan.nodes import Filter, Join, OrderBy, Scan
+from repro.sql import (
+    Catalog,
+    SqlError,
+    compile_logical,
+    compile_query,
+    parse,
+    plan_fingerprint,
+    render_sql,
+)
+
+CAT = Catalog(
+    tables={
+        "diagnoses": ["pid", "icd9", "diag", "time", "major_icd9"],
+        "medications": ["pid", "med", "dosage", "time"],
+        "demographics": ["pid", "zip"],
+    },
+    sizes={"diagnoses": 1000, "medications": 1000, "demographics": 50},
+)
+
+
+# -----------------------------------------------------------------------------
+# Goldens: the four HealthLnK SQL strings vs. the hand-compiled plans
+# -----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", list(QUERY_SQL))
+def test_golden_compiles_to_hand_plan(name):
+    assert compile_logical(QUERY_SQL[name]) == all_query_plans()[name], (
+        plan_fingerprint(compile_logical(QUERY_SQL[name]))
+    )
+
+
+@pytest.fixture(scope="module")
+def data():
+    return generate_healthlnk(n=24, seed=3, aspirin_frac=0.4, icd_heart_frac=0.3)
+
+
+# placement pairs chosen to exercise none/after_joins/all_internal without
+# blowing up CI time (test_queries.py already sweeps the hand plans widely)
+@pytest.mark.parametrize(
+    "name,placement",
+    [
+        ("comorbidity", "none"),
+        ("dosage_study", "all_internal"),
+        ("aspirin_count", "after_joins"),
+        ("three_join", "after_joins"),
+    ],
+)
+def test_golden_execution_and_ledger_parity(data, name, placement):
+    """Acceptance: compiled SQL == hand plan in execution output AND in the
+    per-node (rounds, bytes/party) ledger tallies, same placement policy."""
+    tables, _ = data
+    noise = BetaNoise(2, 6)
+    hand = insert_resizers(
+        all_query_plans()[name],
+        lambda n: ResizerConfig(noise=noise),
+        placement=placement,
+    )
+    compiled = compile_query(QUERY_SQL[name], placement=placement, noise=noise)
+    assert compiled == hand
+
+    out_h, rep_h = Engine(tables, key=jax.random.PRNGKey(5)).execute(hand)
+    out_c, rep_c = Engine(tables, key=jax.random.PRNGKey(5)).execute(compiled)
+
+    rev_h, rev_c = out_h.reveal(), out_c.reveal()
+    assert rev_h.keys() == rev_c.keys()
+    for k in rev_h:
+        np.testing.assert_array_equal(rev_h[k], rev_c[k])
+    assert [(s.node, s.bytes_per_party, s.rounds) for s in rep_h.nodes] == [
+        (s.node, s.bytes_per_party, s.rounds) for s in rep_c.nodes
+    ]
+
+
+def test_main_check_smoke():
+    from repro.sql.__main__ import main
+
+    assert main(["--check"]) == 0
+
+
+# -----------------------------------------------------------------------------
+# Optimizer behavior
+# -----------------------------------------------------------------------------
+
+def test_predicate_pushdown_below_join():
+    p = compile_logical(
+        "SELECT DISTINCT d.pid FROM diagnoses d, medications m "
+        "WHERE d.pid = m.pid AND m.med = 1 AND d.icd9 = 414",
+        CAT,
+    )
+    join = p.children()[0]
+    assert isinstance(join, Join)
+    left, right = join.children()
+    assert isinstance(left, Filter) and isinstance(left.child, Scan)
+    assert left.predicates[0].column == "icd9"
+    assert isinstance(right, Filter) and right.predicates[0].column == "med"
+
+
+def test_comma_from_reorders_by_cost():
+    """The 50-row demographics table should be joined before the 1000-row
+    medications table when the user wrote it last."""
+    q = (
+        "SELECT COUNT(DISTINCT d.pid) FROM diagnoses d, medications m, "
+        "demographics g WHERE d.pid = m.pid AND d.pid = g.pid"
+    )
+    p = compile_logical(q, CAT)
+    inner = p.children()[0].children()[0]  # CountDistinct -> outer -> inner join
+    assert isinstance(inner, Join)
+    assert inner.children()[1] == Scan("demographics")
+    # without reordering, FROM order is kept
+    p2 = compile_logical(q, CAT, reorder_joins=False)
+    inner2 = p2.children()[0].children()[0]
+    assert inner2.children()[1] == Scan("medications")
+
+
+def test_explicit_join_order_is_preserved():
+    q = (
+        "SELECT COUNT(DISTINCT d.pid) FROM diagnoses d "
+        "JOIN medications m ON d.pid = m.pid "
+        "JOIN demographics g ON d.pid = g.pid"
+    )
+    inner = compile_logical(q, CAT).children()[0].children()[0]
+    assert inner.children()[1] == Scan("medications")
+
+
+def test_theta_join_and_orientation():
+    p = compile_logical(
+        "SELECT COUNT(*) FROM diagnoses d JOIN medications m "
+        "ON d.pid = m.pid AND d.time <= m.time",
+        CAT,
+    )
+    join = p.children()[0]
+    assert join.on == ("pid", "pid") and join.theta == ("time", "le", "time")
+    # flipped spelling normalizes to the same theta
+    p2 = compile_logical(
+        "SELECT COUNT(*) FROM diagnoses d JOIN medications m "
+        "ON m.pid = d.pid AND m.time >= d.time",
+        CAT,
+    )
+    assert p2.children()[0].theta == ("time", "le", "time")
+
+
+def test_unattachable_theta_becomes_post_join_filter():
+    # m.time <= d.time puts the tree-side column on the right: not a valid
+    # theta slot, so it must land in a Filter above the join
+    p = compile_logical(
+        "SELECT COUNT(*) FROM diagnoses d JOIN medications m "
+        "ON d.pid = m.pid AND m.time <= d.time",
+        CAT,
+    )
+    filt = p.children()[0]
+    assert isinstance(filt, Filter)
+    (pred,) = filt.predicates
+    assert pred.op == "le" and pred.value == "col:time"
+    assert pred.column == "r1.time"  # medications' time, disambiguated
+
+
+def test_ge_literal_rewrites_to_gt():
+    p = compile_logical("SELECT COUNT(*) FROM diagnoses WHERE time >= 100", CAT)
+    (pred,) = p.children()[0].predicates
+    assert pred.op == "gt" and pred.value == 99
+
+
+def test_order_by_count_and_alias():
+    p = compile_logical(
+        "SELECT major_icd9, COUNT(*) AS k FROM diagnoses "
+        "GROUP BY major_icd9 ORDER BY k DESC LIMIT 3",
+        CAT,
+    )
+    assert isinstance(p, OrderBy) and p.col == "k" and p.limit == 3
+    assert p.child.count_name == "k"
+
+
+def test_render_round_trip_on_goldens():
+    for q in QUERY_SQL.values():
+        plan = compile_logical(q)
+        assert compile_logical(render_sql(plan)) == plan
+
+
+# -----------------------------------------------------------------------------
+# Parser / resolver error messages
+# -----------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "sql,fragment",
+    [
+        ("SELECT FROM diagnoses", "expected column name"),
+        ("SELECT * FROM nope", "unknown table 'nope'"),
+        ("SELECT * FROM diagnoses WHERE zzz = 1", "unknown column 'zzz'"),
+        ("SELECT * FROM diagnoses d, medications m WHERE pid = 1",
+         "ambiguous column 'pid'"),
+        ("SELECT * FROM diagnoses d, medications m JOIN demographics g "
+         "ON d.pid = g.pid", "cannot mix comma-FROM with explicit JOIN"),
+        ("SELECT * FROM diagnoses WHERE icd9 <> 1", "'<>' is not supported"),
+        ("SELECT * FROM diagnoses WHERE 1 = 2", "at least one column"),
+        ("SELECT * FROM diagnoses d, medications m", "not connected by equality"),
+        ("SELECT * FROM diagnoses LIMIT 5", "LIMIT requires ORDER BY"),
+        ("SELECT COUNT(icd9) FROM diagnoses", "COUNT supports only"),
+        ("SELECT DISTINCT pid, icd9 FROM diagnoses", "exactly one selected column"),
+        ("SELECT pid, COUNT(*) FROM diagnoses GROUP BY major_icd9",
+         "grouping column"),
+        ("SELECT * FROM diagnoses ORDER BY COUNT(*)", "requires GROUP BY"),
+        ("SELECT major_icd9, COUNT(*) FROM diagnoses GROUP BY major_icd9 "
+         "ORDER BY time DESC", "not in the GROUP BY output"),
+        ("SELECT COUNT(*) FROM diagnoses ORDER BY pid", "bare aggregate"),
+        ("SELECT * FROM diagnoses WHERE icd9 = ", "expected"),
+        ("SELECT * FROM diagnoses d d2 d3", "expected"),
+        ("SELECT * FROM diagnoses WHERE d.icd9 = 1", "unknown table alias 'd'"),
+    ],
+)
+def test_error_messages(sql, fragment):
+    with pytest.raises(SqlError) as ei:
+        compile_logical(sql, CAT)
+    assert fragment in str(ei.value), str(ei.value)
+
+
+def test_error_carets_point_at_offender():
+    with pytest.raises(SqlError) as ei:
+        parse("SELECT * FROM diagnoses WHERE icd9 ! 1")
+    msg = str(ei.value)
+    assert "position" in msg and "^" in msg
+
+
+def test_count_alias_is_part_of_plan_identity():
+    # regression: GroupByCount.describe() must carry count_name, otherwise
+    # two plans differing only in the COUNT alias share a fingerprint and
+    # the service plan cache would serve the wrong plan
+    a = compile_logical(
+        "SELECT major_icd9, COUNT(*) AS cnt FROM diagnoses GROUP BY major_icd9"
+    )
+    b = compile_logical(
+        "SELECT major_icd9, COUNT(*) AS total FROM diagnoses GROUP BY major_icd9"
+    )
+    assert a != b
+    assert plan_fingerprint(a) != plan_fingerprint(b)
+
+
+def test_parse_is_case_insensitive_and_normalizes():
+    a = compile_logical("select distinct d.pid from diagnoses d, medications m "
+                        "where d.pid = m.pid", CAT)
+    b = compile_logical("SELECT DISTINCT x.pid FROM diagnoses x, medications y "
+                        "WHERE x.pid = y.pid", CAT)
+    assert a == b  # alias names never reach the plan
+    assert plan_fingerprint(a) == plan_fingerprint(b)

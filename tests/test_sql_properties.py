@@ -1,0 +1,98 @@
+"""Hypothesis round-trip property for the SQL frontend: a random
+compiler-shaped plan, rendered to SQL and re-compiled, must come back
+structurally identical. Guarded like tests/test_properties.py: collected only
+when ``hypothesis`` is installed (requirements-dev.txt)."""
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st
+
+from repro.ops.filter import Predicate
+from repro.plan.nodes import (
+    CountDistinct,
+    CountValid,
+    Distinct,
+    Filter,
+    GroupByCount,
+    Join,
+    OrderBy,
+    Scan,
+)
+from repro.sql import HEALTHLNK_CATALOG, compile_logical, render_sql
+
+TABLES = list(HEALTHLNK_CATALOG.tables)
+
+# predicate-eligible columns per table (ints in the dialect; every column is
+# dictionary-encoded so any column works)
+_OPS = ["eq", "lt", "le", "gt"]
+
+
+@st.composite
+def leaf(draw, table: str):
+    cols = HEALTHLNK_CATALOG.columns(table)
+    node = Scan(table)
+    n_preds = draw(st.integers(0, 2))
+    if n_preds:
+        preds = [
+            Predicate(
+                draw(st.sampled_from(cols)),
+                draw(st.sampled_from(_OPS)),
+                draw(st.integers(0, 999)),
+            )
+            for _ in range(n_preds)
+        ]
+        node = Filter(node, preds)
+    return node
+
+
+@st.composite
+def join_tree(draw):
+    """Left-deep joins on pid (every table has it); optional le-theta on time
+    when both the first and the new table carry a time column."""
+    first = draw(st.sampled_from(TABLES))
+    node = draw(leaf(first))
+    n_joins = draw(st.integers(0, 2))
+    for _ in range(n_joins):
+        t = draw(st.sampled_from(TABLES))
+        theta = None
+        if (
+            "time" in HEALTHLNK_CATALOG.columns(first)
+            and "time" in HEALTHLNK_CATALOG.columns(t)
+            and draw(st.booleans())
+        ):
+            theta = ("time", "le", "time")
+        node = Join(node, draw(leaf(t)), ("pid", "pid"), theta=theta)
+    return node, first
+
+
+@st.composite
+def plan(draw):
+    node, first = draw(join_tree())
+    terminal = draw(
+        st.sampled_from(["none", "distinct", "count", "count_distinct", "group"])
+    )
+    first_cols = HEALTHLNK_CATALOG.columns(first)
+    if terminal == "distinct":
+        node = Distinct(node, draw(st.sampled_from(first_cols)))
+    elif terminal == "count":
+        node = CountValid(node)
+    elif terminal == "count_distinct":
+        node = CountDistinct(node, draw(st.sampled_from(first_cols)))
+    elif terminal == "group":
+        node = GroupByCount(node, draw(st.sampled_from(first_cols)))
+        if draw(st.booleans()):
+            node = OrderBy(
+                node,
+                "cnt",
+                descending=draw(st.booleans()),
+                limit=draw(st.one_of(st.none(), st.integers(1, 20))),
+            )
+    return node
+
+
+@settings(max_examples=60, deadline=None)
+@given(plan())
+def test_property_plan_sql_round_trip(p):
+    sql = render_sql(p)
+    assert compile_logical(sql) == p, f"{sql}\n{p.pretty()}"

@@ -17,11 +17,11 @@ as the oracle.
 from __future__ import annotations
 
 import math
-from typing import Dict, Union
+from typing import Dict, List, Sequence, Union
 
 import jax.numpy as jnp
 
-from .circuits import lt
+from .circuits import and_bit, eq, lt, or_bit
 from .ledger import active_ledger
 from .prf import PRFSetup
 from .sharing import AShare, BShare, and_
@@ -42,15 +42,32 @@ def bitonic_stages(n: int):
         k *= 2
 
 
+def _lex_lt(
+    his: List[BShare], los: List[BShare], prf: PRFSetup
+) -> BShare:
+    """Lexicographic ``his < los`` over parallel key columns: column 0
+    decides unless it ties, in which case column 1 decides, and so on —
+    lt_0 OR (eq_0 AND lt_1) OR (eq_0 AND eq_1 AND lt_2) ..."""
+    res = lt(his[0], los[0], prf.fold(0))
+    ties = None
+    for i in range(1, len(his)):
+        p = prf.fold(i)
+        e = eq(his[i - 1], los[i - 1], p.fold(1))
+        ties = e if ties is None else and_bit(ties, e, p.fold(2))
+        lt_i = lt(his[i], los[i], p.fold(3))
+        res = or_bit(res, and_bit(ties, lt_i, p.fold(4)), p.fold(5))
+    return res
+
+
 def _stage(
     cols: Dict[str, BShare],
-    key_col: str,
+    key_cols: Sequence[str],
     k: int,
     j: int,
     prf: PRFSetup,
     descending: bool,
 ) -> Dict[str, BShare]:
-    keyb = cols[key_col]
+    keyb = cols[key_cols[0]]
     n = keyb.shape[0]
     idx = jnp.arange(n)
     partner = idx ^ j
@@ -59,13 +76,22 @@ def _stage(
     if descending:
         asc = ~asc
 
-    a = keyb  # own value
-    b = keyb.take(partner, axis=0)  # partner value
     # lo/hi views on public masks (local): lo = value at the lower lane index
-    lo_key = BShare(jnp.where(is_lo, a.shares, b.shares))
-    hi_key = BShare(jnp.where(is_lo, b.shares, a.shares))
+    def lo_hi(col: BShare):
+        a = col  # own value
+        b = col.take(partner, axis=0)  # partner value
+        return (
+            BShare(jnp.where(is_lo, a.shares, b.shares)),
+            BShare(jnp.where(is_lo, b.shares, a.shares)),
+        )
+
+    los, his = zip(*(lo_hi(cols[kc]) for kc in key_cols))
     # swap decision, identical at both lanes of the pair (ties don't swap)
-    s = lt(hi_key, lo_key, prf.fold(7 * k + j))  # hi < lo -> out of order (asc)
+    p = prf.fold(7 * k + j)
+    if len(key_cols) == 1:
+        s = lt(his[0], los[0], p)  # hi < lo -> out of order (asc)
+    else:
+        s = _lex_lt(list(his), list(los), p)
     # descending pairs invert the decision (local XOR with a public bit)
     s = s.xor_public(jnp.where(asc, 0, 1).astype(s.ring.dtype))
     mask = s.lsb_mask()
@@ -81,12 +107,15 @@ def _stage(
 
 def bitonic_sort(
     cols: Dict[str, BShare],
-    key_col: str,
+    key_col: Union[str, Sequence[str]],
     prf: PRFSetup,
     descending: bool = False,
 ) -> Dict[str, BShare]:
-    """Sort all columns by ``key_col`` (32-bit unsigned order). N must be a
-    power of two (the engine's bucketing guarantees this)."""
+    """Sort all columns by ``key_col`` (32-bit unsigned order) — a single
+    column name or a sequence of names compared lexicographically (composite
+    GROUP BY keys). N must be a power of two (the engine's bucketing
+    guarantees this)."""
+    key_cols = [key_col] if isinstance(key_col, str) else list(key_col)
     n = next(iter(cols.values())).shape[0]
     if n & (n - 1):
         raise ValueError(f"bitonic_sort requires power-of-two rows, got {n}")
@@ -95,14 +124,17 @@ def bitonic_sort(
     import contextlib
 
     n_stages = m * (m + 1) // 2
+    # per-stage rounds: 6 (lt, all key columns in parallel) + 2 combining
+    # levels per extra key (tie-AND + OR) + 1 select
+    rounds_per_stage = 7 + 2 * (len(key_cols) - 1)
     scope = (
-        led.fused("bitonic_sort", rounds=7 * n_stages)
+        led.fused("bitonic_sort", rounds=rounds_per_stage * n_stages)
         if led is not None
         else contextlib.nullcontext()
     )
     with scope:
         for k, j in bitonic_stages(n):
-            cols = _stage(cols, key_col, k, j, prf, descending)
+            cols = _stage(cols, key_cols, k, j, prf, descending)
     return cols
 
 

@@ -136,4 +136,28 @@ def plaintext_oracle(query: str, plain: Dict[str, Dict[str, np.ndarray]]):
                 ):
                     pids.add(int(d["pid"][i]))
         return len(pids)
+    # -- dialect-growth goldens (projection / SUM / AVG / OR / 2-col GROUP BY)
+    if query == "projection_join":
+        pairs = set()
+        for i in range(len(d["pid"])):
+            for j in range(len(m["pid"])):
+                if m["pid"][j] == d["pid"][i] and m["med"][j] == MED_ASPIRIN:
+                    pairs.add((int(d["pid"][i]), int(m["dosage"][j])))
+        return sorted(pairs)
+    if query == "dosage_sum":
+        mask = m["med"] == MED_ASPIRIN
+        return int(m["dosage"][mask].sum())
+    if query == "dosage_avg":
+        mask = m["med"] == MED_ASPIRIN
+        total, cnt = int(m["dosage"][mask].sum()), int(mask.sum())
+        return {"sum": total, "cnt": cnt, "avg": total // max(cnt, 1)}
+    if query == "heart_or_circulatory":
+        return int(
+            ((d["icd9"] == ICD9_HEART_414) | (d["icd9"] == ICD9_CIRCULATORY)).sum()
+        )
+    if query == "diag_breakdown":
+        counts: Dict[Tuple[int, int], int] = {}
+        for mi, di in zip(d["major_icd9"].tolist(), d["diag"].tolist()):
+            counts[(int(mi), int(di))] = counts.get((int(mi), int(di)), 0) + 1
+        return counts
     raise ValueError(query)

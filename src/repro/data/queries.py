@@ -8,16 +8,20 @@ logical plan.
 """
 from __future__ import annotations
 
-from ..ops.filter import Predicate
+from ..ops.filter import Or, Predicate
 from ..plan.nodes import (
+    Avg,
     CountDistinct,
+    CountValid,
     Distinct,
     Filter,
     GroupByCount,
     Join,
     OrderBy,
     PlanNode,
+    Project,
     Scan,
+    Sum,
 )
 from .healthlnk import (
     DIAG_HEART_DISEASE,
@@ -32,9 +36,15 @@ __all__ = [
     "dosage_study_plan",
     "aspirin_count_plan",
     "three_join_plan",
+    "projection_join_plan",
+    "dosage_sum_plan",
+    "dosage_avg_plan",
+    "heart_or_circulatory_plan",
+    "diag_breakdown_plan",
     "all_query_plans",
     "all_query_sql",
     "QUERY_SQL",
+    "DIALECT_QUERIES",
 ]
 
 
@@ -85,12 +95,62 @@ def three_join_plan() -> PlanNode:
     return CountDistinct(j3, "pid")
 
 
+# -----------------------------------------------------------------------------
+# Dialect-growth goldens (PR 3): one per operator the registry unlocked —
+# projection, SUM, AVG, OR-predicates, multi-column GROUP BY.
+# -----------------------------------------------------------------------------
+
+def projection_join_plan() -> PlanNode:
+    """SELECT d.pid, m.dosage FROM diagnoses d JOIN medications m ON
+    d.pid = m.pid WHERE m.med='aspirin' — the free Project narrows the
+    9-column join payload to 2 columns before reveal."""
+    m = Filter(Scan("medications"), [Predicate("med", "eq", MED_ASPIRIN)])
+    return Project(Join(Scan("diagnoses"), m, ("pid", "pid")), ("pid", "dosage"))
+
+
+def dosage_sum_plan() -> PlanNode:
+    """SELECT SUM(dosage) AS total FROM medications WHERE med='aspirin'."""
+    m = Filter(Scan("medications"), [Predicate("med", "eq", MED_ASPIRIN)])
+    return Sum(m, "dosage", name="total")
+
+
+def dosage_avg_plan() -> PlanNode:
+    """SELECT AVG(dosage) AS avg_dosage FROM medications WHERE
+    med='aspirin' — revealed as (sum, cnt); the service derives sum // cnt."""
+    m = Filter(Scan("medications"), [Predicate("med", "eq", MED_ASPIRIN)])
+    return Avg(m, "dosage", name="avg_dosage")
+
+
+def heart_or_circulatory_plan() -> PlanNode:
+    """SELECT COUNT(*) FROM diagnoses WHERE icd9='414' OR
+    icd9='circulatory' — the first disjunctive predicate tree."""
+    f = Filter(
+        Scan("diagnoses"),
+        Or((
+            Predicate("icd9", "eq", ICD9_HEART_414),
+            Predicate("icd9", "eq", ICD9_CIRCULATORY),
+        )),
+    )
+    return CountValid(f)
+
+
+def diag_breakdown_plan() -> PlanNode:
+    """SELECT major_icd9, diag, COUNT(*) FROM diagnoses GROUP BY
+    major_icd9, diag — composite-key oblivious GroupBy."""
+    return GroupByCount(Scan("diagnoses"), ("major_icd9", "diag"))
+
+
 def all_query_plans():
     return {
         "comorbidity": comorbidity_plan(),
         "dosage_study": dosage_study_plan(),
         "aspirin_count": aspirin_count_plan(),
         "three_join": three_join_plan(),
+        "projection_join": projection_join_plan(),
+        "dosage_sum": dosage_sum_plan(),
+        "dosage_avg": dosage_avg_plan(),
+        "heart_or_circulatory": heart_or_circulatory_plan(),
+        "diag_breakdown": diag_breakdown_plan(),
     }
 
 
@@ -124,7 +184,37 @@ QUERY_SQL = {
         "JOIN demographics demo2 ON d.pid = demo2.pid "
         f"WHERE d.diag = {DIAG_HEART_DISEASE} AND m.med = {MED_ASPIRIN}"
     ),
+    "projection_join": (
+        "SELECT d.pid, m.dosage FROM diagnoses d "
+        "JOIN medications m ON d.pid = m.pid "
+        f"WHERE m.med = {MED_ASPIRIN}"
+    ),
+    "dosage_sum": (
+        f"SELECT SUM(dosage) AS total FROM medications WHERE med = {MED_ASPIRIN}"
+    ),
+    "dosage_avg": (
+        "SELECT AVG(dosage) AS avg_dosage FROM medications "
+        f"WHERE med = {MED_ASPIRIN}"
+    ),
+    "heart_or_circulatory": (
+        "SELECT COUNT(*) FROM diagnoses "
+        f"WHERE icd9 = {ICD9_HEART_414} OR icd9 = {ICD9_CIRCULATORY}"
+    ),
+    "diag_breakdown": (
+        "SELECT major_icd9, diag, COUNT(*) AS cnt FROM diagnoses "
+        "GROUP BY major_icd9, diag"
+    ),
 }
+
+# The dialect-feature subset (used by the `python -m repro.sql --check`
+# execution smoke and the service benchmarks).
+DIALECT_QUERIES = (
+    "projection_join",
+    "dosage_sum",
+    "dosage_avg",
+    "heart_or_circulatory",
+    "diag_breakdown",
+)
 
 
 def all_query_sql():

@@ -22,29 +22,9 @@ import jax.numpy as jnp
 
 from ..core.ledger import CommLedger
 from ..core.prf import PRFSetup, setup_prf
-from ..core.resizer import Resizer
-from ..ops import (
-    SecretTable,
-    count_distinct,
-    count_valid,
-    oblivious_distinct,
-    oblivious_filter,
-    oblivious_groupby_count,
-    oblivious_join,
-    oblivious_orderby,
-)
-from ..plan.nodes import (
-    CountDistinct,
-    CountValid,
-    Distinct,
-    Filter,
-    GroupByCount,
-    Join,
-    OrderBy,
-    PlanNode,
-    Resize,
-    Scan,
-)
+from ..ops import SecretTable
+from ..plan.nodes import PlanNode
+from ..plan.registry import infer_schema, lookup
 
 __all__ = ["Engine", "ExecutionReport", "NodeStats"]
 
@@ -52,11 +32,12 @@ __all__ = ["Engine", "ExecutionReport", "NodeStats"]
 @dataclasses.dataclass
 class NodeStats:
     node: str
-    n_in: int
+    n_in: int  # first input's oblivious size (legacy field; see n_ins)
     n_out: int
     seconds: float
     bytes_per_party: int
     rounds: int
+    n_ins: List[int] = dataclasses.field(default_factory=list)  # all inputs
     extra: Dict = dataclasses.field(default_factory=dict)
 
 
@@ -93,6 +74,7 @@ class ExecutionReport:
                 {
                     "node": s.node,
                     "n_in": int(s.n_in),
+                    "n_ins": [int(n) for n in s.n_ins],
                     "n_out": int(s.n_out),
                     "seconds": float(s.seconds),
                     "bytes_per_party": int(s.bytes_per_party),
@@ -165,6 +147,7 @@ class Engine:
         jit_ops: bool = False,  # per-op jit pays off for REPEATED same-shape
         # queries (serving); one-shot plans are faster eager (XLA-CPU compile
         # of a 4k-row sort network costs minutes) — see §Perf
+        validate: bool = True,  # schema-check plans before any MPC work
     ):
         self.tables = tables
         key = key if key is not None else jax.random.PRNGKey(0)
@@ -172,10 +155,17 @@ class Engine:
         self.prf = prf if prf is not None else setup_prf(jax.random.fold_in(key, 7))
         self.bucket_fn = bucket_fn
         self.jit_ops = jit_ops
+        self.validate = validate
         self._resize_ctr = 0
         self._last_resize_info: Optional[Dict] = None
 
     def execute(self, plan: PlanNode) -> tuple[SecretTable, ExecutionReport]:
+        if self.validate:
+            # registry schema propagation: unknown columns raise SchemaError
+            # here, before a single share moves
+            from ..sql.catalog import Catalog
+
+            infer_schema(plan, Catalog.from_tables(self.tables))
         report = ExecutionReport()
         self._last_resize_info = None  # never carry info across runs
         out = self._run(plan, report)
@@ -191,9 +181,9 @@ class Engine:
         _block(out)
         dt = time.perf_counter() - t0
         tally = led.tally()
-        n_in = children[0].n if children else 0
+        n_ins = [t.n for t in children]
         extra = {}
-        if isinstance(node, Resize):
+        if lookup(type(node)).provides_resize_info:
             # consume the info this node's _apply just produced; clearing it
             # keeps a later Resize (or a later run) from reporting stale info
             extra = self._last_resize_info or {}
@@ -201,7 +191,8 @@ class Engine:
         report.nodes.append(
             NodeStats(
                 node=node.describe(),
-                n_in=n_in,
+                n_in=n_ins[0] if n_ins else 0,
+                n_ins=n_ins,
                 n_out=out.n,
                 seconds=dt,
                 bytes_per_party=int(tally["bytes_per_party"]),
@@ -210,26 +201,6 @@ class Engine:
             )
         )
         return out
-
-    def _protocol_fn(self, node: PlanNode):
-        """Pure (prf, *tables) -> table function for the node (jit-able)."""
-        if isinstance(node, Filter):
-            return lambda prf, t: oblivious_filter(t, node.predicates, prf)
-        if isinstance(node, Join):
-            return lambda prf, l, r: oblivious_join(l, r, node.on, prf, theta=node.theta)
-        if isinstance(node, GroupByCount):
-            return lambda prf, t: oblivious_groupby_count(t, node.key, prf, node.count_name)
-        if isinstance(node, OrderBy):
-            return lambda prf, t: oblivious_orderby(
-                t, node.col, prf, descending=node.descending, limit=node.limit
-            )
-        if isinstance(node, Distinct):
-            return lambda prf, t: oblivious_distinct(t, node.col, prf)
-        if isinstance(node, CountValid):
-            return lambda prf, t: count_valid(t, prf)
-        if isinstance(node, CountDistinct):
-            return lambda prf, t: count_distinct(t, node.col, prf)
-        raise TypeError(f"unknown plan node {node}")
 
     @staticmethod
     def _cache_key(node: PlanNode, children: List[SecretTable]):
@@ -241,18 +212,12 @@ class Engine:
 
     def _apply(self, node: PlanNode, children: List[SecretTable]) -> SecretTable:
         prf = self.prf
-        if isinstance(node, Scan):
-            return self.tables[node.table]
-        if isinstance(node, Resize):
-            self._resize_ctr += 1
-            rkey = jax.random.fold_in(self.key, 1000 + self._resize_ctr)
-            out, info = Resizer(node.cfg)(
-                children[0], prf.fold(900 + self._resize_ctr), rkey,
-                bucket_fn=self.bucket_fn,
-            )
-            self._last_resize_info = info
-            return out
-        fn = self._protocol_fn(node)
+        d = lookup(type(node))
+        if d.engine_apply is not None:
+            # stateful operators (Scan reads the table dict; Resize folds the
+            # per-execution noise counter) bypass the jit path
+            return d.engine_apply(self, node, children)
+        fn = d.protocol(node)
         if not self.jit_ops:
             return fn(prf, *children)
         key = self._cache_key(node, children)

@@ -9,9 +9,14 @@ output tuples — exactly the paper's §2.2 definition. The Resizer
 size.
 """
 from .table import SecretTable  # noqa: F401
-from .filter import oblivious_filter, Predicate  # noqa: F401
+from .filter import And, Or, Predicate, oblivious_filter  # noqa: F401
 from .join import oblivious_join  # noqa: F401
 from .groupby import oblivious_groupby_count  # noqa: F401
 from .orderby import oblivious_orderby  # noqa: F401
 from .distinct import oblivious_distinct  # noqa: F401
-from .aggregate import count_valid, count_distinct, sum_column  # noqa: F401
+from .aggregate import (  # noqa: F401
+    avg_column,
+    count_distinct,
+    count_valid,
+    sum_column,
+)

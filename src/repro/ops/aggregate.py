@@ -1,9 +1,14 @@
-"""Terminal aggregates: COUNT(*), COUNT(DISTINCT col), SUM(col).
+"""Terminal aggregates: COUNT(*), COUNT(DISTINCT col), SUM(col), AVG(col).
 
 These produce 1-row tables. Additions are local under arithmetic sharing, so
 after a bit2a (2 rounds) / b2a (2 rounds) conversion the reduction is free —
 the reason analytics-over-MPC is dominated by the *relational* operators, not
 the final aggregation.
+
+AVG is the (sum, count) pair as arithmetic shares: secure division is
+disproportionately expensive in MPC, and every comparable engine (Conclave's
+aggregation backends, SPECIAL) reveals sum and count and divides in the
+clear. The service layer derives ``avg = sum // count`` at reveal time.
 """
 from __future__ import annotations
 
@@ -13,7 +18,7 @@ from ..core.sharing import AShare, mul
 from .distinct import oblivious_distinct
 from .table import SecretTable
 
-__all__ = ["count_valid", "count_distinct", "sum_column"]
+__all__ = ["count_valid", "count_distinct", "sum_column", "avg_column"]
 
 
 def count_valid(table: SecretTable, prf: PRFSetup, name: str = "cnt") -> SecretTable:
@@ -45,3 +50,21 @@ def sum_column(
     from ..core.sharing import const_b
 
     return SecretTable({name: one}, const_b(1, (1,)))
+
+
+def avg_column(
+    table: SecretTable, col: str, prf: PRFSetup, name: str = "avg"
+) -> SecretTable:
+    """AVG(col) over true rows -> 1-row table carrying ``{name}_sum`` and
+    ``{name}_cnt`` arithmetic shares (division happens post-reveal; see
+    module docstring)."""
+    vals = b2a(table.bshare_col(col, prf), prf.fold(721))
+    bits = bit2a(table.valid, prf.fold(722))
+    masked = mul(vals, bits, prf.fold(723))
+    total = masked.sum(axis=0).map_shares(lambda s: s[:, None])
+    cnt = bits.sum(axis=0).map_shares(lambda s: s[:, None])
+    from ..core.sharing import const_b
+
+    return SecretTable(
+        {f"{name}_sum": total, f"{name}_cnt": cnt}, const_b(1, (1,))
+    )

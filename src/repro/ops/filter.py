@@ -1,31 +1,58 @@
-"""Oblivious Filter.
+"""Oblivious Filter over a predicate *tree* (AND / OR / parenthesized).
 
-Evaluates a conjunction of predicates over secret-shared columns and ANDs the
-result into the validity column. The output table has the *same* public size
-as the input (an oblivious Filter cannot physically shrink its input — the
-paper's motivating example); only a downstream Resizer may trim it.
+Evaluates a boolean combination of comparison predicates over secret-shared
+columns and ANDs the result into the validity column. The output table has the
+*same* public size as the input (an oblivious Filter cannot physically shrink
+its input — the paper's motivating example); only a downstream Resizer may
+trim it.
 
-Cost: one comparison circuit per term (eq: 5 rounds, lt/le: 5-6 rounds) plus
-one AND per conjunction (Filter_1 = 1 equality, Filter_4 = 4 equalities + 3
-ANDs — matching the paper's Fig. 7 workloads).
+Predicate trees are dataclasses: :class:`Predicate` leaves combined by
+:class:`And` / :class:`Or`. A plain sequence of predicates is accepted
+everywhere a tree is (it normalizes to a conjunction), so the historical
+``Sequence[Predicate]`` call shape keeps working.
+
+Cost: one comparison circuit per leaf (eq: 5 rounds, lt/le: 5-6 rounds) plus
+one AND or OR gate per combining edge (Filter_1 = 1 equality, Filter_4 = 4
+equalities + 3 ANDs — matching the paper's Fig. 7 workloads; OR costs the
+same as AND under replicated sharing: a OR b = NOT(NOT a AND NOT b) is one
+AND plus local XORs).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence, Union
+from typing import Sequence, Tuple, Union
 
-from ..core.circuits import eq, eq_public, gt_public, le_public, lt, lt_public, and_bit
+from ..core.circuits import (
+    and_bit,
+    eq,
+    eq_public,
+    gt_public,
+    le_public,
+    lt,
+    lt_public,
+    or_bit,
+)
 from ..core.prf import PRFSetup
 from ..core.sharing import BShare
 from .table import SecretTable
 
-__all__ = ["Predicate", "oblivious_filter"]
+__all__ = [
+    "Predicate",
+    "And",
+    "Or",
+    "Pred",
+    "normalize_pred",
+    "pred_leaves",
+    "render_pred",
+    "oblivious_filter",
+]
 
 
 @dataclasses.dataclass(frozen=True)
 class Predicate:
-    """column OP value — value may be a public constant or another column
-    name (prefixed with ``col:``)."""
+    """column OP value — value may be a public constant, another column
+    name (prefixed with ``col:``), or the placeholder ``"?"`` in a prepared
+    plan template (templates are never executed; bind first)."""
 
     column: str
     op: str  # eq | lt | le | gt
@@ -55,18 +82,115 @@ class Predicate:
         raise ValueError(f"unknown predicate op {self.op}")
 
 
+@dataclasses.dataclass(frozen=True)
+class And:
+    """Conjunction of predicate subtrees (flattened, >= 2 terms)."""
+
+    terms: Tuple["Pred", ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Or:
+    """Disjunction of predicate subtrees (flattened, >= 2 terms)."""
+
+    terms: Tuple["Pred", ...]
+
+
+Pred = Union[Predicate, And, Or]
+
+
+def normalize_pred(pred) -> Pred:
+    """Canonical tree: sequences become conjunctions, single-term And/Or
+    collapse, nested same-type combiners flatten. Canonical form makes
+    dataclass equality (and hence plan fingerprints) independent of how the
+    tree was spelled."""
+    if isinstance(pred, Predicate):
+        return pred
+    if isinstance(pred, (And, Or)):
+        kind = type(pred)
+        flat: list = []
+        for t in pred.terms:
+            t = normalize_pred(t)
+            if isinstance(t, kind):
+                flat.extend(t.terms)
+            else:
+                flat.append(t)
+        if len(flat) == 1:
+            return flat[0]
+        return kind(tuple(flat))
+    if isinstance(pred, Sequence) and not isinstance(pred, (str, bytes)):
+        return normalize_pred(And(tuple(pred)))
+    raise TypeError(f"cannot normalize predicate {pred!r}")
+
+
+def pred_leaves(pred: Pred) -> Tuple[Predicate, ...]:
+    """Leaf predicates in DFS order."""
+    if isinstance(pred, Predicate):
+        return (pred,)
+    out: list = []
+    for t in pred.terms:
+        out.extend(pred_leaves(t))
+    return tuple(out)
+
+
+def render_pred(pred: Pred, fmt=None) -> str:
+    """SQL-precedence rendering (AND binds tighter than OR; Or subtrees are
+    parenthesized inside And). ``fmt(leaf)`` renders a leaf; the default is
+    the fingerprint form ``"col op value"`` — for a flat conjunction this is
+    byte-identical to the historical ``" AND ".join(...)`` Filter label."""
+    if fmt is None:
+        fmt = lambda p: f"{p.column} {p.op} {p.value}"
+    if isinstance(pred, Predicate):
+        return fmt(pred)
+    if isinstance(pred, And):
+        parts = [
+            f"({render_pred(t, fmt)})" if isinstance(t, Or) else render_pred(t, fmt)
+            for t in pred.terms
+        ]
+        return " AND ".join(parts)
+    if isinstance(pred, Or):
+        return " OR ".join(render_pred(t, fmt) for t in pred.terms)
+    raise TypeError(f"cannot render predicate {pred!r}")
+
+
 def _bit(b: BShare) -> BShare:
     return b.xor_public(b.ring.const(1))
 
 
-def oblivious_filter(
-    table: SecretTable, predicates: Sequence[Predicate], prf: PRFSetup
-) -> SecretTable:
-    """valid' = valid AND p_1 AND ... AND p_k. Output size == input size."""
+def _eval_tree(pred: Pred, table: SecretTable, prf: PRFSetup, state: dict) -> BShare:
+    """Recursive evaluation with deterministic PRF tags: leaf i (DFS order)
+    uses tag 400+i — identical to the historical flat path — and combining
+    gate g folds (430, g) for AND / (470, g) for OR."""
+    if isinstance(pred, Predicate):
+        i = state["leaf"]
+        state["leaf"] += 1
+        return pred.evaluate(table, prf, 400 + i)
     acc = None
-    for i, pred in enumerate(predicates):
-        b = pred.evaluate(table, prf, 400 + i)
-        acc = b if acc is None else and_bit(acc, b, prf.fold(430 + i))
+    for t in pred.terms:
+        b = _eval_tree(t, table, prf, state)
+        if acc is None:
+            acc = b
+            continue
+        g = state["gate"]
+        state["gate"] += 1
+        if isinstance(pred, And):
+            acc = and_bit(acc, b, prf.fold(430).fold(g))
+        else:
+            acc = or_bit(acc, b, prf.fold(470).fold(g))
+    return acc
+
+
+def oblivious_filter(
+    table: SecretTable, predicates, prf: PRFSetup
+) -> SecretTable:
+    """valid' = valid AND eval(tree). Output size == input size.
+
+    ``predicates`` is a predicate tree (:data:`Pred`) or a sequence of
+    :class:`Predicate` (implicit conjunction)."""
+    tree = normalize_pred(predicates)
+    if isinstance(tree, And) and not tree.terms:
+        return table
+    acc = _eval_tree(tree, table, prf, {"leaf": 0, "gate": 0})
     if acc is None:
         return table
     new_valid = and_bit(table.valid, acc, prf.fold(449))

@@ -1,12 +1,14 @@
-"""Oblivious GroupBy with COUNT aggregate.
+"""Oblivious GroupBy with COUNT aggregate (single or composite key).
 
 Pipeline (Secrecy-style; the paper notes GroupBy "includes sorting as a
 pre-operation"):
 
-1. Build a sort key that sends invalid rows to the end (select valid ? key :
-   SENTINEL — one AND).
-2. Bitonic-sort the table by it (O(log^2 N) stages).
-3. Mark segment starts (one vectorized equality against the row above).
+1. Build sort keys that send invalid rows to the end (select valid ? key :
+   SENTINEL — one AND per key column).
+2. Bitonic-sort the table by them (O(log^2 N) stages; composite keys compare
+   lexicographically inside each compare-exchange).
+3. Mark segment starts (one vectorized equality per key column against the
+   row above, ANDed for composite keys).
 4. Segmented Kogge-Stone prefix-scan of the valid bits in *arithmetic*
    sharing — additions are free; each of the log2 N levels costs 2 ring
    multiplications (value-carry and flag-OR).
@@ -14,17 +16,18 @@ pre-operation"):
    COUNT; all other rows stay in the table as invalid fillers (output size ==
    input size, fully oblivious).
 
-Sentinel caveat: group keys must be < 0xFFFFFFFF (documented; dictionary
+Sentinel caveat: group keys must be < 0xFFFFFFFE (documented; dictionary
 encodings in the workloads are small ints).
 """
 from __future__ import annotations
 
+from typing import List, Sequence, Union
+
 import jax.numpy as jnp
 
 from ..core.circuits import and_bit, bit2a, eq, or_bit
-from ..core.ledger import active_ledger
 from ..core.prf import PRFSetup
-from ..core.sharing import AShare, BShare, and_, mul, select
+from ..core.sharing import AShare, BShare, mul, select
 from ..core.sort import bitonic_sort
 from .table import SecretTable
 
@@ -60,13 +63,19 @@ def _shift_up(col, fill: int = 0):
     ).xor_public(jnp.zeros(col.shape, dtype=col.ring.dtype).at[-1].set(fill))
 
 
-def segment_starts(key: BShare, valid: BShare, prf: PRFSetup) -> BShare:
-    """start_i = valid_i AND (i == 0 OR key_i != key_{i-1})."""
-    prev = _shift_down(key)
-    e = eq(key, prev, prf.fold(601))
+def segment_starts(
+    key: Union[BShare, Sequence[BShare]], valid: BShare, prf: PRFSetup
+) -> BShare:
+    """start_i = valid_i AND (i == 0 OR key_i != key_{i-1}), where composite
+    keys (a sequence of columns) compare equal iff every column does."""
+    keys: List[BShare] = [key] if isinstance(key, BShare) else list(key)
+    e = eq(keys[0], _shift_down(keys[0]), prf.fold(601))
+    for i, k in enumerate(keys[1:]):
+        ei = eq(k, _shift_down(k), prf.fold(603).fold(2 * i))
+        e = and_bit(e, ei, prf.fold(603).fold(2 * i + 1))
     # row 0 always starts a segment: force e_0 = 0 with a public mask
-    n = key.shape[0]
-    m = jnp.ones(n, dtype=key.ring.dtype).at[0].set(0)
+    n = keys[0].shape[0]
+    m = jnp.ones(n, dtype=keys[0].ring.dtype).at[0].set(0)
     e = e.and_public(m)
     not_e = e.xor_public(e.ring.const(1))
     return and_bit(valid, not_e, prf.fold(602))
@@ -106,44 +115,51 @@ def segmented_count(valid: BShare, start: BShare, prf: PRFSetup) -> AShare:
 
 
 def oblivious_groupby_count(
-    table: SecretTable, key_col: str, prf: PRFSetup, count_name: str = "cnt"
+    table: SecretTable,
+    key_col: Union[str, Sequence[str]],
+    prf: PRFSetup,
+    count_name: str = "cnt",
 ) -> SecretTable:
-    import contextlib
-
+    key_cols = [key_col] if isinstance(key_col, str) else list(key_col)
     table = pad_pow2(table)
-    with contextlib.nullcontext():
-        keyb = table.bshare_col(key_col, prf)
-        vmask = table.valid.lsb_mask()
-        sort_key = select(
-            vmask,
-            keyb,
-            BShare(jnp.zeros_like(keyb.shares)).xor_public(
-                jnp.full(keyb.shape, SENTINEL, dtype=keyb.ring.dtype)
-            ),
-            prf.fold(651),
+    vmask = table.valid.lsb_mask()
+
+    sort_names = []
+    cols: dict = {}
+    for i, kc in enumerate(key_cols):
+        keyb = table.bshare_col(kc, prf)
+        sentinel = BShare(jnp.zeros_like(keyb.shares)).xor_public(
+            jnp.full(keyb.shape, SENTINEL, dtype=keyb.ring.dtype)
         )
+        name = "__sk" if i == 0 else f"__sk{i}"
+        # key 0 keeps the historical tag; extra keys branch off a sub-chain
+        # (651, i) so no tag collides with the 661/662 boundary gates below
+        p = prf.fold(651) if i == 0 else prf.fold(651).fold(i)
+        cols[name] = select(vmask, keyb, sentinel, p)
+        sort_names.append(name)
+    cols["__valid"] = table.valid
+    cols.update({k: table.bshare_col(k, prf) for k in table.cols})
 
-        cols = {"__sk": sort_key, "__valid": table.valid}
-        cols.update({k: table.bshare_col(k, prf) for k in table.cols})
-        cols = bitonic_sort(cols, "__sk", prf)
-        valid = cols.pop("__valid")
-        key_sorted = cols[key_col]
-        cols.pop("__sk")
+    cols = bitonic_sort(cols, sort_names, prf)
+    valid = cols.pop("__valid")
+    keys_sorted = [cols[kc] for kc in key_cols]
+    for name in sort_names:
+        cols.pop(name)
 
-        start = segment_starts(key_sorted, valid, prf)
-        cnt = segmented_count(valid, start, prf)
+    start = segment_starts(keys_sorted, valid, prf)
+    cnt = segmented_count(valid, start, prf)
 
-        # last row of each segment := representative
-        nxt_start = _shift_up(start, fill=1)
-        nxt_valid = _shift_up(valid, fill=0)
-        not_nxt_valid = nxt_valid.xor_public(nxt_valid.ring.const(1))
-        boundary = or_bit(
-            nxt_start.and_public(nxt_start.ring.const(1)),
-            not_nxt_valid.and_public(not_nxt_valid.ring.const(1)),
-            prf.fold(661),
-        )
-        rep = and_bit(valid, boundary, prf.fold(662))
+    # last row of each segment := representative
+    nxt_start = _shift_up(start, fill=1)
+    nxt_valid = _shift_up(valid, fill=0)
+    not_nxt_valid = nxt_valid.xor_public(nxt_valid.ring.const(1))
+    boundary = or_bit(
+        nxt_start.and_public(nxt_start.ring.const(1)),
+        not_nxt_valid.and_public(not_nxt_valid.ring.const(1)),
+        prf.fold(661),
+    )
+    rep = and_bit(valid, boundary, prf.fold(662))
 
-        out_cols: dict = {key_col: key_sorted}
-        out_cols[count_name] = cnt
-        return SecretTable(out_cols, rep)
+    out_cols: dict = {kc: ks for kc, ks in zip(key_cols, keys_sorted)}
+    out_cols[count_name] = cnt
+    return SecretTable(out_cols, rep)

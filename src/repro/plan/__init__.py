@@ -1,13 +1,25 @@
 from .nodes import (  # noqa: F401
     Scan,
     Filter,
+    Project,
     Join,
     GroupByCount,
     OrderBy,
     Distinct,
     CountValid,
     CountDistinct,
+    Sum,
+    Avg,
     Resize,
     PlanNode,
+)
+from .registry import (  # noqa: F401
+    OperatorDef,
+    PlanSchema,
+    SchemaError,
+    infer_schema,
+    lookup,
+    register,
+    registered_ops,
 )
 from .policies import insert_resizers  # noqa: F401

@@ -11,10 +11,12 @@ ledger records:
   shuffle on N x M      : 3 * N * M bytes, 3 rounds
   resizer on N          : noise-add ~ (a2b 88 + lt 40 + OR 4) * N + shuffle
 
-The model powers the ``cost_based`` Resizer placement: inserting a Resizer
-after an operator is profitable iff its own cost is smaller than the
-downstream savings from the reduced intermediate size (using the strategy's
-E[S] = T_est + E[eta]).
+Per-operator formulas live on each operator's :class:`OperatorDef`
+(:mod:`repro.plan.registry`); :class:`CostModel` is the thin driver that
+walks a plan and dispatches. The model powers the ``cost_based`` Resizer
+placement: inserting a Resizer after an operator is profitable iff its own
+cost is smaller than the downstream savings from the reduced intermediate
+size (using the strategy's E[S] = T_est + E[eta]).
 """
 from __future__ import annotations
 
@@ -23,53 +25,23 @@ import math
 from typing import Dict
 
 from ..core.noise import NoiseStrategy
-from .nodes import (
-    CountDistinct,
-    CountValid,
-    Distinct,
-    Filter,
-    GroupByCount,
-    Join,
-    OrderBy,
-    PlanNode,
-    Resize,
-    Scan,
+from .nodes import PlanNode
+from .registry import (  # noqa: F401  (re-exported: historical import site)
+    BYTES,
+    lookup,
+    resizer_bytes,
+    shuffle_bytes,
+    sort_bytes,
 )
 
-__all__ = ["CostModel", "BYTES"]
-
-BYTES = {
-    "and": 4,
-    "eq": 20,
-    "lt": 44,
-    "bit2a": 8,
-    "a2b": 88,
-    "b2a": 256,
-}
-
-
-def _stages(n: int) -> int:
-    m = max(int(math.ceil(math.log2(max(n, 2)))), 1)
-    return m * (m + 1) // 2
-
-
-def sort_bytes(n: int, ncols: int) -> float:
-    return _stages(n) * n * (BYTES["lt"] + BYTES["and"] * (ncols + 2))
-
-
-def shuffle_bytes(n: int, ncols: int) -> float:
-    return 3 * n * 4 * (ncols + 2)
-
-
-def resizer_bytes(n: int, ncols: int) -> float:
-    noise_add = n * (BYTES["a2b"] + BYTES["lt"] + BYTES["and"])
-    return noise_add + shuffle_bytes(n, ncols) + 4 * n  # + reveal k
+__all__ = ["CostModel", "BYTES", "sort_bytes", "shuffle_bytes", "resizer_bytes"]
 
 
 @dataclasses.dataclass
 class CostModel:
     """Walks a plan, propagating (oblivious size N, estimated true size T,
-    ncols) and summing comm bytes."""
+    ncols) and summing comm bytes — dispatching per-operator formulas
+    through the registry."""
 
     table_sizes: Dict[str, int]
     table_cols: Dict[str, int]
@@ -78,57 +50,8 @@ class CostModel:
     noise: NoiseStrategy | None = None
 
     def estimate(self, node: PlanNode) -> Dict[str, float]:
-        if isinstance(node, Scan):
-            n = self.table_sizes[node.table]
-            return {"n": n, "t": n, "cols": self.table_cols[node.table], "bytes": 0.0}
-        if isinstance(node, Filter):
-            c = self.estimate(node.child)
-            k = len(node.predicates)
-            cost = c["n"] * (BYTES["eq"] * k + BYTES["and"] * k)
-            return {
-                "n": c["n"],
-                "t": max(c["t"] * self.selectivity**k, 1),
-                "cols": c["cols"],
-                "bytes": c["bytes"] + cost,
-            }
-        if isinstance(node, Join):
-            l, r = self.estimate(node.left), self.estimate(node.right)
-            n = l["n"] * r["n"]
-            cost = n * (BYTES["eq"] + 2 * BYTES["and"])
-            if node.theta:
-                cost += n * (BYTES["lt"] + BYTES["and"])
-            return {
-                "n": n,
-                "t": max(l["t"] * r["t"] * self.join_selectivity, 1),
-                "cols": l["cols"] + r["cols"],
-                "bytes": l["bytes"] + r["bytes"] + cost,
-            }
-        if isinstance(node, (GroupByCount, Distinct, OrderBy)):
-            c = self.estimate(node.child)
-            n = 1 << max(int(math.ceil(math.log2(max(c["n"], 2)))), 0)
-            cost = sort_bytes(n, c["cols"]) + n * (BYTES["eq"] + 4 * BYTES["and"])
-            if isinstance(node, GroupByCount):
-                cost += n * 2 * BYTES["bit2a"] + math.log2(max(n, 2)) * n * 8
-            out_n = node.limit if isinstance(node, OrderBy) and node.limit else n
-            return {
-                "n": out_n,
-                "t": min(c["t"], out_n),
-                "cols": c["cols"] + 1,
-                "bytes": c["bytes"] + cost,
-            }
-        if isinstance(node, (CountValid, CountDistinct)):
-            c = self.estimate(node.child)
-            cost = c["n"] * BYTES["bit2a"]
-            if isinstance(node, CountDistinct):
-                cost += sort_bytes(c["n"], c["cols"]) + c["n"] * BYTES["eq"]
-            return {"n": 1, "t": 1, "cols": 1, "bytes": c["bytes"] + cost}
-        if isinstance(node, Resize):
-            c = self.estimate(node.child)
-            noise = node.cfg.noise
-            s = min(c["t"] + noise.mean(int(c["n"]), int(c["t"])), c["n"])
-            cost = resizer_bytes(c["n"], c["cols"])
-            return {"n": s, "t": c["t"], "cols": c["cols"], "bytes": c["bytes"] + cost}
-        raise TypeError(f"unknown node {node}")
+        children = [self.estimate(c) for c in node.children()]
+        return lookup(type(node)).estimate(node, children, self)
 
     def plan_bytes(self, node: PlanNode) -> float:
         return self.estimate(node)["bytes"]

@@ -1,28 +1,38 @@
 """Logical/physical plan nodes.
 
 A plan is a tree of dataclass nodes; leaves are ``Scan``s over named base
-tables. Plans are "hand-compiled" exactly as in the paper (§4.5: no automatic
-SQL translation yet); ``Resize`` nodes are inserted either by hand or by a
-placement policy (:mod:`repro.plan.policies`).
+tables. Every node type is declared here and *registered* in
+:mod:`repro.plan.registry` — the engine, cost model, SQL renderer, and
+Resizer-placement policy all dispatch through that registry, so adding an
+operator never touches their drivers.
+
+``describe()`` strings are load-bearing: they feed plan fingerprints
+(sql/compile.py), the service plan cache, the privacy accountant's
+observation signatures, and the engine's jit-cache keys. Changing a node's
+describe() output invalidates every one of those — treat the format as a
+stable wire format.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Tuple, Union
 
 from ..core.resizer import ResizerConfig
-from ..ops.filter import Predicate
+from ..ops.filter import And, Or, Pred, Predicate, normalize_pred, pred_leaves, render_pred
 
 __all__ = [
     "PlanNode",
     "Scan",
     "Filter",
+    "Project",
     "Join",
     "GroupByCount",
     "OrderBy",
     "Distinct",
     "CountValid",
     "CountDistinct",
+    "Sum",
+    "Avg",
     "Resize",
 ]
 
@@ -71,12 +81,51 @@ class Scan(PlanNode):
 
 @dataclasses.dataclass
 class Filter(PlanNode):
+    """Filter by a predicate *tree* (AND/OR/leaf; see repro.ops.filter).
+
+    A plain sequence of :class:`Predicate` is accepted and normalized to a
+    conjunction, preserving the historical ``Filter(child, [p1, p2])`` call
+    shape — and, for flat conjunctions, the historical describe() string.
+    """
+
     child: PlanNode
-    predicates: Sequence[Predicate]
+    pred: Pred
+
+    def __post_init__(self):
+        self.pred = normalize_pred(self.pred)
+
+    @property
+    def predicates(self) -> Tuple[Predicate, ...]:
+        """Flat conjunction view (legacy accessor). Raises for trees with OR
+        — callers that predate the predicate tree only build conjunctions."""
+        if isinstance(self.pred, Or) or (
+            isinstance(self.pred, And)
+            and any(not isinstance(t, Predicate) for t in self.pred.terms)
+        ):
+            raise ValueError(
+                "Filter holds a non-conjunctive predicate tree; use .pred"
+            )
+        return pred_leaves(self.pred)
 
     def describe(self) -> str:
-        ps = " AND ".join(f"{p.column} {p.op} {p.value}" for p in self.predicates)
-        return f"Filter({ps})"
+        return f"Filter({render_pred(self.pred)})"
+
+
+@dataclasses.dataclass
+class Project(PlanNode):
+    """Keep only the named columns (plus the validity column). Free: an
+    oblivious projection is local — no communication, no size change — but
+    it shrinks every downstream operator's payload width and the final
+    reveal."""
+
+    child: PlanNode
+    cols: Tuple[str, ...]
+
+    def __post_init__(self):
+        self.cols = tuple(self.cols)
+
+    def describe(self) -> str:
+        return f"Project({','.join(self.cols)})"
 
 
 @dataclasses.dataclass
@@ -93,15 +142,31 @@ class Join(PlanNode):
 
 @dataclasses.dataclass
 class GroupByCount(PlanNode):
+    """GROUP BY one or more key columns with a COUNT(*) aggregate.
+
+    ``key`` is a single column name (the historical shape — kept so existing
+    fingerprints stay byte-stable) or a tuple of names for composite keys.
+    """
+
     child: PlanNode
-    key: str
+    key: Union[str, Tuple[str, ...]]
     count_name: str = "cnt"
 
+    def __post_init__(self):
+        # canonical: 1-column keys are plain strings (fingerprint stability)
+        if not isinstance(self.key, str):
+            key = tuple(self.key)
+            self.key = key[0] if len(key) == 1 else key
+
+    @property
+    def keys(self) -> Tuple[str, ...]:
+        return (self.key,) if isinstance(self.key, str) else self.key
+
     def describe(self) -> str:
-        # count_name is part of the node's identity: describe() feeds plan
-        # fingerprints (sql/compile.py) and jit-cache keys, and two plans
+        # key/count_name are part of the node's identity: describe() feeds
+        # plan fingerprints (sql/compile.py) and jit-cache keys, and two plans
         # differing only in the count column name are different plans
-        return f"GroupByCount({self.key}->{self.count_name})"
+        return f"GroupByCount({','.join(self.keys)}->{self.count_name})"
 
 
 @dataclasses.dataclass
@@ -139,6 +204,31 @@ class CountDistinct(PlanNode):
 
     def describe(self) -> str:
         return f"CountDistinct({self.col})"
+
+
+@dataclasses.dataclass
+class Sum(PlanNode):
+    """SUM(col) over true rows -> 1-row table with an arithmetic share."""
+
+    child: PlanNode
+    col: str
+    name: str = "sum"
+
+    def describe(self) -> str:
+        return f"Sum({self.col}->{self.name})"
+
+
+@dataclasses.dataclass
+class Avg(PlanNode):
+    """AVG(col) -> 1-row (sum, count) pair; division happens post-reveal
+    (see repro.ops.aggregate)."""
+
+    child: PlanNode
+    col: str
+    name: str = "avg"
+
+    def describe(self) -> str:
+        return f"Avg({self.col}->{self.name})"
 
 
 @dataclasses.dataclass

@@ -4,27 +4,22 @@ The paper inserts a Resizer after every internal operator by hand and
 sketches the cost functions a future optimizer would use (Fig. 9). We provide
 those policies plus a simple analytic cost-based one built on
 :mod:`repro.plan.cost`.
+
+Which operators are Resizer candidates is not hard-coded here: every
+operator's :class:`~repro.plan.registry.OperatorDef` carries a ``resizer``
+hint (``internal`` = wrap candidate — the operator balloons or carries dead
+tuples; ``skip`` = never wrapped: leaves, terminals, free projections, and
+Resize itself).
 """
 from __future__ import annotations
 
 from typing import Callable, Optional
 
 from ..core.resizer import ResizerConfig
-from .nodes import (
-    CountDistinct,
-    CountValid,
-    Filter,
-    GroupByCount,
-    Join,
-    OrderBy,
-    PlanNode,
-    Resize,
-    Scan,
-)
+from .nodes import PlanNode, Resize
+from .registry import lookup
 
 __all__ = ["insert_resizers"]
-
-_INTERNAL = (Filter, Join, GroupByCount)
 
 
 def insert_resizers(
@@ -37,8 +32,9 @@ def insert_resizers(
 
     placement:
       * ``none``          — fully oblivious (no resizers)
-      * ``all_internal``  — after every non-terminal Filter/Join/GroupBy
-                            (the paper's evaluation setup)
+      * ``all_internal``  — after every non-terminal operator whose registry
+                            hint is ``internal`` (Filter/Join/GroupBy — the
+                            paper's evaluation setup)
       * ``after_joins``   — only after Join nodes (where ballooning happens)
       * ``cost_based``    — insert only where the cost model predicts a win
                             (requires ``cost_model`` from repro.plan.cost)
@@ -50,14 +46,15 @@ def insert_resizers(
         node = node.replace_children(
             [rewrite(c, False) for c in node.children()]
         )
-        if is_root or isinstance(node, (Scan, Resize, CountValid, CountDistinct, OrderBy)):
+        d = lookup(type(node))
+        if is_root or d.resizer != "internal":
             return node
         wrap = False
-        if placement == "all_internal" and isinstance(node, _INTERNAL):
+        if placement == "all_internal":
             wrap = True
-        elif placement == "after_joins" and isinstance(node, Join):
-            wrap = True
-        elif placement == "cost_based" and isinstance(node, _INTERNAL):
+        elif placement == "after_joins":
+            wrap = d.balloons
+        elif placement == "cost_based":
             wrap = cost_model is None or cost_model.resizer_profitable(node)
         if wrap:
             cfg = cfg_factory(node)

@@ -1,0 +1,671 @@
+"""OperatorDef registry: the single extension point for plan operators.
+
+Adding a plan node used to mean editing five separate ``isinstance`` chains
+(engine dispatch, cost model, SQL renderer, resizer placement, compiler
+terminal handling). Now each operator registers *one* :class:`OperatorDef`
+holding everything the drivers need:
+
+* ``protocol``       — physical protocol factory: ``node -> (prf, *tables)
+                       -> SecretTable`` (pure, jit-able). ``None`` for nodes
+                       the engine applies statefully (``engine_apply``).
+* ``engine_apply``   — stateful execution hook (Scan reads the engine's
+                       table dict; Resize folds the engine's noise counter).
+* ``estimate``       — cost/selectivity model: ``(node, child_estimates,
+                       cost_model) -> {"n","t","cols","bytes"}``.
+* ``schema``         — compile-time output schema: ``(node, child_schemas,
+                       catalog) -> PlanSchema``; raises :class:`SchemaError`
+                       on unknown columns, so column errors surface before
+                       any MPC work.
+* ``render_rel`` / ``render_head`` / ``render_order``
+                     — SQL rendering hooks (see repro.sql.render for the
+                       driver contract).
+* ``sql_shape``      — where the node may appear in rendered SQL:
+                       ``leaf`` (Scan), ``relational`` (FROM/WHERE subtree),
+                       ``head`` (SELECT-list terminal), ``order``, ``none``.
+* ``resizer``        — placement hint: ``internal`` operators are Resizer
+                       candidates (they balloon or preserve dead tuples);
+                       ``skip`` operators are never wrapped.
+* ``singleton``      — produces a 1-row output (ORDER BY over it is
+                       rejected at compile time).
+* ``provides_resize_info`` — the engine attaches reveal-and-trim info to
+                       this node's report entry.
+* ``post_reveal``    — optional revealed-rows post-processing hook
+                       (AVG derives ``sum // count`` client-side).
+
+DESIGN.md §10 documents the contract; tests/test_registry.py enforces it
+(every registered operator must instantiate, execute, cost, schema-check,
+and — when renderable — round-trip plan -> SQL -> plan).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import OrderedDict
+from typing import Callable, Dict, List, Optional, Type
+
+import jax
+
+from ..core.resizer import Resizer
+from ..ops import (
+    avg_column,
+    count_distinct,
+    count_valid,
+    oblivious_distinct,
+    oblivious_filter,
+    oblivious_groupby_count,
+    oblivious_join,
+    oblivious_orderby,
+    sum_column,
+)
+from ..ops.filter import pred_leaves
+from ..ops.join import _disambiguate
+from .nodes import (
+    Avg,
+    CountDistinct,
+    CountValid,
+    Distinct,
+    Filter,
+    GroupByCount,
+    Join,
+    OrderBy,
+    PlanNode,
+    Project,
+    Resize,
+    Scan,
+    Sum,
+)
+
+__all__ = [
+    "OperatorDef",
+    "PlanSchema",
+    "SchemaError",
+    "register",
+    "lookup",
+    "registered_ops",
+    "infer_schema",
+]
+
+
+# -----------------------------------------------------------------------------
+# Schema propagation
+# -----------------------------------------------------------------------------
+
+class SchemaError(ValueError):
+    """A plan references a column its input does not produce."""
+
+
+@dataclasses.dataclass
+class PlanSchema:
+    """Ordered column name -> share kind ("b" = boolean/XOR word, "a" =
+    arithmetic) for one plan node's output. Mirrors exactly what the
+    executed operator's SecretTable will carry."""
+
+    cols: "OrderedDict[str, str]"
+
+    @classmethod
+    def of(cls, names, kind: str = "b") -> "PlanSchema":
+        return cls(OrderedDict((n, kind) for n in names))
+
+    @property
+    def names(self) -> List[str]:
+        return list(self.cols)
+
+    def kind(self, name: str) -> str:
+        return self.cols[name]
+
+    def require(self, col: str, node: PlanNode) -> None:
+        if col not in self.cols:
+            raise SchemaError(
+                f"{node.describe()} references column {col!r}, but its input "
+                f"produces only {self.names}"
+            )
+
+    def require_pred(self, pred, node: PlanNode) -> None:
+        for leaf in pred_leaves(pred):
+            self.require(leaf.column, node)
+            if isinstance(leaf.value, str) and leaf.value.startswith("col:"):
+                self.require(leaf.value[4:], node)
+
+
+def infer_schema(plan: PlanNode, catalog) -> PlanSchema:
+    """Propagate the typed column set bottom-up through ``plan`` against a
+    :class:`repro.sql.catalog.Catalog`, raising :class:`SchemaError` at the
+    first unresolvable column — the compile-time guard that runs before any
+    MPC work (Engine.execute calls this on every plan)."""
+    d = lookup(type(plan))
+    children = [infer_schema(c, catalog) for c in plan.children()]
+    return d.schema(plan, children, catalog)
+
+
+# -----------------------------------------------------------------------------
+# OperatorDef + registry
+# -----------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class OperatorDef:
+    node_type: Type[PlanNode]
+    schema: Callable[[PlanNode, List[PlanSchema], object], PlanSchema]
+    estimate: Callable[[PlanNode, List[Dict], object], Dict]
+    protocol: Optional[Callable[[PlanNode], Callable]] = None
+    engine_apply: Optional[Callable] = None
+    render_rel: Optional[Callable] = None
+    render_head: Optional[Callable] = None
+    render_order: Optional[Callable] = None
+    post_reveal: Optional[Callable] = None
+    sql_shape: str = "none"  # leaf | relational | head | order | none
+    resizer: str = "skip"  # internal | skip
+    balloons: bool = False  # output is larger than inputs (join product)
+    singleton: bool = False
+    provides_resize_info: bool = False
+
+    def __post_init__(self):
+        if self.protocol is None and self.engine_apply is None:
+            raise ValueError(
+                f"OperatorDef({self.node_type.__name__}) needs a protocol "
+                "factory or an engine_apply hook"
+            )
+
+
+_REGISTRY: Dict[Type[PlanNode], OperatorDef] = {}
+
+
+def register(d: OperatorDef) -> OperatorDef:
+    if d.node_type in _REGISTRY:
+        raise ValueError(f"duplicate OperatorDef for {d.node_type.__name__}")
+    _REGISTRY[d.node_type] = d
+    return d
+
+
+def lookup(node_type: Type[PlanNode]) -> OperatorDef:
+    try:
+        return _REGISTRY[node_type]
+    except KeyError:
+        raise TypeError(
+            f"unregistered plan node {node_type.__name__} — add an "
+            "OperatorDef in repro.plan.registry"
+        ) from None
+
+
+def registered_ops() -> Dict[Type[PlanNode], OperatorDef]:
+    return dict(_REGISTRY)
+
+
+# -----------------------------------------------------------------------------
+# Cost model pieces (constants shared with plan.cost; kept here so a new
+# operator's whole definition lives in one file)
+# -----------------------------------------------------------------------------
+
+BYTES = {
+    "and": 4,
+    "eq": 20,
+    "lt": 44,
+    "bit2a": 8,
+    "a2b": 88,
+    "b2a": 256,
+}
+
+
+def _stages(n: int) -> int:
+    m = max(int(math.ceil(math.log2(max(n, 2)))), 1)
+    return m * (m + 1) // 2
+
+
+def sort_bytes(n: int, ncols: int) -> float:
+    return _stages(n) * n * (BYTES["lt"] + BYTES["and"] * (ncols + 2))
+
+
+def shuffle_bytes(n: int, ncols: int) -> float:
+    return 3 * n * 4 * (ncols + 2)
+
+
+def resizer_bytes(n: int, ncols: int) -> float:
+    noise_add = n * (BYTES["a2b"] + BYTES["lt"] + BYTES["and"])
+    return noise_add + shuffle_bytes(n, ncols) + 4 * n  # + reveal k
+
+
+def _leaf_bytes(leaf) -> int:
+    return BYTES["eq"] if leaf.op == "eq" else BYTES["lt"]
+
+
+# -----------------------------------------------------------------------------
+# Rendering helpers (driver-side Schema objects come in via the renderer)
+# -----------------------------------------------------------------------------
+
+_OP_SYM = {"eq": "=", "lt": "<", "le": "<=", "gt": ">"}
+
+
+def _sql_leaf(p, qual) -> str:
+    if isinstance(p.value, str) and p.value.startswith("col:"):
+        return f"{qual(p.column)} {_OP_SYM[p.op]} {qual(p.value[4:])}"
+    return f"{qual(p.column)} {_OP_SYM[p.op]} {int(p.value)}"
+
+
+def sql_conjuncts(pred, qual) -> List[str]:
+    """WHERE-clause conjunct strings for a predicate tree: top-level AND
+    terms become separate conjuncts; an OR term is one parenthesized
+    conjunct. Tree rendering (SQL precedence, parens) is
+    :func:`repro.ops.filter.render_pred` with a qualified-SQL leaf format."""
+    from ..ops.filter import And, Or, render_pred
+
+    fmt = lambda p: _sql_leaf(p, qual)
+    terms = pred.terms if isinstance(pred, And) else (pred,)
+    return [
+        f"({render_pred(t, fmt)})" if isinstance(t, Or) else render_pred(t, fmt)
+        for t in terms
+    ]
+
+
+# -----------------------------------------------------------------------------
+# Operator definitions
+# -----------------------------------------------------------------------------
+
+def _scan_schema(node: Scan, children, catalog) -> PlanSchema:
+    if node.table not in catalog.tables:
+        raise SchemaError(f"Scan references unknown table {node.table!r}")
+    return PlanSchema.of(catalog.columns(node.table))
+
+
+def _scan_estimate(node: Scan, children, cm) -> Dict:
+    n = cm.table_sizes[node.table]
+    return {"n": n, "t": n, "cols": cm.table_cols[node.table], "bytes": 0.0}
+
+
+def _render_scan(r, node: Scan):
+    alias = f"t{len(r.aliases)}"
+    r.aliases.append((alias, node.table))
+    if node.table not in r.catalog.tables:
+        raise ValueError(f"table {node.table!r} not in catalog")
+    return r.schema_for_table(alias, r.catalog.columns(node.table))
+
+
+register(OperatorDef(
+    node_type=Scan,
+    schema=_scan_schema,
+    estimate=_scan_estimate,
+    engine_apply=lambda eng, node, children: eng.tables[node.table],
+    render_rel=_render_scan,
+    sql_shape="leaf",
+))
+
+
+def _filter_schema(node: Filter, children, catalog) -> PlanSchema:
+    children[0].require_pred(node.pred, node)
+    return children[0]
+
+
+def _filter_estimate(node: Filter, children, cm) -> Dict:
+    c = children[0]
+    leaves = pred_leaves(node.pred)
+    k = len(leaves)
+    cost = c["n"] * (sum(_leaf_bytes(p) for p in leaves) + BYTES["and"] * k)
+    return {
+        "n": c["n"],
+        "t": max(c["t"] * cm.selectivity ** k, 1),
+        "cols": c["cols"],
+        "bytes": c["bytes"] + cost,
+    }
+
+
+def _render_filter(r, node: Filter):
+    schema = r.walk(node.child)
+    r.filters.extend(
+        sql_conjuncts(node.pred, lambda col: r.qual(schema, col))
+    )
+    return schema
+
+
+register(OperatorDef(
+    node_type=Filter,
+    schema=_filter_schema,
+    estimate=_filter_estimate,
+    protocol=lambda node: lambda prf, t: oblivious_filter(t, node.pred, prf),
+    render_rel=_render_filter,
+    sql_shape="relational",
+    resizer="internal",
+))
+
+
+def _project_schema(node: Project, children, catalog) -> PlanSchema:
+    c = children[0]
+    for col in node.cols:
+        c.require(col, node)
+    return PlanSchema(OrderedDict((n, c.kind(n)) for n in node.cols))
+
+
+def _project_estimate(node: Project, children, cm) -> Dict:
+    c = children[0]
+    # free: projection is local (no communication) and keeps the row count
+    return {
+        "n": c["n"],
+        "t": c["t"],
+        "cols": len(node.cols),
+        "bytes": c["bytes"],
+    }
+
+
+def _render_project_head(r, node: Project, schema):
+    return ", ".join(r.qual(schema, c) for c in node.cols), None
+
+
+register(OperatorDef(
+    node_type=Project,
+    schema=_project_schema,
+    estimate=_project_estimate,
+    protocol=lambda node: lambda prf, t: t.select_columns(node.cols),
+    render_head=_render_project_head,
+    sql_shape="head",
+))
+
+
+def _join_schema(node: Join, children, catalog) -> PlanSchema:
+    l, r = children
+    l.require(node.on[0], node)
+    r.require(node.on[1], node)
+    if node.theta is not None:
+        l.require(node.theta[0], node)
+        r.require(node.theta[2], node)
+    merged = OrderedDict(l.cols)
+    for name, kind in r.cols.items():
+        merged[_disambiguate(merged, name)] = kind
+    return PlanSchema(merged)
+
+
+def _join_estimate(node: Join, children, cm) -> Dict:
+    l, r = children
+    n = l["n"] * r["n"]
+    cost = n * (BYTES["eq"] + 2 * BYTES["and"])
+    if node.theta:
+        cost += n * (BYTES["lt"] + BYTES["and"])
+    return {
+        "n": n,
+        "t": max(l["t"] * r["t"] * cm.join_selectivity, 1),
+        "cols": l["cols"] + r["cols"],
+        "bytes": l["bytes"] + r["bytes"] + cost,
+    }
+
+
+def _render_join(r, node: Join):
+    left = r.walk(node.left)
+    right = r.walk(node.right)
+    right_alias, right_table = r.aliases[-1]
+    conds = [f"{r.qual(left, node.on[0])} = {r.qual(right, node.on[1])}"]
+    if node.theta is not None:
+        lcol, op, rcol = node.theta
+        conds.append(f"{r.qual(left, lcol)} {_OP_SYM[op]} {r.qual(right, rcol)}")
+    r.joins.append(f"JOIN {right_table} {right_alias} ON " + " AND ".join(conds))
+    return left.merge(right)
+
+
+register(OperatorDef(
+    node_type=Join,
+    schema=_join_schema,
+    estimate=_join_estimate,
+    protocol=lambda node: lambda prf, l, r: oblivious_join(
+        l, r, node.on, prf, theta=node.theta
+    ),
+    render_rel=_render_join,
+    sql_shape="relational",
+    resizer="internal",
+    balloons=True,
+))
+
+
+def _sortish_estimate(c: Dict, extra_key_cols: int = 0) -> (int, float):
+    """Shared sort-based cost core for GroupBy/Distinct/OrderBy."""
+    n = 1 << max(int(math.ceil(math.log2(max(c["n"], 2)))), 0)
+    cost = sort_bytes(n, c["cols"]) + n * (BYTES["eq"] + 4 * BYTES["and"])
+    cost += extra_key_cols * _stages(n) * n * (
+        BYTES["eq"] + BYTES["lt"] + 2 * BYTES["and"]
+    )
+    return n, cost
+
+
+def _groupby_schema(node: GroupByCount, children, catalog) -> PlanSchema:
+    c = children[0]
+    for k in node.keys:
+        c.require(k, node)
+    out = OrderedDict((k, c.kind(k)) for k in node.keys)
+    out[node.count_name] = "a"
+    return PlanSchema(out)
+
+
+def _groupby_estimate(node: GroupByCount, children, cm) -> Dict:
+    c = children[0]
+    n, cost = _sortish_estimate(c, extra_key_cols=len(node.keys) - 1)
+    cost += n * 2 * BYTES["bit2a"] + math.log2(max(n, 2)) * n * 8
+    return {
+        "n": n,
+        "t": min(c["t"], n),
+        "cols": len(node.keys) + 1,
+        "bytes": c["bytes"] + cost,
+    }
+
+
+def _render_groupby_head(r, node: GroupByCount, schema):
+    keys = [r.qual(schema, k) for k in node.keys]
+    head = ", ".join(keys) + f", COUNT(*) AS {node.count_name}"
+    return head, "GROUP BY " + ", ".join(keys)
+
+
+register(OperatorDef(
+    node_type=GroupByCount,
+    schema=_groupby_schema,
+    estimate=_groupby_estimate,
+    protocol=lambda node: lambda prf, t: oblivious_groupby_count(
+        t, node.keys, prf, node.count_name
+    ),
+    render_head=_render_groupby_head,
+    sql_shape="head",
+    resizer="internal",
+))
+
+
+def _orderby_schema(node: OrderBy, children, catalog) -> PlanSchema:
+    children[0].require(node.col, node)
+    return children[0]
+
+
+def _orderby_estimate(node: OrderBy, children, cm) -> Dict:
+    c = children[0]
+    n, cost = _sortish_estimate(c)
+    out_n = node.limit if node.limit else n
+    return {
+        "n": out_n,
+        "t": min(c["t"], out_n),
+        "cols": c["cols"] + 1,
+        "bytes": c["bytes"] + cost,
+    }
+
+
+def _render_order(r, node: OrderBy, head_node, schema) -> str:
+    count_name = getattr(head_node, "count_name", None)
+    if count_name is not None and node.col == count_name:
+        return "COUNT(*)"
+    return r.qual(schema, node.col)
+
+
+register(OperatorDef(
+    node_type=OrderBy,
+    schema=_orderby_schema,
+    estimate=_orderby_estimate,
+    protocol=lambda node: lambda prf, t: oblivious_orderby(
+        t, node.col, prf, descending=node.descending, limit=node.limit
+    ),
+    render_order=_render_order,
+    sql_shape="order",
+))
+
+
+def _distinct_schema(node: Distinct, children, catalog) -> PlanSchema:
+    children[0].require(node.col, node)
+    return children[0]
+
+
+def _distinct_estimate(node: Distinct, children, cm) -> Dict:
+    c = children[0]
+    n, cost = _sortish_estimate(c)
+    return {
+        "n": n,
+        "t": min(c["t"], n),
+        "cols": c["cols"] + 1,
+        "bytes": c["bytes"] + cost,
+    }
+
+
+register(OperatorDef(
+    node_type=Distinct,
+    schema=_distinct_schema,
+    estimate=_distinct_estimate,
+    protocol=lambda node: lambda prf, t: oblivious_distinct(t, node.col, prf),
+    render_head=lambda r, node, schema: (
+        f"DISTINCT {r.qual(schema, node.col)}", None
+    ),
+    sql_shape="head",
+))
+
+
+def _count_schema(node: CountValid, children, catalog) -> PlanSchema:
+    return PlanSchema(OrderedDict(cnt="a"))
+
+
+def _count_estimate(node, children, cm) -> Dict:
+    c = children[0]
+    return {"n": 1, "t": 1, "cols": 1, "bytes": c["bytes"] + c["n"] * BYTES["bit2a"]}
+
+
+register(OperatorDef(
+    node_type=CountValid,
+    schema=_count_schema,
+    estimate=_count_estimate,
+    protocol=lambda node: lambda prf, t: count_valid(t, prf),
+    render_head=lambda r, node, schema: ("COUNT(*)", None),
+    sql_shape="head",
+    singleton=True,
+))
+
+
+def _count_distinct_schema(node: CountDistinct, children, catalog) -> PlanSchema:
+    children[0].require(node.col, node)
+    return PlanSchema(OrderedDict(cnt="a"))
+
+
+def _count_distinct_estimate(node: CountDistinct, children, cm) -> Dict:
+    c = children[0]
+    cost = c["n"] * BYTES["bit2a"] + sort_bytes(c["n"], c["cols"]) + c["n"] * BYTES["eq"]
+    return {"n": 1, "t": 1, "cols": 1, "bytes": c["bytes"] + cost}
+
+
+register(OperatorDef(
+    node_type=CountDistinct,
+    schema=_count_distinct_schema,
+    estimate=_count_distinct_estimate,
+    protocol=lambda node: lambda prf, t: count_distinct(t, node.col, prf),
+    render_head=lambda r, node, schema: (
+        f"COUNT(DISTINCT {r.qual(schema, node.col)})", None
+    ),
+    sql_shape="head",
+    singleton=True,
+))
+
+
+def _sum_schema(node: Sum, children, catalog) -> PlanSchema:
+    children[0].require(node.col, node)
+    return PlanSchema(OrderedDict({node.name: "a"}))
+
+
+def _sum_estimate(node: Sum, children, cm) -> Dict:
+    c = children[0]
+    cost = c["n"] * (BYTES["b2a"] + BYTES["bit2a"] + BYTES["and"])
+    return {"n": 1, "t": 1, "cols": 1, "bytes": c["bytes"] + cost}
+
+
+register(OperatorDef(
+    node_type=Sum,
+    schema=_sum_schema,
+    estimate=_sum_estimate,
+    protocol=lambda node: lambda prf, t: sum_column(t, node.col, prf, node.name),
+    # the default name is a dialect keyword — render the alias only when set
+    render_head=lambda r, node, schema: (
+        f"SUM({r.qual(schema, node.col)})"
+        + (f" AS {node.name}" if node.name != "sum" else ""),
+        None,
+    ),
+    sql_shape="head",
+    singleton=True,
+))
+
+
+def _avg_schema(node: Avg, children, catalog) -> PlanSchema:
+    children[0].require(node.col, node)
+    return PlanSchema(
+        OrderedDict({f"{node.name}_sum": "a", f"{node.name}_cnt": "a"})
+    )
+
+
+def _avg_estimate(node: Avg, children, cm) -> Dict:
+    c = children[0]
+    cost = c["n"] * (BYTES["b2a"] + 2 * BYTES["bit2a"] + BYTES["and"])
+    return {"n": 1, "t": 1, "cols": 2, "bytes": c["bytes"] + cost}
+
+
+def _avg_post_reveal(node: Avg, rows):
+    import numpy as np
+
+    s, c = rows.get(f"{node.name}_sum"), rows.get(f"{node.name}_cnt")
+    if s is None or c is None:
+        return rows
+    out = dict(rows)
+    out[node.name] = s // np.maximum(c, 1)
+    return out
+
+
+register(OperatorDef(
+    node_type=Avg,
+    schema=_avg_schema,
+    estimate=_avg_estimate,
+    protocol=lambda node: lambda prf, t: avg_column(t, node.col, prf, node.name),
+    # the default name is a dialect keyword — render the alias only when set
+    render_head=lambda r, node, schema: (
+        f"AVG({r.qual(schema, node.col)})"
+        + (f" AS {node.name}" if node.name != "avg" else ""),
+        None,
+    ),
+    post_reveal=_avg_post_reveal,
+    sql_shape="head",
+    singleton=True,
+))
+
+
+def _resize_schema(node: Resize, children, catalog) -> PlanSchema:
+    return children[0]
+
+
+def _resize_estimate(node: Resize, children, cm) -> Dict:
+    c = children[0]
+    noise = node.cfg.noise
+    s = min(c["t"] + noise.mean(int(c["n"]), int(c["t"])), c["n"])
+    cost = resizer_bytes(c["n"], c["cols"])
+    return {"n": s, "t": c["t"], "cols": c["cols"], "bytes": c["bytes"] + cost}
+
+
+def _apply_resize(eng, node: Resize, children):
+    eng._resize_ctr += 1
+    rkey = jax.random.fold_in(eng.key, 1000 + eng._resize_ctr)
+    out, info = Resizer(node.cfg)(
+        children[0],
+        eng.prf.fold(900 + eng._resize_ctr),
+        rkey,
+        bucket_fn=eng.bucket_fn,
+    )
+    eng._last_resize_info = info
+    return out
+
+
+register(OperatorDef(
+    node_type=Resize,
+    schema=_resize_schema,
+    estimate=_resize_estimate,
+    engine_apply=_apply_resize,
+    sql_shape="none",
+    provides_resize_info=True,
+))

@@ -9,12 +9,16 @@ per-node :class:`ExecutionReport`.
 
 Two service-level layers sit on top (DESIGN.md §9):
 
-* **Compiled-plan cache** — keyed on ``(normalized logical plan fingerprint,
-  placement, strategy, bucketed base-table shapes)``. Differently-written but
-  equivalent SQL (aliases, whitespace, predicate spelling) normalizes to the
-  same fingerprint and reuses the same *physical plan object*, which keeps
-  the Engine's per-op jit cache keys stable too. Shapes are bucketed to the
-  next power of two so a growing base table does not thrash the cache.
+* **Compiled-plan cache (prepared statements)** — keyed on ``(literal-masked
+  plan-template fingerprint, placement, strategy, bucketed base-table
+  shapes)``. Differently-written but equivalent SQL (aliases, whitespace,
+  predicate spelling) normalizes to the same template, and queries that
+  differ *only in predicate constants* (``WHERE age > 40`` vs ``> 50``)
+  share one compiled template: the cached physical plan (with its Resizer
+  placement) is re-bound with the fresh literals at submit time. Identical
+  literals reuse the same *physical plan object*, which keeps the Engine's
+  per-op jit cache keys stable too. Shapes are bucketed to the next power of
+  two so a growing base table does not thrash the cache.
 * **PrivacyAccountant** — every submit is admission-checked against the CRT
   budget before execution and charged after (accountant.py). Budgets are
   global across tenants.
@@ -38,10 +42,13 @@ from ..engine.executor import Engine, ExecutionReport
 from ..ops.table import SecretTable
 from ..plan.nodes import PlanNode
 from ..sql.catalog import Catalog
+from ..plan.registry import lookup
 from ..sql.compile import (
+    bind_params,
     compile_logical,
     default_cost_model,
-    plan_fingerprint,
+    plan_params,
+    template_fingerprint,
 )
 from ..plan.policies import insert_resizers
 from ..core.resizer import ResizerConfig
@@ -111,6 +118,7 @@ class AnalyticsService:
             "queries": 0,
             "plan_cache_hits": 0,
             "plan_cache_misses": 0,
+            "plan_cache_rebinds": 0,  # template hits with fresh literals
             "refusals": 0,
             "per_tenant": {},
         }
@@ -127,23 +135,34 @@ class AnalyticsService:
         )
 
     def compile(self, sql: str) -> tuple[PlanNode, bool, float]:
-        """SQL -> physical plan via the cache; returns (plan, hit, seconds)."""
+        """SQL -> physical plan via the prepared-statement cache; returns
+        (plan, hit, seconds). The cache is keyed on the literal-masked
+        template fingerprint: a hit with different predicate constants
+        re-binds the cached physical plan (Resizer placement included)
+        instead of recompiling."""
         t0 = time.perf_counter()
         cm = default_cost_model(self.catalog, noise=self.noise)
         logical = compile_logical(
             sql, self.catalog, cost_model=cm, reorder_joins=self.reorder_joins
         )
+        params = plan_params(logical)
         cache_key = (
-            plan_fingerprint(logical),
+            template_fingerprint(logical),
             self.placement,
             strategy_key(self.noise, self.addition),
             self._shape_key(),
         )
-        plan = self._plan_cache.get(cache_key)
-        hit = plan is not None
+        entry = self._plan_cache.get(cache_key)
+        hit = entry is not None
         if hit:
             self._plan_cache.move_to_end(cache_key)
             self.stats["plan_cache_hits"] += 1
+            cached_params, cached_plan = entry
+            if params == cached_params:
+                plan = cached_plan  # identical query: shared plan object
+            else:
+                self.stats["plan_cache_rebinds"] += 1
+                plan = bind_params(cached_plan, params)
         else:
             self.stats["plan_cache_misses"] += 1
             if self.placement == "none":
@@ -154,7 +173,7 @@ class AnalyticsService:
                     logical, lambda _n: cfg, placement=self.placement,
                     cost_model=cm,
                 )
-            self._plan_cache[cache_key] = plan
+            self._plan_cache[cache_key] = (params, plan)
             while len(self._plan_cache) > self._plan_cache_max:
                 self._plan_cache.popitem(last=False)
         return plan, hit, time.perf_counter() - t0
@@ -179,6 +198,10 @@ class AnalyticsService:
         self.stats["queries"] += 1
         self.stats["per_tenant"][tenant] = self.stats["per_tenant"].get(tenant, 0) + 1
         rows = out.reveal_true_rows() if self.reveal_results else None
+        post = lookup(type(admitted)).post_reveal
+        if rows is not None and post is not None:
+            # operator-defined client-side derivation (e.g. AVG = sum // cnt)
+            rows = post(admitted, rows)
         return QueryResult(
             tenant=tenant,
             sql=sql,

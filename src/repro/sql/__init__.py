@@ -4,12 +4,17 @@
 :class:`~repro.plan.nodes.PlanNode` tree ready for the Engine — see
 DESIGN.md §9 and ``python -m repro.sql --help``.
 """
+from ..plan.registry import SchemaError, infer_schema  # noqa: F401
 from .catalog import Catalog, HEALTHLNK_CATALOG  # noqa: F401
 from .compile import (  # noqa: F401
+    bind_params,
     compile_logical,
     compile_query,
     default_cost_model,
     plan_fingerprint,
+    plan_params,
+    plan_template,
+    template_fingerprint,
 )
 from .lexer import SqlError, tokenize  # noqa: F401
 from .parser import parse  # noqa: F401
@@ -20,13 +25,19 @@ compile = compile_query  # the ISSUE-facing name: sql.compile(q)
 __all__ = [
     "Catalog",
     "HEALTHLNK_CATALOG",
+    "SchemaError",
     "SqlError",
+    "bind_params",
     "compile",
     "compile_query",
     "compile_logical",
     "default_cost_model",
+    "infer_schema",
     "parse",
     "plan_fingerprint",
+    "plan_params",
+    "plan_template",
     "render_sql",
+    "template_fingerprint",
     "tokenize",
 ]

@@ -5,10 +5,14 @@ Pipeline::
     parse(sql)                    # AST (parser.py)
       -> resolve                  # aliases, columns, ambiguity checks
       -> classify conditions      # per-table (pushdown) / equi-join / theta
+                                  # / OR-trees (pushdown or post-join Filter)
       -> join order               # explicit JOINs honored as written;
                                   # comma-FROM pools reordered cost-based
                                   # (left-deep enumeration over plan/cost.py)
-      -> terminal ops             # GROUP BY / DISTINCT / COUNT / ORDER BY
+      -> terminal ops             # GROUP BY / DISTINCT / COUNT / SUM / AVG /
+                                  # ORDER BY / SELECT-list projection
+      -> schema propagation       # registry infer_schema: typed column-set
+                                  # check before any MPC work
       -> insert_resizers(...)     # Resizer placement policy (plan/policies.py)
 
 Schema tracking mirrors :func:`repro.ops.join.oblivious_join`'s column
@@ -16,9 +20,16 @@ disambiguation exactly (right-side collisions get ``r<k>.`` prefixes), so a
 qualified reference like ``d.pid`` resolves to the physical column name the
 executed join output will actually carry.
 
-Projection is not an operator: the engine's tables carry every column through
-(an oblivious projection is free/local), so a plain ``SELECT cols`` compiles
-to its FROM/WHERE subtree and the service projects at reveal time.
+A ``SELECT col, ...`` list (no aggregate, no DISTINCT) compiles to a
+:class:`~repro.plan.nodes.Project` node — free (an oblivious projection is
+local) but it narrows every downstream payload and the final reveal.
+
+Prepared statements: :func:`plan_template` masks predicate literals with
+``?`` placeholders, :func:`plan_params` extracts them, and
+:func:`bind_params` re-binds a (possibly Resizer-placed) cached plan with
+fresh constants — the service keys its plan cache on the template
+fingerprint, so ``WHERE age > 40`` and ``WHERE age > 50`` share one
+compiled template.
 """
 from __future__ import annotations
 
@@ -27,12 +38,13 @@ import itertools
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from ..core.resizer import ResizerConfig
-from ..ops.filter import Predicate
+from ..ops.filter import And, Or, Pred, Predicate, normalize_pred
 # the executed join's own collision-renaming IS the compiler's schema rule:
 # importing it makes drift between compiled names and runtime names impossible
 from ..ops.join import _disambiguate
 from ..plan.cost import CostModel
 from ..plan.nodes import (
+    Avg,
     CountDistinct,
     CountValid,
     Distinct,
@@ -41,17 +53,25 @@ from ..plan.nodes import (
     Join,
     OrderBy,
     PlanNode,
+    Project,
     Scan,
+    Sum,
 )
 from ..plan.policies import insert_resizers
+from ..plan.registry import SchemaError, infer_schema, lookup
 from .catalog import Catalog, HEALTHLNK_CATALOG
 from .lexer import SqlError
 from .parser import (
+    AndExpr,
+    AvgItem,
+    BoolExpr,
     ColumnRef,
     Condition,
     CountDistinctItem,
     CountStar,
+    OrExpr,
     SelectStmt,
+    SumItem,
     TableRef,
     parse,
 )
@@ -61,6 +81,10 @@ __all__ = [
     "compile_logical",
     "default_cost_model",
     "plan_fingerprint",
+    "plan_template",
+    "plan_params",
+    "bind_params",
+    "template_fingerprint",
     "Schema",
 ]
 
@@ -159,7 +183,7 @@ class _Resolver:
 
 
 # -----------------------------------------------------------------------------
-# Condition classification + join construction
+# Condition classification + predicate building
 # -----------------------------------------------------------------------------
 
 @dataclasses.dataclass
@@ -187,25 +211,64 @@ def _resolve_conditions(conds: Sequence[Condition], res: _Resolver) -> List[_Con
     return out
 
 
-def _single_table_predicate(c: _Cond, res: _Resolver) -> Predicate:
-    cond = c.cond
-    if c.right_owner is None:
+def _bool_conjuncts(expr: Optional[BoolExpr]) -> List[BoolExpr]:
+    """Top-level conjunct list of a WHERE tree (the parser flattens ANDs)."""
+    if expr is None:
+        return []
+    if isinstance(expr, AndExpr):
+        return list(expr.terms)
+    return [expr]
+
+
+def _expr_columns(expr: BoolExpr) -> List[ColumnRef]:
+    if isinstance(expr, Condition):
+        cols = [expr.left]
+        if isinstance(expr.right, ColumnRef):
+            cols.append(expr.right)
+        return cols
+    out: List[ColumnRef] = []
+    for t in expr.terms:
+        out.extend(_expr_columns(t))
+    return out
+
+
+def _expr_pos(expr: BoolExpr) -> int:
+    if isinstance(expr, Condition):
+        return expr.pos
+    return min(_expr_pos(t) for t in expr.terms)
+
+
+def _pred_from_cond(cond: Condition, to_phys) -> Predicate:
+    """Condition AST -> executable Predicate; ``to_phys(ColumnRef) -> str``
+    supplies the physical column name for the target scope."""
+    if not isinstance(cond.right, ColumnRef):
         op, val = cond.op, int(cond.right)
         if op == "ge":  # integer domain: x >= v  <=>  x > v-1
             op, val = "gt", val - 1
-        return Predicate(cond.left.name, op, val)
-    # same-table column pair: normalize gt/ge by swapping sides
-    l, r, op = cond.left.name, cond.right.name, cond.op
-    if op in ("gt", "ge"):
+        return Predicate(to_phys(cond.left), op, val)
+    l, r, op = cond.left, cond.right, cond.op
+    if op in ("gt", "ge"):  # normalize to lt/le by swapping sides
         l, r, op = r, l, {"gt": "lt", "ge": "le"}[op]
-    return Predicate(l, op, f"col:{r}")
+    return Predicate(to_phys(l), op, f"col:{to_phys(r)}")
 
 
-def _leaf(alias: str, preds: List[Predicate], res: _Resolver) -> _SubPlan:
+def _pred_tree(expr: BoolExpr, to_phys) -> Pred:
+    if isinstance(expr, Condition):
+        return _pred_from_cond(expr, to_phys)
+    terms = tuple(_pred_tree(t, to_phys) for t in expr.terms)
+    return normalize_pred(And(terms) if isinstance(expr, AndExpr) else Or(terms))
+
+
+def _single_table_predicate(c: _Cond, res: _Resolver) -> Predicate:
+    # single-table predicates use bare source column names (leaf scope)
+    return _pred_from_cond(c.cond, lambda col: col.name)
+
+
+def _leaf(alias: str, preds: List[Pred], res: _Resolver) -> _SubPlan:
     table = res.alias_to_table[alias]
     node: PlanNode = Scan(table)
     if preds:
-        node = Filter(node, preds)
+        node = Filter(node, tuple(preds))
     return _SubPlan(node, Schema.for_table(alias, res.catalog.columns(table)))
 
 
@@ -259,19 +322,9 @@ def _attach_join(
     merged = tree.schema.merge(leaf.schema)
     node: PlanNode = Join(tree.node, leaf.node, on, theta=theta)
     if leftovers:
-        preds = []
-        for c in leftovers:
-            l, r, op = c.cond.left, c.cond.right, c.cond.op
-            if op in ("gt", "ge"):
-                l, r, op = r, l, {"gt": "lt", "ge": "le"}[op]
-            preds.append(
-                Predicate(
-                    merged.physical(res.owner(l), l.name),
-                    op,
-                    "col:" + merged.physical(res.owner(r), r.name),
-                )
-            )
-        node = Filter(node, preds)
+        to_phys = lambda col: merged.physical(res.owner(col), col.name)
+        preds = [_pred_from_cond(c.cond, to_phys) for c in leftovers]
+        node = Filter(node, tuple(preds))
     return _SubPlan(node, merged)
 
 
@@ -356,45 +409,56 @@ def _apply_terminals(
     def phys(col: ColumnRef) -> str:
         return sub.schema.physical(res.owner(col), col.name)
 
+    aggs = [i for i in stmt.items
+            if isinstance(i, (CountStar, CountDistinctItem, SumItem, AvgItem))]
+    plain = [i for i in stmt.items if isinstance(i, ColumnRef)]
+
     count_name: Optional[str] = None
-    if stmt.group_by is not None:
-        key = phys(stmt.group_by)
-        counts = [i for i in stmt.items if isinstance(i, CountStar)]
-        plain = [i for i in stmt.items if isinstance(i, ColumnRef)]
-        if len(counts) != 1 or any(
-            isinstance(i, CountDistinctItem) for i in stmt.items
-        ):
+    if stmt.group_by:
+        keys = tuple(phys(k) for k in stmt.group_by)
+        counts = [i for i in aggs if isinstance(i, CountStar)]
+        if len(counts) != 1 or len(aggs) != 1:
             raise SqlError(
                 "GROUP BY queries must select exactly one COUNT(*) "
-                "(plus the grouping column)", sql,
+                "(plus the grouping columns)", sql,
             )
-        if any(phys(c) != key for c in plain):
+        if any(phys(c) not in keys for c in plain):
             raise SqlError(
-                "GROUP BY queries may only select the grouping column and "
+                "GROUP BY queries may only select the grouping columns and "
                 "COUNT(*)", sql,
             )
         count_name = counts[0].alias or "cnt"
-        node = GroupByCount(node, key, count_name=count_name)
-    elif stmt.items and all(
-        isinstance(i, (CountStar, CountDistinctItem)) for i in stmt.items
-    ):
+        node = GroupByCount(node, keys, count_name=count_name)
+    elif aggs and not plain:
         if len(stmt.items) != 1:
             raise SqlError("only a single aggregate per query is supported", sql)
         item = stmt.items[0]
         if isinstance(item, CountStar):
             node = CountValid(node)
-        else:
+        elif isinstance(item, CountDistinctItem):
             node = CountDistinct(node, phys(item.col))
+        elif isinstance(item, SumItem):
+            node = Sum(node, phys(item.col), name=item.alias or "sum")
+        else:
+            node = Avg(node, phys(item.col), name=item.alias or "avg")
     elif stmt.distinct:
         if len(stmt.items) != 1 or not isinstance(stmt.items[0], ColumnRef):
             raise SqlError("DISTINCT supports exactly one selected column", sql)
         node = Distinct(node, phys(stmt.items[0]))
-    elif any(isinstance(i, (CountStar, CountDistinctItem)) for i in stmt.items):
+    elif aggs:
         raise SqlError("aggregates cannot be mixed with plain columns "
                        "without GROUP BY", sql)
+    elif plain:
+        # plain SELECT list -> free Project (narrows payload + reveal)
+        cols = []
+        for c in plain:
+            p = phys(c)
+            if p not in cols:
+                cols.append(p)
+        node = Project(node, tuple(cols))
 
     if stmt.order_by is not None:
-        if isinstance(node, (CountValid, CountDistinct)):
+        if lookup(type(node)).singleton:
             raise SqlError(
                 "ORDER BY is meaningless over a bare aggregate (single row)", sql
             )
@@ -410,11 +474,17 @@ def _apply_terminals(
             order_col = count_name
         else:
             order_col = phys(stmt.order_by)
-            if count_name is not None and order_col != node.key:
-                # the GroupByCount output carries only the key and the count
+            if count_name is not None and order_col not in node.keys:
+                # the GroupByCount output carries only the keys and the count
                 raise SqlError(
                     f"ORDER BY {stmt.order_by} is not in the GROUP BY output "
-                    f"(order by the grouping column or COUNT(*))",
+                    f"(order by a grouping column or COUNT(*))",
+                    sql,
+                    stmt.order_by.pos,
+                )
+            if isinstance(node, Project) and order_col not in node.cols:
+                raise SqlError(
+                    f"ORDER BY {stmt.order_by} must appear in the SELECT list",
                     sql,
                     stmt.order_by.pos,
                 )
@@ -444,22 +514,40 @@ def compile_logical(
     reorder_joins: bool = True,
 ) -> PlanNode:
     """SQL -> optimized logical plan (no Resizers): parse, resolve, push
-    predicates below joins, order joins, attach terminals."""
+    predicates below joins, order joins, attach terminals, schema-check."""
     stmt = parse(sql)
     res = _Resolver(stmt, catalog, sql)
+    where_conjuncts = _bool_conjuncts(stmt.where)
+    plain_conds = [c for c in where_conjuncts if isinstance(c, Condition)]
+    or_trees = [c for c in where_conjuncts if not isinstance(c, Condition)]
     conds = _resolve_conditions(
-        list(stmt.where) + [c for j in stmt.joins for c in j.conds], res
+        plain_conds + [c for j in stmt.joins for c in j.conds], res
     )
     # predicate pushdown: single-table conditions land on their base scans,
-    # in SQL appearance order
-    per_alias: Dict[str, List[Predicate]] = {a: [] for a in res.from_order}
+    # in SQL appearance order; single-table OR-trees push down as predicate
+    # trees, multi-table OR-trees become post-join Filters
+    per_alias: Dict[str, List[Tuple[int, Pred]]] = {a: [] for a in res.from_order}
     cross: List[_Cond] = []
     for c in sorted(conds, key=lambda c: c.cond.pos):
         if c.cross:
             cross.append(c)
         else:
-            per_alias[c.left_owner].append(_single_table_predicate(c, res))
-    leaves = {a: _leaf(a, per_alias[a], res) for a in res.from_order}
+            per_alias[c.left_owner].append(
+                (c.cond.pos, _single_table_predicate(c, res))
+            )
+    post_join: List[Tuple[int, BoolExpr]] = []
+    for expr in or_trees:
+        owners = {res.owner(col) for col in _expr_columns(expr)}
+        pos = _expr_pos(expr)
+        if len(owners) == 1:
+            tree = _pred_tree(expr, lambda col: col.name)
+            per_alias[owners.pop()].append((pos, tree))
+        else:
+            post_join.append((pos, expr))
+    leaves = {
+        a: _leaf(a, [p for _, p in sorted(per_alias[a], key=lambda t: t[0])], res)
+        for a in res.from_order
+    }
 
     if stmt.joins:
         order = [stmt.tables[0].alias] + [j.table.alias for j in stmt.joins]
@@ -472,7 +560,21 @@ def compile_logical(
         else:
             sub = _build_in_order(pool, leaves, cross, res)
 
-    return _apply_terminals(stmt, sub, res, sql)
+    if post_join:
+        to_phys = lambda col: sub.schema.physical(res.owner(col), col.name)
+        trees = tuple(
+            _pred_tree(e, to_phys) for _, e in sorted(post_join, key=lambda t: t[0])
+        )
+        sub = _SubPlan(Filter(sub.node, trees), sub.schema)
+
+    plan = _apply_terminals(stmt, sub, res, sql)
+    try:
+        # registry schema propagation: the typed column set must resolve all
+        # the way to the root before the plan is allowed near the engine
+        infer_schema(plan, catalog)
+    except SchemaError as e:  # pragma: no cover — resolver should catch first
+        raise SqlError(str(e), sql) from e
+    return plan
 
 
 def compile_query(
@@ -514,3 +616,89 @@ def plan_fingerprint(plan: PlanNode) -> str:
     signatures): the pretty-printed tree fully determines operators,
     predicates, join conditions, and resizer configs."""
     return plan.pretty()
+
+
+# -----------------------------------------------------------------------------
+# Prepared statements: literal masking + re-binding
+# -----------------------------------------------------------------------------
+
+def _map_pred_literals(pred: Pred, fn) -> Pred:
+    """Rebuild a predicate tree, passing each literal int through ``fn``."""
+    if isinstance(pred, Predicate):
+        if isinstance(pred.value, str) and pred.value.startswith("col:"):
+            return pred
+        return dataclasses.replace(pred, value=fn(pred.value))
+    terms = tuple(_map_pred_literals(t, fn) for t in pred.terms)
+    return type(pred)(terms)
+
+
+def _map_plan_literals(plan: PlanNode, fn) -> PlanNode:
+    """Rebuild a plan, passing every predicate literal through ``fn`` in a
+    deterministic (pre-order, DFS) traversal. Resize wrappers carry no
+    literals, so a logical plan and its Resizer-placed twin visit literals
+    in the same order."""
+    new_children = [_map_plan_literals(c, fn) for c in plan.children()]
+    node = plan.replace_children(new_children)
+    pred = getattr(node, "pred", None)
+    if pred is not None:
+        node.pred = _map_pred_literals(pred, fn)
+    return node
+
+
+def plan_params(plan: PlanNode) -> Tuple:
+    """Predicate literals in traversal order (the prepared-statement
+    parameter vector). Read-only: visits the same (children-first, then own
+    predicates, leaves in DFS order) positions :func:`_map_plan_literals`
+    rebuilds, without copying the tree — this runs on every service submit."""
+    params: List = []
+
+    def collect_pred(pred: Pred) -> None:
+        if isinstance(pred, Predicate):
+            if not (isinstance(pred.value, str) and pred.value.startswith("col:")):
+                params.append(pred.value)
+            return
+        for t in pred.terms:
+            collect_pred(t)
+
+    def walk(node: PlanNode) -> None:
+        for c in node.children():
+            walk(c)
+        pred = getattr(node, "pred", None)
+        if pred is not None:
+            collect_pred(pred)
+
+    walk(plan)
+    return tuple(params)
+
+
+def plan_template(plan: PlanNode) -> PlanNode:
+    """The plan with every predicate literal replaced by ``?`` — the shared
+    prepared-statement template (not executable; bind first)."""
+    return _map_plan_literals(plan, lambda v: "?")
+
+
+def template_fingerprint(plan: PlanNode) -> str:
+    """Fingerprint of the literal-masked plan: equal for any two plans that
+    differ only in predicate constants."""
+    return plan_fingerprint(plan_template(plan))
+
+
+def bind_params(plan: PlanNode, params: Sequence) -> PlanNode:
+    """Re-bind a cached (template-compatible) plan with fresh literals, in
+    the same traversal order :func:`plan_params` uses. The input plan is not
+    mutated (it may be cache-shared)."""
+    it = iter(params)
+
+    def put(_v):
+        try:
+            return next(it)
+        except StopIteration:
+            raise ValueError("bind_params: fewer params than plan literals")
+
+    out = _map_plan_literals(plan, put)
+    leftover = sum(1 for _ in it)
+    if leftover:
+        raise ValueError(
+            f"bind_params: {leftover} params left over — plan/template mismatch"
+        )
+    return out

@@ -17,11 +17,14 @@ KEYWORDS = {
     "select",
     "distinct",
     "count",
+    "sum",
+    "avg",
     "from",
     "join",
     "on",
     "where",
     "and",
+    "or",
     "group",
     "order",
     "by",

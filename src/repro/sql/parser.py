@@ -3,15 +3,21 @@
 Grammar (keywords case-insensitive, integer literals only):
 
     query      := SELECT select_list FROM from_clause
-                  [WHERE cond (AND cond)*]
-                  [GROUP BY column] [ORDER BY order_key [ASC|DESC]]
+                  [WHERE bool_expr]
+                  [GROUP BY column (',' column)*]
+                  [ORDER BY order_key [ASC|DESC]]
                   [LIMIT int] [';']
     select_list:= '*' | DISTINCT column | item (',' item)*
     item       := column | COUNT '(' '*' ')' [AS ident]
                 | COUNT '(' DISTINCT column ')' [AS ident]
+                | SUM '(' column ')' [AS ident]
+                | AVG '(' column ')' [AS ident]
     from_clause:= table_ref (',' table_ref)*                -- reorderable pool
                 | table_ref (JOIN table_ref ON cond (AND cond)*)*  -- fixed order
     table_ref  := ident [AS] [ident]
+    bool_expr  := bool_and (OR bool_and)*         -- AND binds tighter than OR
+    bool_and   := bool_prim (AND bool_prim)*
+    bool_prim  := '(' bool_expr ')' | cond
     cond       := operand op operand      op := = | < | <= | > | >= | <>
     operand    := column | int
     column     := ident | ident '.' ident
@@ -19,7 +25,10 @@ Grammar (keywords case-insensitive, integer literals only):
 
 The two FROM styles may not be mixed: comma-FROM hands the optimizer a
 reorderable table pool, while explicit ``JOIN ... ON`` chains are honored as
-written (so hand-tuned plans stay byte-stable through the compiler).
+written (so hand-tuned plans stay byte-stable through the compiler). JOIN ON
+conditions stay pure conjunctions (the join operator needs an extractable
+equality); disjunctions belong in WHERE, where the compiler turns them into
+predicate trees.
 """
 from __future__ import annotations
 
@@ -31,10 +40,15 @@ from .lexer import SqlError, Token, tokenize
 __all__ = [
     "ColumnRef",
     "Condition",
+    "AndExpr",
+    "OrExpr",
+    "BoolExpr",
     "TableRef",
     "JoinClause",
     "CountStar",
     "CountDistinctItem",
+    "SumItem",
+    "AvgItem",
     "SelectStmt",
     "parse",
 ]
@@ -70,6 +84,23 @@ class Condition:
 
 
 @dataclasses.dataclass(frozen=True)
+class AndExpr:
+    """Conjunction of boolean subtrees (flattened)."""
+
+    terms: Tuple["BoolExpr", ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class OrExpr:
+    """Disjunction of boolean subtrees (flattened)."""
+
+    terms: Tuple["BoolExpr", ...]
+
+
+BoolExpr = Union[Condition, AndExpr, OrExpr]
+
+
+@dataclasses.dataclass(frozen=True)
 class TableRef:
     table: str
     alias: str
@@ -93,7 +124,19 @@ class CountDistinctItem:
     alias: Optional[str] = None
 
 
-SelectItem = Union[ColumnRef, CountStar, CountDistinctItem]
+@dataclasses.dataclass(frozen=True)
+class SumItem:
+    col: ColumnRef
+    alias: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class AvgItem:
+    col: ColumnRef
+    alias: Optional[str] = None
+
+
+SelectItem = Union[ColumnRef, CountStar, CountDistinctItem, SumItem, AvgItem]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,8 +145,8 @@ class SelectStmt:
     distinct: bool
     tables: Tuple[TableRef, ...]  # comma-FROM pool (>= 1)
     joins: Tuple[JoinClause, ...]  # explicit JOIN chain (fixed order)
-    where: Tuple[Condition, ...]
-    group_by: Optional[ColumnRef]
+    where: Optional[BoolExpr]  # boolean tree (AND/OR), None when absent
+    group_by: Tuple[ColumnRef, ...]  # () when absent; >1 = composite key
     order_by: Optional[Union[ColumnRef, CountStar]]
     order_desc: bool
     limit: Optional[int]
@@ -111,6 +154,7 @@ class SelectStmt:
 
 _OPS = {"EQ": "eq", "LT": "lt", "LE": "le", "GT": "gt", "GE": "ge", "NE": "ne"}
 _FLIP = {"eq": "eq", "ne": "ne", "lt": "gt", "le": "ge", "gt": "lt", "ge": "le"}
+_AGG_ITEMS = {"COUNT": None, "SUM": SumItem, "AVG": AvgItem}
 
 
 class _Parser:
@@ -151,13 +195,16 @@ class _Parser:
         items = self._select_list()
         self.expect("FROM", "FROM")
         tables, joins = self._from_clause()
-        where: Tuple[Condition, ...] = ()
+        where: Optional[BoolExpr] = None
         if self.accept("WHERE"):
-            where = self._conjunction()
-        group_by = None
+            where = self._bool_expr()
+        group_by: Tuple[ColumnRef, ...] = ()
         if self.accept("GROUP"):
             self.expect("BY", "BY after GROUP")
-            group_by = self._column()
+            keys = [self._column()]
+            while self.accept("COMMA"):
+                keys.append(self._column())
+            group_by = tuple(keys)
         order_by, order_desc = None, False
         if self.accept("ORDER"):
             self.expect("BY", "BY after ORDER")
@@ -210,6 +257,12 @@ class _Parser:
                 self.expect("RPAREN", "')'")
                 return CountDistinctItem(col, alias=self._opt_alias())
             raise self.error("COUNT supports only COUNT(*) and COUNT(DISTINCT col)")
+        if self.cur.kind in ("SUM", "AVG"):
+            cls = _AGG_ITEMS[self.advance().kind]
+            self.expect("LPAREN", "'(' after aggregate")
+            col = self._column()
+            self.expect("RPAREN", "')'")
+            return cls(col, alias=self._opt_alias())
         return self._column()
 
     def _opt_alias(self) -> Optional[str]:
@@ -256,10 +309,36 @@ class _Parser:
         return tuple(tables), tuple(joins)
 
     def _conjunction(self) -> Tuple[Condition, ...]:
+        """AND-only condition list (JOIN ... ON; see module docstring)."""
         conds = [self._condition()]
         while self.accept("AND"):
+            if self.cur.kind == "LPAREN":
+                raise self.error(
+                    "parenthesized/OR conditions are not allowed in JOIN ON "
+                    "(move them to WHERE)"
+                )
             conds.append(self._condition())
         return tuple(conds)
+
+    # -- boolean expressions (WHERE) ------------------------------------------
+    def _bool_expr(self) -> BoolExpr:
+        terms = [self._bool_and()]
+        while self.accept("OR"):
+            terms.append(self._bool_and())
+        return _flatten(OrExpr, terms) if len(terms) > 1 else terms[0]
+
+    def _bool_and(self) -> BoolExpr:
+        terms = [self._bool_prim()]
+        while self.accept("AND"):
+            terms.append(self._bool_prim())
+        return _flatten(AndExpr, terms) if len(terms) > 1 else terms[0]
+
+    def _bool_prim(self) -> BoolExpr:
+        if self.accept("LPAREN"):
+            e = self._bool_expr()
+            self.expect("RPAREN", "')'")
+            return e
+        return self._condition()
 
     def _condition(self) -> Condition:
         pos = self.cur.pos
@@ -282,6 +361,16 @@ class _Parser:
         if self.cur.kind == "INT":
             return int(self.advance().value)
         return self._column()
+
+
+def _flatten(cls, terms: List[BoolExpr]) -> BoolExpr:
+    flat: List[BoolExpr] = []
+    for t in terms:
+        if isinstance(t, cls):
+            flat.extend(t.terms)
+        else:
+            flat.append(t)
+    return cls(tuple(flat))
 
 
 def parse(sql: str) -> SelectStmt:

@@ -1,11 +1,19 @@
 """Plan -> SQL rendering (the inverse of compile, for compiler-shaped trees).
 
 Supports the plan shapes the compiler itself emits: left-deep ``Join`` trees
-over ``Filter(Scan)`` / ``Scan`` leaves, with an optional terminal chain of
-GroupByCount / Distinct / CountValid / CountDistinct and OrderBy. Joins are
-rendered as explicit ``JOIN ... ON`` (which the compiler honors in written
-order), so ``compile_logical(render_sql(plan)) == plan`` for those shapes —
-the hypothesis round-trip property in tests/test_sql_properties.py.
+over ``Filter(Scan)`` / ``Scan`` leaves (with predicate trees rendered back
+to AND/OR/parenthesized conditions), an optional terminal head node
+(GroupByCount / Distinct / CountValid / CountDistinct / Sum / Avg / Project)
+and an OrderBy, so ``compile_logical(render_sql(plan)) == plan`` for those
+shapes — the hypothesis round-trip property in tests/test_sql_properties.py.
+
+The renderer is a *driver* over the operator registry
+(:mod:`repro.plan.registry`): it never names node classes. Each node's
+``OperatorDef`` declares where it may appear (``sql_shape``) and supplies the
+hook that renders it (``render_rel`` for the FROM/WHERE subtree,
+``render_head`` for the SELECT head, ``render_order`` for ORDER BY keys).
+Adding an operator means registering those hooks — this module does not
+change.
 
 ``Resize`` nodes are not renderable (SQL has no resizer syntax; placement is
 a compilation policy) — render the logical plan before placement.
@@ -14,143 +22,72 @@ from __future__ import annotations
 
 from typing import List, Tuple
 
-from ..ops.filter import Predicate
-from ..plan.nodes import (
-    CountDistinct,
-    CountValid,
-    Distinct,
-    Filter,
-    GroupByCount,
-    Join,
-    OrderBy,
-    PlanNode,
-    Resize,
-    Scan,
-)
+from ..plan.nodes import PlanNode
+from ..plan.registry import lookup
 from .catalog import Catalog, HEALTHLNK_CATALOG
 from .compile import Schema
 
 __all__ = ["render_sql"]
 
-_OP_SYM = {"eq": "=", "lt": "<", "le": "<=", "gt": ">"}
-
 
 class _Renderer:
+    """Rendering state handed to the registry hooks: alias bookkeeping, the
+    WHERE conjunct list, and JOIN clauses, plus Schema helpers."""
+
     def __init__(self, catalog: Catalog):
         self.catalog = catalog
         self.aliases: List[Tuple[str, str]] = []  # (alias, table)
         self.filters: List[str] = []  # WHERE conjuncts in DFS order
         self.joins: List[str] = []  # "JOIN <table> <alias> ON ..." clauses
 
-    # -- join tree ------------------------------------------------------------
     def walk(self, node: PlanNode) -> Schema:
-        if isinstance(node, Scan):
-            alias = f"t{len(self.aliases)}"
-            self.aliases.append((alias, node.table))
-            if node.table not in self.catalog.tables:
-                raise ValueError(f"table {node.table!r} not in catalog")
-            return Schema.for_table(alias, self.catalog.columns(node.table))
-        if isinstance(node, Filter):
-            child = node.child
-            if isinstance(child, Scan):
-                schema = self.walk(child)
-                alias = self.aliases[-1][0]
-                for p in node.predicates:
-                    self.filters.append(self._leaf_pred(alias, p))
-                return schema
-            # post-join filter: qualify through the merged schema
-            schema = self.walk(child)
-            for p in node.predicates:
-                self.filters.append(self._merged_pred(schema, p))
-            return schema
-        if isinstance(node, Join):
-            left = self.walk(node.left)
-            right = self.walk(node.right)
-            right_alias = self.aliases[-1][0]
-            right_table = self.aliases[-1][1]
-            conds = [
-                f"{self._qual(left, node.on[0])} = {self._qual(right, node.on[1])}"
-            ]
-            if node.theta is not None:
-                lcol, op, rcol = node.theta
-                conds.append(
-                    f"{self._qual(left, lcol)} {_OP_SYM[op]} {self._qual(right, rcol)}"
+        d = lookup(type(node))
+        if d.render_rel is None:
+            if d.sql_shape == "none":
+                raise ValueError(
+                    f"{node.label} nodes have no SQL form — render the "
+                    "logical plan (before insert_resizers)"
                 )
-            self.joins.append(
-                f"JOIN {right_table} {right_alias} ON " + " AND ".join(conds)
-            )
-            return left.merge(right)
-        if isinstance(node, Resize):
-            raise ValueError(
-                "Resize nodes have no SQL form — render the logical plan "
-                "(before insert_resizers)"
-            )
-        raise ValueError(f"cannot render node {node.describe()} inside FROM")
+            raise ValueError(f"cannot render node {node.describe()} inside FROM")
+        return d.render_rel(self, node)
 
-    def _qual(self, schema: Schema, phys: str) -> str:
+    def schema_for_table(self, alias: str, columns) -> Schema:
+        return Schema.for_table(alias, columns)
+
+    def qual(self, schema: Schema, phys: str) -> str:
         alias, col = schema.entries[phys]
         return f"{alias}.{col}"
-
-    def _leaf_pred(self, alias: str, p: Predicate) -> str:
-        if isinstance(p.value, str) and p.value.startswith("col:"):
-            return f"{alias}.{p.column} {_OP_SYM[p.op]} {alias}.{p.value[4:]}"
-        return f"{alias}.{p.column} {_OP_SYM[p.op]} {int(p.value)}"
-
-    def _merged_pred(self, schema: Schema, p: Predicate) -> str:
-        if isinstance(p.value, str) and p.value.startswith("col:"):
-            return (
-                f"{self._qual(schema, p.column)} {_OP_SYM[p.op]} "
-                f"{self._qual(schema, p.value[4:])}"
-            )
-        return f"{self._qual(schema, p.column)} {_OP_SYM[p.op]} {int(p.value)}"
 
 
 def render_sql(plan: PlanNode, catalog: Catalog = HEALTHLNK_CATALOG) -> str:
     """Render a compiler-shaped plan back to SQL text (see module docstring)."""
-    # Peel the terminal chain (outermost first).
-    order_by: OrderBy | None = None
-    if isinstance(plan, OrderBy):
+    # Peel the terminal chain (outermost first): [OrderBy] [head] relational*
+    order_by = None
+    if lookup(type(plan)).sql_shape == "order":
         order_by, plan = plan, plan.child
 
-    head = "*"
-    group_by = None
-    if isinstance(plan, GroupByCount):
-        group_by = plan
-        plan = plan.child
-    elif isinstance(plan, Distinct):
+    head_node = None
+    head_def = lookup(type(plan))
+    if head_def.sql_shape == "head":
         head_node, plan = plan, plan.child
-    elif isinstance(plan, CountValid):
-        head_node, plan = plan, plan.child
-    elif isinstance(plan, CountDistinct):
-        head_node, plan = plan, plan.child
-    else:
-        head_node = None
 
     r = _Renderer(catalog)
     schema = r.walk(plan)
 
-    if group_by is not None:
-        key = r._qual(schema, group_by.key)
-        head = f"{key}, COUNT(*) AS {group_by.count_name}"
-    elif isinstance(head_node, Distinct):
-        head = f"DISTINCT {r._qual(schema, head_node.col)}"
-    elif isinstance(head_node, CountValid):
-        head = "COUNT(*)"
-    elif isinstance(head_node, CountDistinct):
-        head = f"COUNT(DISTINCT {r._qual(schema, head_node.col)})"
+    head = "*"
+    group_clause = None
+    if head_node is not None:
+        head, group_clause = head_def.render_head(r, head_node, schema)
 
     first_alias, first_table = r.aliases[0]
     parts = [f"SELECT {head}", f"FROM {first_table} {first_alias}"]
     parts.extend(r.joins)
     if r.filters:
         parts.append("WHERE " + " AND ".join(r.filters))
-    if group_by is not None:
-        parts.append(f"GROUP BY {r._qual(schema, group_by.key)}")
+    if group_clause is not None:
+        parts.append(group_clause)
     if order_by is not None:
-        if group_by is not None and order_by.col == group_by.count_name:
-            key = "COUNT(*)"
-        else:
-            key = r._qual(schema, order_by.col)
+        key = lookup(type(order_by)).render_order(r, order_by, head_node, schema)
         parts.append(f"ORDER BY {key} {'DESC' if order_by.descending else 'ASC'}")
         if order_by.limit is not None:
             parts.append(f"LIMIT {order_by.limit}")

@@ -53,6 +53,28 @@ def test_resize_info_not_reused_across_runs(tables):
     assert eng._last_resize_info is None
 
 
+def test_join_reports_all_input_sizes(tables):
+    """Regression (ISSUE 3): n_in recorded only children[0].n, so joins
+    underreported their right input. n_ins carries every child size; n_in
+    stays the first for backward compat."""
+    eng = Engine(tables, key=jax.random.PRNGKey(0))
+    plan = Join(
+        Filter(Scan("diagnoses"), [Predicate("icd9", "eq", 414)]),
+        Scan("medications"),
+        ("pid", "pid"),
+    )
+    _, rep = eng.execute(plan)
+    (join,) = [s for s in rep.nodes if s.node.startswith("Join")]
+    assert join.n_ins == [12, 12]
+    assert join.n_in == join.n_ins[0]
+    assert join.n_out == 144
+    (scan_d, scan_m) = [s for s in rep.nodes if s.node.startswith("Scan")]
+    assert scan_d.n_ins == [] and scan_d.n_in == 0
+    blob = rep.to_dict()
+    (join_d,) = [n for n in blob["nodes"] if n["node"].startswith("Join")]
+    assert join_d["n_ins"] == [12, 12]
+
+
 def test_report_to_json_round_trips(tables):
     eng = Engine(tables, key=jax.random.PRNGKey(0))
     _, rep = eng.execute(_two_resize_plan())

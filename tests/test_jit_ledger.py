@@ -1,0 +1,65 @@
+"""jit_ops=True ledger-replay path (ISSUE 3 satellite): the trace-time tally
+captured on first execution must replay identically on cache hits, so eager
+and jitted runs of the same plan report the same per-node (bytes, rounds)."""
+import jax
+import pytest
+
+from repro.data import generate_healthlnk
+from repro.engine import Engine
+from repro.ops.filter import Or, Predicate
+from repro.plan.nodes import CountValid, Filter, Join, Scan
+
+
+@pytest.fixture(scope="module")
+def tables():
+    return generate_healthlnk(n=8, seed=2, aspirin_frac=0.5)[0]
+
+
+def _plan():
+    d = Filter(
+        Scan("diagnoses"),
+        [Or((Predicate("icd9", "eq", 414), Predicate("icd9", "eq", 390)))],
+    )
+    return CountValid(Join(d, Scan("medications"), ("pid", "pid")))
+
+
+def _profile(report):
+    return [(s.node, s.bytes_per_party, s.rounds) for s in report.nodes]
+
+
+def test_jit_ledger_parity_with_eager(tables):
+    _, rep_eager = Engine(tables, key=jax.random.PRNGKey(3)).execute(_plan())
+
+    Engine._JIT_CACHE.clear()
+    eng = Engine(tables, key=jax.random.PRNGKey(3), jit_ops=True)
+    _, rep_trace = eng.execute(_plan())  # first run: traces + captures tally
+    assert _profile(rep_trace) == _profile(rep_eager)
+
+    # protocol ops were cached (Scan bypasses the jit path)
+    assert len(Engine._JIT_CACHE) == 3  # Filter, Join, CountValid
+
+
+def test_jit_cache_hit_replays_recorded_tally(tables):
+    Engine._JIT_CACHE.clear()
+    eng = Engine(tables, key=jax.random.PRNGKey(3), jit_ops=True)
+    _, rep_first = eng.execute(_plan())
+    n_cached = len(Engine._JIT_CACHE)
+    _, rep_hit = eng.execute(_plan())  # second run: pure replay, no trace
+    assert len(Engine._JIT_CACHE) == n_cached  # no new entries -> cache hits
+    assert _profile(rep_hit) == _profile(rep_first)
+
+    # a second engine instance shares the process-wide cache: still parity
+    eng2 = Engine(tables, key=jax.random.PRNGKey(9), jit_ops=True)
+    _, rep_other = eng2.execute(_plan())
+    assert _profile(rep_other) == _profile(rep_first)
+
+
+def test_jit_results_match_eager_results(tables):
+    out_e, _ = Engine(tables, key=jax.random.PRNGKey(3)).execute(_plan())
+    Engine._JIT_CACHE.clear()
+    eng = Engine(tables, key=jax.random.PRNGKey(3), jit_ops=True)
+    out_1, _ = eng.execute(_plan())
+    out_2, _ = eng.execute(_plan())
+    e = int(out_e.reveal_true_rows()["cnt"][0])
+    assert int(out_1.reveal_true_rows()["cnt"][0]) == e
+    assert int(out_2.reveal_true_rows()["cnt"][0]) == e

@@ -1,0 +1,188 @@
+"""OperatorDef registry conformance (ISSUE 3 acceptance):
+
+* every registered operator declares the hooks its sql_shape requires;
+* a sample plan per operator round-trips plan -> SQL -> plan;
+* schema propagation resolves every sample and rejects unknown columns
+  *before* any MPC work (Engine.execute raises SchemaError up front).
+"""
+import jax
+import pytest
+
+from repro.core.noise import BetaNoise
+from repro.core.resizer import ResizerConfig
+from repro.data import generate_healthlnk
+from repro.engine import Engine
+from repro.ops.filter import Or, Predicate
+from repro.plan import (
+    Avg,
+    CountDistinct,
+    CountValid,
+    Distinct,
+    Filter,
+    GroupByCount,
+    Join,
+    OrderBy,
+    PlanNode,
+    Project,
+    Resize,
+    Scan,
+    SchemaError,
+    Sum,
+    infer_schema,
+    insert_resizers,
+    lookup,
+    registered_ops,
+)
+from repro.sql import HEALTHLNK_CATALOG, compile_logical, render_sql
+
+
+def _dx():
+    return Scan("diagnoses")
+
+
+# One sample plan per registered operator. Adding an operator without adding
+# a sample here fails test_every_operator_has_a_sample — the conformance
+# suite grows with the registry by construction.
+SAMPLES = {
+    Scan: lambda: _dx(),
+    Filter: lambda: Filter(
+        _dx(),
+        [Predicate("icd9", "eq", 414),
+         Or((Predicate("time", "gt", 10), Predicate("diag", "eq", 7)))],
+    ),
+    Project: lambda: Project(_dx(), ("pid", "icd9")),
+    Join: lambda: Join(_dx(), Scan("medications"), ("pid", "pid")),
+    GroupByCount: lambda: GroupByCount(_dx(), ("major_icd9", "diag")),
+    OrderBy: lambda: OrderBy(_dx(), "time", descending=True, limit=4),
+    Distinct: lambda: Distinct(_dx(), "pid"),
+    CountValid: lambda: CountValid(_dx()),
+    CountDistinct: lambda: CountDistinct(_dx(), "pid"),
+    Sum: lambda: Sum(Scan("medications"), "dosage"),
+    Avg: lambda: Avg(Scan("medications"), "dosage"),
+    Resize: lambda: Resize(
+        Filter(_dx(), [Predicate("icd9", "eq", 414)]),
+        ResizerConfig(noise=BetaNoise(2, 6)),
+    ),
+}
+
+
+def test_every_operator_has_a_sample():
+    assert set(SAMPLES) == set(registered_ops())
+
+
+@pytest.mark.parametrize("node_type", list(SAMPLES), ids=lambda t: t.__name__)
+def test_operator_def_conformance(node_type):
+    d = lookup(node_type)
+    assert d.node_type is node_type
+    assert d.protocol is not None or d.engine_apply is not None
+    assert d.sql_shape in ("leaf", "relational", "head", "order", "none")
+    assert d.resizer in ("internal", "skip")
+    if d.sql_shape in ("leaf", "relational"):
+        assert d.render_rel is not None
+    if d.sql_shape == "head":
+        assert d.render_head is not None
+    if d.sql_shape == "order":
+        assert d.render_order is not None
+
+
+@pytest.mark.parametrize("node_type", list(SAMPLES), ids=lambda t: t.__name__)
+def test_schema_propagates_for_every_sample(node_type):
+    plan = SAMPLES[node_type]()
+    schema = infer_schema(plan, HEALTHLNK_CATALOG)
+    assert schema.names  # every operator produces at least one column
+
+
+@pytest.mark.parametrize("node_type", list(SAMPLES), ids=lambda t: t.__name__)
+def test_sql_round_trip_for_every_renderable_operator(node_type):
+    plan = SAMPLES[node_type]()
+    if lookup(node_type).sql_shape == "none":
+        with pytest.raises(ValueError, match="no SQL form"):
+            render_sql(plan)
+        return
+    sql = render_sql(plan)
+    assert compile_logical(sql) == plan, sql
+
+
+def test_unregistered_node_is_rejected():
+    class Rogue(PlanNode):
+        pass
+
+    with pytest.raises(TypeError, match="unregistered plan node Rogue"):
+        lookup(Rogue)
+
+
+# -----------------------------------------------------------------------------
+# Schema errors surface before MPC work
+# -----------------------------------------------------------------------------
+
+def test_unknown_column_raises_schema_error_before_execution():
+    bad = Filter(_dx(), [Predicate("no_such_col", "eq", 1)])
+    with pytest.raises(SchemaError, match="no_such_col"):
+        infer_schema(bad, HEALTHLNK_CATALOG)
+
+
+def test_engine_validates_plan_before_any_mpc(monkeypatch):
+    tables, _ = generate_healthlnk(n=8, seed=0)
+    eng = Engine(tables, key=jax.random.PRNGKey(0))
+    bad = GroupByCount(Join(_dx(), Scan("medications"), ("pid", "pid")), "zzz")
+    # the protocol layer must never run: poison it to prove validation fires
+    monkeypatch.setattr(Engine, "_apply", None)
+    with pytest.raises(SchemaError, match="zzz"):
+        eng.execute(bad)
+
+
+def test_engine_schema_follows_join_disambiguation():
+    """A post-join reference to the right side's colliding column must use
+    the executed r<k>. name — the registry schema mirrors oblivious_join."""
+    j = Join(_dx(), Scan("medications"), ("pid", "pid"))
+    schema = infer_schema(j, HEALTHLNK_CATALOG)
+    assert "r1.pid" in schema.names and "r1.time" in schema.names
+    ok = Filter(j, [Predicate("r1.time", "gt", 3)])
+    infer_schema(ok, HEALTHLNK_CATALOG)  # resolves
+
+
+def test_groupby_output_schema_is_keys_plus_count():
+    g = GroupByCount(_dx(), ("major_icd9", "diag"), count_name="k")
+    schema = infer_schema(g, HEALTHLNK_CATALOG)
+    assert schema.names == ["major_icd9", "diag", "k"]
+    assert schema.kind("k") == "a" and schema.kind("diag") == "b"
+
+
+def test_avg_schema_is_sum_cnt_pair():
+    schema = infer_schema(SAMPLES[Avg](), HEALTHLNK_CATALOG)
+    assert schema.names == ["avg_sum", "avg_cnt"]
+
+
+# -----------------------------------------------------------------------------
+# Placement hints replace the old isinstance chains
+# -----------------------------------------------------------------------------
+
+def test_placement_wraps_only_internal_operators():
+    plan = Distinct(
+        Join(
+            Filter(_dx(), [Predicate("icd9", "eq", 414)]),
+            Scan("medications"),
+            ("pid", "pid"),
+        ),
+        "pid",
+    )
+    cfg = ResizerConfig(noise=BetaNoise(2, 6))
+    placed = insert_resizers(plan, lambda n: cfg, placement="all_internal")
+    labels = placed.pretty()
+    # Join and the non-root Filter wrapped; Scan/Distinct/root untouched
+    assert labels.count("Resize") == 2
+
+    placed_j = insert_resizers(plan, lambda n: cfg, placement="after_joins")
+    assert placed_j.pretty().count("Resize") == 1
+
+
+def test_project_is_free_and_never_wrapped():
+    d = lookup(Project)
+    assert d.resizer == "skip"
+    plan = CountValid(Project(Join(_dx(), Scan("medications"), ("pid", "pid")),
+                              ("pid",)))
+    cfg = ResizerConfig(noise=BetaNoise(2, 6))
+    placed = insert_resizers(plan, lambda n: cfg, placement="all_internal")
+    # the Join is wrapped, the Project is not
+    assert placed.pretty().count("Resize") == 1
+    assert "Resize" not in placed.children()[0].describe()

@@ -76,6 +76,62 @@ def test_results_identical_across_cache_hit(data):
 
 
 # -----------------------------------------------------------------------------
+# Prepared statements: literal-masked plan-cache templates
+# -----------------------------------------------------------------------------
+
+def test_prepared_statement_cache_shares_templates_across_literals(data):
+    """Queries differing only in predicate constants hit one cached template;
+    the physical plan (with its Resizer placement) is re-bound, not
+    recompiled, and executes the new constants correctly."""
+    tables, plain = data
+    svc = make_service(tables, NoTrim())
+    s = svc.session("alice")
+    q = "SELECT COUNT(*) FROM medications WHERE dosage = {}"
+    r1 = s.submit(q.format(325))
+    r2 = s.submit(q.format(81))
+    r3 = s.submit(q.format(325))
+    assert not r1.cache_hit and r2.cache_hit and r3.cache_hit
+    assert svc.stats["plan_cache_rebinds"] == 1  # only the 81 rebind
+    assert r3.plan is r1.plan  # identical literals: shared plan object
+    assert r2.plan is not r1.plan and "81" in r2.plan.pretty()
+    m = plain["medications"]
+    assert int(r1.rows["cnt"][0]) == int((m["dosage"] == 325).sum())
+    assert int(r2.rows["cnt"][0]) == int((m["dosage"] == 81).sum())
+    assert svc.cache_stats()["hit_rate"] == pytest.approx(2 / 3)
+
+
+def test_rebound_plan_keeps_resizer_placement(data):
+    tables, _ = data
+    svc = make_service(tables, TruncatedLaplace(eps=0.5, sensitivity=4))
+    s = svc.session("alice")
+    r1 = s.submit(DOSAGE.replace("390", "390"))
+    r2 = s.submit(DOSAGE.replace("390", "414"))  # same template, new literal
+    assert r2.cache_hit and svc.stats["plan_cache_rebinds"] == 1
+    assert r1.plan.pretty().count("Resize") == r2.plan.pretty().count("Resize")
+    # distinct literals are distinct accountant signatures (different T)
+    sigs = set(svc.accountant._state)
+    assert len(sigs) == 2
+    assert any("icd9 eq 390" in s[0] for s in sigs)
+    assert any("icd9 eq 414" in s[0] for s in sigs)
+
+
+def test_avg_rows_carry_derived_average(data):
+    tables, plain = data
+    svc = make_service(tables, NoTrim())
+    r = svc.session("alice").submit(
+        "SELECT AVG(dosage) AS d FROM medications WHERE med = 1"
+    )
+    m = plain["medications"]
+    mask = m["med"] == 1
+    assert int(r.rows["d_sum"][0]) == int(m["dosage"][mask].sum())
+    assert int(r.rows["d_cnt"][0]) == int(mask.sum())
+    # the service derives the client-side quotient at reveal time
+    assert int(r.rows["d"][0]) == int(m["dosage"][mask].sum()) // max(
+        int(mask.sum()), 1
+    )
+
+
+# -----------------------------------------------------------------------------
 # PrivacyAccountant: budget, refusal, escalation
 # -----------------------------------------------------------------------------
 

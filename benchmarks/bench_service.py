@@ -1,11 +1,18 @@
 """Service-layer sweep: SQL compile time, plan-cache hit rate (including the
-prepared-statement literal sweep), accountant overhead, and the escalation
-path, over the HealthLnK queries submitted as SQL through
-:class:`AnalyticsService` by several tenants.
+prepared-statement literal sweep), accountant overhead, the escalation path,
+and the query-admission batching sweep (queries/sec serial vs batched at
+batch sizes 1/4/16 — DESIGN.md §11), over the HealthLnK queries submitted as
+SQL through :class:`AnalyticsService` by several tenants.
 
 Emits ``BENCH_service.json`` at the repo root with machine-readable per-node
 ``ExecutionReport.to_dict()`` payloads alongside the service counters (the
-compile-cache sweep the CI artifacts track).
+compile-cache sweep the CI artifacts track). The artifact's shape is pinned
+by ``benchmarks/bench_service_schema.json`` (validated by the CI bench-smoke
+job via ``benchmarks/validate_bench.py``), so perf-tracking fields cannot
+silently disappear.
+
+``--quick`` (the CI smoke mode) shrinks the tables and caps the batching
+sweep at batch size 4 so the job finishes in minutes.
 """
 from __future__ import annotations
 
@@ -16,7 +23,7 @@ import time
 import jax
 
 from benchmarks.common import Row, timeit
-from repro.core.noise import TruncatedLaplace
+from repro.core.noise import NoTrim, TruncatedLaplace
 from repro.data import generate_healthlnk
 from repro.data.queries import QUERY_SQL
 from repro.service import AnalyticsService, PrivacyAccountant
@@ -27,10 +34,78 @@ JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_service.json")
 N_ROWS = 24  # CPU-scale (see benchmarks/common.py)
 TENANTS = ("alice", "bob", "carol")
 
+BATCH_SQL = "SELECT major_icd9, COUNT(*) AS c FROM diagnoses GROUP BY major_icd9"
 
-def run() -> list:
+
+def _bench_batching(tables, rows: list, artifact: dict, quick: bool) -> None:
+    """Queries/sec, serial vs one batched engine pass, per batch size. Both
+    services run the serving configuration (per-op jit): serially, K queries
+    dispatch K cached executables per node; batched, ONE vmapped executable
+    per node serves all K slots. Seeds are identical, so this measures the
+    stacked-launch amortization alone (results are bit-identical)."""
+    batch_sizes = (1, 4) if quick else (1, 4, 16)
+    repeats = 3 if quick else 5
+    mk = lambda: AnalyticsService(
+        tables, noise=NoTrim(), placement="none", jit_ops=True,
+        key=jax.random.PRNGKey(2), batch_wait_s=60.0,
+    )
+    sweep: dict = {}
+    physical = None
+    for k in batch_sizes:
+        svc_s = mk()
+        for _ in range(4):  # compile + allocator/dispatch warm, outside timing
+            svc_s.submit("warm", BATCH_SQL)
+        serial_ts = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            for i in range(k):
+                svc_s.submit(f"t{i}", BATCH_SQL)
+            serial_ts.append(time.perf_counter() - t0)
+        serial_s = sorted(serial_ts)[repeats // 2]
+
+        svc_b = mk()
+        for i in range(k):  # warm drain: compiles the k-slot batched programs
+            svc_b.enqueue(f"w{i}", BATCH_SQL)
+        svc_b.drain()
+        batched_ts = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            for i in range(k):
+                svc_b.enqueue(f"t{i}", BATCH_SQL)
+            svc_b.drain()
+            batched_ts.append(time.perf_counter() - t0)
+        batched_s = sorted(batched_ts)[repeats // 2]
+        physical = svc_b.engine.last_batch_stats
+
+        sweep[str(k)] = {
+            "serial_qps": k / serial_s,
+            "batched_qps": k / batched_s,
+            "speedup": serial_s / batched_s,
+        }
+        rows.append((
+            f"service_batching_qps_serial_b{k}", k / serial_s * 1.0, "queries/sec"
+        ))
+        rows.append((
+            f"service_batching_qps_batched_b{k}", k / batched_s * 1.0,
+            f"one engine pass, {sweep[str(k)]['speedup']:.2f}x",
+        ))
+    max_k = str(max(batch_sizes))
+    artifact["batching"] = {
+        "sql": BATCH_SQL,
+        "batch_sizes": list(batch_sizes),
+        "sweep": sweep,
+        "max_batch": max(batch_sizes),
+        "speedup_at_max": sweep[max_k]["speedup"],
+        "physical": physical,
+    }
+
+
+def run(quick: bool = False) -> list:
+    n_rows = 12 if quick else N_ROWS
     rows: list[Row] = []
-    artifact: dict = {"n_rows": N_ROWS, "queries": {}, "compile_us": {}}
+    artifact: dict = {
+        "n_rows": n_rows, "quick": quick, "queries": {}, "compile_us": {},
+    }
 
     # -- pure SQL->plan compile time (parse + optimize, no placement) ---------
     for name, sql in QUERY_SQL.items():
@@ -49,7 +124,7 @@ def run() -> list:
     artifact["compile_us"]["three_join_placed"] = us
 
     # -- multi-tenant service sweep: 3 tenants x 4 queries x 2 passes ---------
-    tables, _ = generate_healthlnk(n=N_ROWS, seed=3, aspirin_frac=0.4,
+    tables, _ = generate_healthlnk(n=n_rows, seed=3, aspirin_frac=0.4,
                                    icd_heart_frac=0.3)
     svc = AnalyticsService(
         tables,
@@ -107,6 +182,9 @@ def run() -> list:
     rows.append(("service_total_us_per_query", exec_s / n_q * 1e6, f"{n_q} queries, {len(TENANTS)} tenants"))
     rows.append(("service_escalations", float(svc.accountant.escalation_count), "budget-driven noise widenings"))
 
+    # -- query admission batching: serial vs one stacked engine pass ----------
+    _bench_batching(tables, rows, artifact, quick)
+
     artifact["plan_cache"] = cache
     artifact["accountant"] = {
         "status": svc.accountant.status(),
@@ -125,6 +203,13 @@ def run() -> list:
 
 
 if __name__ == "__main__":
+    import argparse
+
     from benchmarks.common import emit
 
-    emit(run())
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--quick", action="store_true",
+        help="CI smoke mode: tiny tables, batch sizes 1/4",
+    )
+    emit(run(quick=ap.parse_args().quick))

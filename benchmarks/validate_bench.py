@@ -1,0 +1,82 @@
+"""Validate BENCH_service.json against the checked-in shape schema.
+
+Dependency-free (no jsonschema): the schema file lists required key paths and
+their JSON types; extra keys are always allowed, so the artifact can grow
+without touching the schema — but a perf-tracking field that disappears (or
+silently changes type) fails CI's bench-smoke job.
+
+Usage:
+    python benchmarks/validate_bench.py BENCH_service.json \
+        benchmarks/bench_service_schema.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+_TYPES = {
+    "number": (int, float),
+    "string": str,
+    "boolean": bool,
+    "object": dict,
+    "array": list,
+}
+
+
+def check(node, spec, path: str, errors: list) -> None:
+    if isinstance(spec, str):
+        want = _TYPES[spec]
+        # bool is an int subclass: don't let a boolean satisfy "number"
+        if isinstance(node, bool) and spec == "number":
+            errors.append(f"{path}: expected number, got boolean")
+        elif not isinstance(node, want):
+            errors.append(
+                f"{path}: expected {spec}, got {type(node).__name__}"
+            )
+        return
+    if not isinstance(node, dict):
+        errors.append(f"{path}: expected object, got {type(node).__name__}")
+        return
+    for key, sub in spec.items():
+        if key not in node:
+            errors.append(f"{path}.{key}: missing required key")
+        else:
+            check(node[key], sub, f"{path}.{key}", errors)
+
+
+def validate(artifact: dict, schema: dict) -> list:
+    errors: list = []
+    check(artifact, schema["required"], "$", errors)
+
+    # every swept batch size must carry the full qps/speedup triple
+    batching = artifact.get("batching", {})
+    entry_spec = schema.get("batching_sweep_entry", {})
+    sweep = batching.get("sweep", {})
+    for k in batching.get("batch_sizes", []):
+        key = str(k)
+        if key not in sweep:
+            errors.append(f"$.batching.sweep.{key}: missing swept batch size")
+        else:
+            check(sweep[key], entry_spec, f"$.batching.sweep.{key}", errors)
+    return errors
+
+
+def main(argv) -> int:
+    if len(argv) != 3:
+        print(__doc__)
+        return 2
+    with open(argv[1]) as f:
+        artifact = json.load(f)
+    with open(argv[2]) as f:
+        schema = json.load(f)
+    errors = validate(artifact, schema)
+    if errors:
+        for e in errors:
+            print(f"SCHEMA VIOLATION {e}")
+        return 1
+    print(f"{argv[1]}: OK ({len(schema['required'])} top-level keys checked)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -16,8 +16,7 @@ embeddings (B, S, d_model) + codebook labels.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -34,7 +34,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from ..kernels import fusion_enabled
-from .ledger import active_ledger, fused_scope, log_comm
+from .ledger import fused_scope
 from .prf import PRFSetup
 from .sharing import AShare, BShare, and_, mul
 

@@ -20,7 +20,6 @@ empirically (used to validate Eq. 1 and reproduce Figs. 10/11).
 """
 from __future__ import annotations
 
-import math
 from typing import Dict
 
 import jax

@@ -28,7 +28,14 @@ import threading
 from collections import defaultdict
 from typing import Dict, List, Optional
 
-__all__ = ["CommLedger", "log_comm", "active_ledger", "fused_scope", "measure_comm"]
+__all__ = [
+    "CommLedger",
+    "log_comm",
+    "active_ledger",
+    "fused_scope",
+    "measure_comm",
+    "batched_tally",
+]
 
 _STATE = threading.local()
 
@@ -128,6 +135,24 @@ def fused_scope(op: str, rounds: int):
     if led is None:
         return contextlib.nullcontext()
     return led.fused(op, rounds)
+
+
+def batched_tally(per_slot: Dict[str, float], slots: int) -> Dict[str, float]:
+    """Physical cost of a ``slots``-wide batched launch, given the per-slot
+    tally the trace logged once.
+
+    A vmapped protocol traces its Python body a single time with per-slot
+    shapes, so the active ledger records what ONE slot sends. Physically,
+    every slot's share bytes are still transmitted (bytes scale by ``slots``),
+    but the synchronous round trips are shared across the whole batch — the
+    messages of all slots ride the same exchanges. That round amortization is
+    the point of query admission batching (DESIGN.md §11): K queries pay one
+    query's latency-bound round count.
+    """
+    return {
+        "bytes_per_party": per_slot.get("bytes_per_party", 0) * slots,
+        "rounds": per_slot.get("rounds", 0),
+    }
 
 
 def measure_comm(fn, *args, **kwargs) -> Dict[str, float]:

@@ -19,7 +19,7 @@ that ``repro.kernels.shuffle_gather`` implements as a blocked Pallas kernel
 """
 from __future__ import annotations
 
-from typing import Dict, Sequence, Union
+from typing import Dict, Union
 
 import jax
 import jax.numpy as jnp

@@ -8,6 +8,21 @@ legitimate (it is the disclosed value) and bounded by bucketing.
 The engine records a per-node execution report: wall seconds, the ledger's
 (rounds, bytes/party), and input/output oblivious sizes — this is what the
 benchmarks print and what reproduces the paper's Figures 6-9.
+
+Batched execution (DESIGN.md §11): :meth:`Engine.execute_batch` runs K
+structurally identical plans as ONE engine pass. Each operator's protocol is
+``jax.vmap``-ed over the K input tables stacked along a new leading batch
+axis, so every kernel launch — Kogge-Stone comparison levels, a2b
+conversions, bitonic compare-exchange stages — and its PRF folds are shared
+across the batch instead of repeated per query. Because the engine's PRF is
+fixed per instance and a vmapped body traces with per-slot shapes, every
+slot's shares are bit-identical to what a serial :meth:`execute` of that
+query would have produced, and the one traced ledger profile IS each slot's
+per-query tally (demuxed into per-slot :class:`ExecutionReport`s). Resize
+nodes run per slot — each query folds its own noise counter, so noise stays
+fresh and i.i.d. per query and CRT observations are never merged — and if
+the revealed trim sizes diverge, the batch splits into per-slot execution
+for the remainder of the plan.
 """
 from __future__ import annotations
 
@@ -15,16 +30,16 @@ import dataclasses
 import json
 import time
 from collections import OrderedDict
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from ..core.ledger import CommLedger
+from ..core.ledger import CommLedger, batched_tally, log_comm
 from ..core.prf import PRFSetup, setup_prf
 from ..ops import SecretTable
 from ..plan.nodes import PlanNode
-from ..plan.registry import infer_schema, lookup
+from ..plan.registry import infer_schema, lookup, plan_batchable
 
 __all__ = ["Engine", "ExecutionReport", "NodeStats"]
 
@@ -111,6 +126,77 @@ def _block(table: SecretTable) -> None:
     jax.block_until_ready(table.valid.shares)
 
 
+# -----------------------------------------------------------------------------
+# Batched-execution plumbing
+# -----------------------------------------------------------------------------
+
+def _stack_tables(tables: Sequence[SecretTable]) -> SecretTable:
+    """K structurally identical tables -> one table whose leaves carry a new
+    leading batch axis (shares become ``(K, 3, n)``)."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *tables)
+
+
+def _broadcast_table(table: SecretTable, k: int) -> SecretTable:
+    """One shared table viewed as a K-slot batch (zero-copy broadcast)."""
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (k,) + x.shape), table
+    )
+
+
+def _unstack_table(stacked: SecretTable, i: int) -> SecretTable:
+    return jax.tree_util.tree_map(lambda x: x[i], stacked)
+
+
+@dataclasses.dataclass
+class _BatchVal:
+    """A plan node's output across the batch: either one stacked table (the
+    vmapped fast path) or a per-slot list (after the batch split on divergent
+    Resize trim sizes, or through a stateful per-slot hook)."""
+
+    k: int
+    stacked: Optional[SecretTable] = None
+    slots: Optional[List[SecretTable]] = None
+
+    def to_slots(self) -> List[SecretTable]:
+        if self.slots is None:
+            self.slots = [_unstack_table(self.stacked, i) for i in range(self.k)]
+        return self.slots
+
+    def slot_n(self, i: int) -> int:
+        if self.slots is not None:
+            return self.slots[i].n
+        return int(self.stacked.valid.shares.shape[-1])
+
+
+def _count_resizes(plan: PlanNode) -> int:
+    """Noise-counter consumers per plan (post-order Resize count)."""
+    n = sum(_count_resizes(c) for c in plan.children())
+    return n + (1 if lookup(type(plan)).provides_resize_info else 0)
+
+
+@dataclasses.dataclass
+class _BatchCtx:
+    """Per-``execute_batch`` state threaded through the plan walk."""
+
+    k: int
+    reports: List[ExecutionReport]
+    ctr_base: int  # engine._resize_ctr before the batch started
+    resizes_per_slot: int  # Resize nodes per plan (post-order count)
+    resize_idx: int = 0  # next Resize node's post-order index
+
+    def next_resize_index(self) -> int:
+        j = self.resize_idx
+        self.resize_idx += 1
+        return j
+
+    def slot_ctr_before(self, slot: int, resize_index: int) -> int:
+        """The counter value engine._resize_ctr must hold *before* this
+        slot executes its ``resize_index``-th Resize, so the fold matches a
+        serial run of the K queries in submission order exactly: slot i's
+        j-th resize consumes ``base + i * R + j + 1``."""
+        return self.ctr_base + slot * self.resizes_per_slot + resize_index
+
+
 class Engine:
     """Executes plans over a set of secret-shared base tables."""
 
@@ -123,12 +209,22 @@ class Engine:
     # eviction only costs a recompile on a shape not seen recently.
     _JIT_CACHE: "OrderedDict" = OrderedDict()
     _JIT_CACHE_MAX = 128
+    # Logical hit/miss counters. "Logical" because a batched pass that reuses
+    # one compiled program for K slots served K queries from the cache: a
+    # lookup counts `count` hits on presence, and a batched compile counts one
+    # miss plus K-1 hits (the other slots ride the same executable).
+    _JIT_STATS: Dict[str, int] = {"hits": 0, "misses": 0}
 
     @classmethod
-    def _jit_cache_get(cls, key):
+    def _jit_cache_get(cls, key, count: int = 1):
         hit = cls._JIT_CACHE.get(key)
         if hit is not None:
             cls._JIT_CACHE.move_to_end(key)
+            cls._JIT_STATS["hits"] += count
+        else:
+            cls._JIT_STATS["misses"] += 1
+            if count > 1:
+                cls._JIT_STATS["hits"] += count - 1
         return hit
 
     @classmethod
@@ -137,6 +233,20 @@ class Engine:
         cls._JIT_CACHE.move_to_end(key)
         while len(cls._JIT_CACHE) > cls._JIT_CACHE_MAX:
             cls._JIT_CACHE.popitem(last=False)
+
+    @classmethod
+    def jit_cache_stats(cls) -> Dict[str, float]:
+        h, m = cls._JIT_STATS["hits"], cls._JIT_STATS["misses"]
+        return {
+            "hits": h,
+            "misses": m,
+            "hit_rate": h / max(h + m, 1),
+            "size": len(cls._JIT_CACHE),
+        }
+
+    @classmethod
+    def reset_jit_stats(cls) -> None:
+        cls._JIT_STATS["hits"] = cls._JIT_STATS["misses"] = 0
 
     def __init__(
         self,
@@ -158,6 +268,7 @@ class Engine:
         self.validate = validate
         self._resize_ctr = 0
         self._last_resize_info: Optional[Dict] = None
+        self.last_batch_stats: Dict = {}
 
     def execute(self, plan: PlanNode) -> tuple[SecretTable, ExecutionReport]:
         if self.validate:
@@ -172,8 +283,16 @@ class Engine:
         return out, report
 
     # ------------------------------------------------------------------
-    def _run(self, node: PlanNode, report: ExecutionReport) -> SecretTable:
-        children = [self._run(c, report) for c in node.children()]
+    def _run_node_slot(
+        self, node: PlanNode, children: List[SecretTable]
+    ) -> Tuple[SecretTable, NodeStats]:
+        """Execute one node for one slot under its own ledger and return the
+        output with its filled report entry. The single accounting path for
+        serial `_run`, the batch's split tail, and per-slot Resize — so
+        batched and serial reports can never desynchronize field by field.
+
+        Consumes the resize info `_apply` may have produced; clearing it
+        keeps a later Resize (or a later run) from reporting stale info."""
         led = CommLedger()
         t0 = time.perf_counter()
         with led:
@@ -184,22 +303,24 @@ class Engine:
         n_ins = [t.n for t in children]
         extra = {}
         if lookup(type(node)).provides_resize_info:
-            # consume the info this node's _apply just produced; clearing it
-            # keeps a later Resize (or a later run) from reporting stale info
             extra = self._last_resize_info or {}
             self._last_resize_info = None
-        report.nodes.append(
-            NodeStats(
-                node=node.describe(),
-                n_in=n_ins[0] if n_ins else 0,
-                n_ins=n_ins,
-                n_out=out.n,
-                seconds=dt,
-                bytes_per_party=int(tally["bytes_per_party"]),
-                rounds=int(tally["rounds"]),
-                extra=extra,
-            )
+        stats = NodeStats(
+            node=node.describe(),
+            n_in=n_ins[0] if n_ins else 0,
+            n_ins=n_ins,
+            n_out=out.n,
+            seconds=dt,
+            bytes_per_party=int(tally["bytes_per_party"]),
+            rounds=int(tally["rounds"]),
+            extra=extra,
         )
+        return out, stats
+
+    def _run(self, node: PlanNode, report: ExecutionReport) -> SecretTable:
+        children = [self._run(c, report) for c in node.children()]
+        out, stats = self._run_node_slot(node, children)
+        report.nodes.append(stats)
         return out
 
     @staticmethod
@@ -238,8 +359,231 @@ class Engine:
         jfn, profile = jitted
         out = jfn(prf, *children)
         if profile.get("tally"):
-            from ..core.ledger import log_comm
-
             t = profile["tally"]
             log_comm(node.label.lower(), int(t["rounds"]), int(t["bytes_per_party"]))
         return out
+
+    # ------------------------------------------------------------------
+    # Batched execution: K same-shape queries, one engine pass
+    # ------------------------------------------------------------------
+
+    def execute_batch(
+        self, plans: Sequence[PlanNode]
+    ) -> List[Tuple[SecretTable, ExecutionReport]]:
+        """Execute K structurally identical plans as one stacked engine pass.
+
+        Every plan must have the same fingerprint (``plan.pretty()``) — the
+        admission scheduler's bucketing guarantees this. Slot i's result and
+        per-node ledger tallies are bit-identical to what ``execute(plans[i])``
+        would have produced had the K queries run serially in order (the
+        noise-counter allocation in :class:`_BatchCtx` preserves per-slot
+        Resize freshness exactly). Plans containing non-batchable operators,
+        and batches of one, fall back to serial execution.
+
+        ``last_batch_stats`` afterwards holds the physical cost of the pass:
+        per-slot bytes all really move (bytes scale with K) but vmapped nodes
+        share their synchronous rounds across the batch.
+        """
+        plans = list(plans)
+        if not plans:
+            return []
+        if len(plans) == 1 or not plan_batchable(plans[0]):
+            results = [self.execute(p) for p in plans]
+            # same shape as the batched stats: serial execution shares nothing,
+            # so the physical pass is just the sum of the per-query tallies
+            self.last_batch_stats = {
+                "slots": len(plans),
+                "stacked_nodes": 0,
+                "split_nodes": 0,
+                "physical_bytes_per_party": sum(
+                    r.total_bytes for _, r in results
+                ),
+                "physical_rounds": sum(r.total_rounds for _, r in results),
+            }
+            return results
+        fp = plans[0].pretty()
+        for p in plans[1:]:
+            if p.pretty() != fp:
+                raise ValueError(
+                    "execute_batch requires structurally identical plans; "
+                    "bucket by full plan fingerprint before batching"
+                )
+        if self.validate:
+            from ..sql.catalog import Catalog
+
+            infer_schema(plans[0], Catalog.from_tables(self.tables))
+
+        k = len(plans)
+        resizes = _count_resizes(plans[0])
+        ctx = _BatchCtx(
+            k=k,
+            reports=[ExecutionReport() for _ in range(k)],
+            ctr_base=self._resize_ctr,
+            resizes_per_slot=resizes,
+        )
+        self._last_resize_info = None
+        self.last_batch_stats = {
+            "slots": k,
+            "stacked_nodes": 0,
+            "split_nodes": 0,
+            "physical_bytes_per_party": 0,
+            "physical_rounds": 0,
+        }
+        try:
+            out = self._run_batch(plans[0], ctx)
+        finally:
+            # The batch owns the counter range [base+1, base+k*R]; per-slot
+            # execution rewinds within it non-monotonically. Skip past the
+            # WHOLE range even on failure — some slots may already have
+            # revealed sizes for counters in it, and a later query refolding
+            # one would reuse noise the attacker has seen (unused counters
+            # are merely skipped, which is safe).
+            self._resize_ctr = ctx.ctr_base + k * resizes
+        return list(zip(out.to_slots(), ctx.reports))
+
+    def _run_batch(self, node: PlanNode, ctx: _BatchCtx) -> _BatchVal:
+        children = [self._run_batch(c, ctx) for c in node.children()]
+        d = lookup(type(node))
+        if d.batch_apply is not None:
+            return d.batch_apply(self, node, children, ctx)
+        if all(c.stacked is not None for c in children):
+            return self._run_batch_stacked(node, children, ctx)
+        return self._run_batch_split(node, children, ctx)
+
+    def _run_batch_stacked(
+        self, node: PlanNode, children: List[_BatchVal], ctx: _BatchCtx
+    ) -> _BatchVal:
+        """One vmapped launch for all K slots. The traced ledger profile is
+        the per-slot cost (the body traces with per-slot shapes), so it is
+        replayed verbatim into every slot's report — exact parity with a
+        serial run — while the physical tally charges bytes K times and the
+        shared rounds once."""
+        led = CommLedger()
+        t0 = time.perf_counter()
+        with led:
+            out = self._apply_batched(node, [c.stacked for c in children], ctx.k)
+        jax.block_until_ready(out.valid.shares)
+        dt = time.perf_counter() - t0
+        tally = led.tally()
+        val = _BatchVal(k=ctx.k, stacked=out)
+        n_ins = [c.slot_n(0) for c in children]
+        for report in ctx.reports:
+            report.nodes.append(
+                NodeStats(
+                    node=node.describe(),
+                    n_in=n_ins[0] if n_ins else 0,
+                    n_ins=list(n_ins),
+                    n_out=val.slot_n(0),
+                    seconds=dt / ctx.k,  # amortized wall share
+                    bytes_per_party=int(tally["bytes_per_party"]),
+                    rounds=int(tally["rounds"]),
+                )
+            )
+        # physical cost of the pass: bytes x K, synchronous rounds shared
+        phys = batched_tally(tally, ctx.k)
+        bs = self.last_batch_stats
+        bs["stacked_nodes"] += 1
+        bs["physical_bytes_per_party"] += int(phys["bytes_per_party"])
+        bs["physical_rounds"] += int(phys["rounds"])
+        return val
+
+    def _run_batch_split(
+        self, node: PlanNode, children: List[_BatchVal], ctx: _BatchCtx
+    ) -> _BatchVal:
+        """Per-slot execution through the normal `_apply` path — used after a
+        Resize split (divergent trim sizes make the slots un-stackable)."""
+        slot_children = [c.to_slots() for c in children]
+        outs: List[SecretTable] = []
+        bs = self.last_batch_stats
+        bs["split_nodes"] += 1
+        for i in range(ctx.k):
+            out, stats = self._run_node_slot(
+                node, [sc[i] for sc in slot_children]
+            )
+            ctx.reports[i].nodes.append(stats)
+            bs["physical_bytes_per_party"] += stats.bytes_per_party
+            bs["physical_rounds"] += stats.rounds
+            outs.append(out)
+        return _BatchVal(k=ctx.k, slots=outs)
+
+    def _apply_batched(
+        self, node: PlanNode, stacked: List[SecretTable], k: int
+    ) -> SecretTable:
+        """vmap the node's protocol over the batch axis; under ``jit_ops`` the
+        vmapped program is cached like the serial one, and a cache entry that
+        serves K slots counts K logical hits (one compile covers them all)."""
+        d = lookup(type(node))
+        fn = d.protocol(node)
+
+        def batched(prf_arg, *tables, _fn=fn):
+            return jax.vmap(lambda *ts: _fn(prf_arg, *ts))(*tables)
+
+        if not self.jit_ops:
+            return batched(self.prf, *stacked)
+        key = (node.describe(), self._batch_sig(stacked), ("batch", k))
+        jitted = Engine._jit_cache_get(key, count=k)
+        if jitted is None:
+            profile: Dict = {}
+
+            def traced(prf_arg, *tables, _profile=profile):
+                with CommLedger() as led:
+                    out = batched(prf_arg, *tables)
+                _profile.setdefault("tally", led.tally())
+                return out
+
+            jitted = (jax.jit(traced), profile)
+            Engine._jit_cache_put(key, jitted)
+        jfn, profile = jitted
+        out = jfn(self.prf, *stacked)
+        if profile.get("tally"):
+            t = profile["tally"]
+            log_comm(node.label.lower(), int(t["rounds"]), int(t["bytes_per_party"]))
+        return out
+
+    @staticmethod
+    def _batch_sig(stacked: List[SecretTable]):
+        return tuple(
+            (
+                int(t.valid.shares.shape[-1]),
+                tuple(sorted((c, type(v).__name__) for c, v in t.cols.items())),
+            )
+            for t in stacked
+        )
+
+    # -- stateful batch hooks (dispatched via OperatorDef.batch_apply) -------
+
+    def _batch_scan(self, node: PlanNode, ctx: _BatchCtx) -> _BatchVal:
+        """All slots read the same secret-shared base table; a zero-copy
+        broadcast along the batch axis stands in for K stacked uploads."""
+        table = self.tables[node.table]
+        for report in ctx.reports:
+            report.nodes.append(
+                NodeStats(
+                    node=node.describe(), n_in=0, n_ins=[], n_out=table.n,
+                    seconds=0.0, bytes_per_party=0, rounds=0,
+                )
+            )
+        return _BatchVal(k=ctx.k, stacked=_broadcast_table(table, ctx.k))
+
+    def _batch_resize(
+        self, node: PlanNode, children: List[_BatchVal], ctx: _BatchCtx
+    ) -> _BatchVal:
+        """Per-slot reveal-and-trim: slot i's j-th Resize folds exactly the
+        noise counter a serial run would have (fresh i.i.d. noise per query —
+        one CRT observation each, never merged across tenants). Slots whose
+        revealed sizes agree are re-stacked so the rest of the plan stays
+        vmapped; divergent sizes split the batch."""
+        j = ctx.next_resize_index()
+        slots_in = children[0].to_slots()
+        outs: List[SecretTable] = []
+        bs = self.last_batch_stats
+        for i, tbl in enumerate(slots_in):
+            self._resize_ctr = ctx.slot_ctr_before(i, j)
+            out, stats = self._run_node_slot(node, [tbl])
+            ctx.reports[i].nodes.append(stats)
+            bs["physical_bytes_per_party"] += stats.bytes_per_party
+            bs["physical_rounds"] += stats.rounds
+            outs.append(out)
+        if all(o.n == outs[0].n for o in outs):
+            return _BatchVal(k=ctx.k, stacked=_stack_tables(outs))
+        return _BatchVal(k=ctx.k, slots=outs)

@@ -32,7 +32,6 @@ import traceback
 from typing import Dict, Optional
 
 import jax
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs import ARCH_IDS, get_config

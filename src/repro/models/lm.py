@@ -16,8 +16,7 @@ assignment: ``batch["embeds"]`` carries precomputed patch/frame embeddings.
 """
 from __future__ import annotations
 
-import functools
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

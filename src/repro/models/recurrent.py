@@ -11,7 +11,7 @@ which is what makes xlstm-1.3b long_500k-capable.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

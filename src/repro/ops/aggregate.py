@@ -14,7 +14,7 @@ from __future__ import annotations
 
 from ..core.circuits import b2a, bit2a
 from ..core.prf import PRFSetup
-from ..core.sharing import AShare, mul
+from ..core.sharing import mul
 from .distinct import oblivious_distinct
 from .table import SecretTable
 

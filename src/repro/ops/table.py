@@ -160,7 +160,12 @@ class SecretTable:
 
     # -- pytree ---------------------------------------------------------------
     def tree_flatten(self):
-        names = tuple(sorted(self.cols))
+        # Preserve insertion order: protocols derive per-column PRF folds from
+        # dict position (e.g. bitonic_sort's select gates), so a table that
+        # round-trips through a jax transform (vmap in the batched engine
+        # pass, jit) must reconstruct with the same column order it was
+        # built with — sorting here would silently re-key that randomness.
+        names = tuple(self.cols)
         return tuple(self.cols[k] for k in names) + (self.valid,), names
 
     @classmethod

@@ -31,6 +31,17 @@ holding everything the drivers need:
                        this node's report entry.
 * ``post_reveal``    — optional revealed-rows post-processing hook
                        (AVG derives ``sum // count`` client-side).
+* ``batchable``      — the operator may run inside the engine's stacked
+                       (vmapped) multi-query pass (DESIGN.md §11). Singleton
+                       aggregates and ``post_reveal`` ops opt out: their
+                       1-row outputs amortize nothing and their client-side
+                       derivation hooks run per tenant outside the engine.
+* ``batch_apply``    — stateful batched-execution hook for operators that
+                       cannot simply be vmapped: ``(engine, node, children,
+                       ctx) -> batch value``. Scan stacks the engine's base
+                       table across the batch axis; Resize runs per slot so
+                       every query draws fresh noise from its own counter
+                       stream (CRT observations are never merged).
 
 DESIGN.md §10 documents the contract; tests/test_registry.py enforces it
 (every registered operator must instantiate, execute, cost, schema-check,
@@ -83,6 +94,7 @@ __all__ = [
     "lookup",
     "registered_ops",
     "infer_schema",
+    "plan_batchable",
 ]
 
 
@@ -157,6 +169,8 @@ class OperatorDef:
     balloons: bool = False  # output is larger than inputs (join product)
     singleton: bool = False
     provides_resize_info: bool = False
+    batchable: bool = True  # may run in the stacked multi-query engine pass
+    batch_apply: Optional[Callable] = None  # stateful batched-execution hook
 
     def __post_init__(self):
         if self.protocol is None and self.engine_apply is None:
@@ -188,6 +202,20 @@ def lookup(node_type: Type[PlanNode]) -> OperatorDef:
 
 def registered_ops() -> Dict[Type[PlanNode], OperatorDef]:
     return dict(_REGISTRY)
+
+
+def plan_batchable(plan: PlanNode) -> bool:
+    """True iff every operator in ``plan`` may run inside the engine's
+    stacked multi-query pass — the admission scheduler's eligibility check
+    (non-batchable plans fall back to serial batch-of-1 execution).
+
+    An operator needs either a vmappable ``protocol`` or an explicit
+    ``batch_apply`` hook; a stateful ``engine_apply``-only operator cannot
+    run stacked regardless of its ``batchable`` default."""
+    d = lookup(type(plan))
+    if not d.batchable or (d.protocol is None and d.batch_apply is None):
+        return False
+    return all(plan_batchable(c) for c in plan.children())
 
 
 # -----------------------------------------------------------------------------
@@ -283,6 +311,8 @@ register(OperatorDef(
     schema=_scan_schema,
     estimate=_scan_estimate,
     engine_apply=lambda eng, node, children: eng.tables[node.table],
+    # batched pass: broadcast the (shared) base table across the batch axis
+    batch_apply=lambda eng, node, children, ctx: eng._batch_scan(node, ctx),
     render_rel=_render_scan,
     sql_shape="leaf",
 ))
@@ -541,6 +571,7 @@ register(OperatorDef(
     render_head=lambda r, node, schema: ("COUNT(*)", None),
     sql_shape="head",
     singleton=True,
+    batchable=False,
 ))
 
 
@@ -565,6 +596,7 @@ register(OperatorDef(
     ),
     sql_shape="head",
     singleton=True,
+    batchable=False,
 ))
 
 
@@ -592,6 +624,7 @@ register(OperatorDef(
     ),
     sql_shape="head",
     singleton=True,
+    batchable=False,
 ))
 
 
@@ -633,6 +666,7 @@ register(OperatorDef(
     post_reveal=_avg_post_reveal,
     sql_shape="head",
     singleton=True,
+    batchable=False,
 ))
 
 
@@ -666,6 +700,12 @@ register(OperatorDef(
     schema=_resize_schema,
     estimate=_resize_estimate,
     engine_apply=_apply_resize,
+    # batched pass: executed per slot — every query folds its own noise
+    # counter (fresh i.i.d. noise, one CRT observation each) and the revealed
+    # trim sizes may diverge, splitting the batch downstream
+    batch_apply=lambda eng, node, children, ctx: eng._batch_resize(
+        node, children, ctx
+    ),
     sql_shape="none",
     provides_resize_info=True,
 ))

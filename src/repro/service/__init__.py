@@ -5,13 +5,22 @@ from .accountant import (  # noqa: F401
     escalate_strategy,
     strategy_key,
 )
-from .service import AnalyticsService, QueryResult, TenantSession  # noqa: F401
+from .scheduler import QueryScheduler, QueryTicket  # noqa: F401
+from .service import (  # noqa: F401
+    AdmittedQuery,
+    AnalyticsService,
+    QueryResult,
+    TenantSession,
+)
 
 __all__ = [
+    "AdmittedQuery",
     "AnalyticsService",
     "PrivacyAccountant",
     "QueryRefused",
     "QueryResult",
+    "QueryScheduler",
+    "QueryTicket",
     "TenantSession",
     "escalate_strategy",
     "strategy_key",

@@ -88,6 +88,28 @@ def escalate_strategy(
     return NoTrim()
 
 
+def _iter_resizes(plan: PlanNode, include_notrim: bool = False):
+    """Post-order (== execution-order) Resize nodes of a plan — the one
+    traversal shared by reservation, release, charge, and record, so their
+    eligibility rules cannot drift apart."""
+    for c in plan.children():
+        yield from _iter_resizes(c, include_notrim)
+    if isinstance(plan, Resize) and (
+        include_notrim or not isinstance(plan.cfg.noise, NoTrim)
+    ):
+        yield plan
+
+
+def _drop_reservations(
+    planned: Dict[Tuple[str, str], int], sig: Tuple[str, str], count: int = 1
+) -> None:
+    left = planned.get(sig, 0) - count
+    if left > 0:
+        planned[sig] = left
+    else:
+        planned.pop(sig, None)
+
+
 @dataclasses.dataclass
 class _SigState:
     observed: int = 0
@@ -143,7 +165,9 @@ class PrivacyAccountant:
         return st.budget - st.observed
 
     # -- admission ------------------------------------------------------------
-    def admit(self, plan: PlanNode) -> Tuple[PlanNode, List[Dict]]:
+    def admit(
+        self, plan: PlanNode, planned: Optional[Dict[Tuple[str, str], int]] = None
+    ) -> Tuple[PlanNode, List[Dict]]:
         """Check every Resize in the plan against its budget. Returns a
         (possibly rewritten) plan plus the escalation records. Raises
         :class:`QueryRefused` under ``policy='refuse'``. The input plan is
@@ -154,9 +178,24 @@ class PrivacyAccountant:
         against the remaining budget as a group so a single admit cannot
         overdraw a known budget. (A signature's very first budget is only
         learned at execution, so duplicates inside the first-ever plan for a
-        signature may still spend up to that plan's multiplicity.)"""
+        signature may still spend up to that plan's multiplicity.)
+
+        Pass an explicit ``planned`` dict to extend that group across
+        *several* admits: the admission scheduler threads one dict through
+        every query queued in the same drain window, so K queued queries with
+        the same signature spend K observations against the remaining budget
+        at admit time — exactly what a serial admit/record interleaving would
+        have charged — even though their ``record`` calls all land after the
+        batched execution. The dict is mutated in place; drop it once the
+        window's records are committed."""
         escalations: List[Dict] = []
-        planned: Dict[Tuple[str, str], int] = {}
+        if planned is None:
+            planned = {}
+        added: Dict[Tuple[str, str], int] = {}  # this admit's reservations
+
+        def reserve(sig: Tuple[str, str]) -> None:
+            planned[sig] = planned.get(sig, 0) + 1
+            added[sig] = added.get(sig, 0) + 1
 
         def rewrite(node: PlanNode) -> PlanNode:
             old_children = node.children()
@@ -170,7 +209,7 @@ class PrivacyAccountant:
                 sig = self.signature(node)
                 rem = self.remaining(sig)
                 if rem is None or rem - planned.get(sig, 0) > 0:
-                    planned[sig] = planned.get(sig, 0) + 1
+                    reserve(sig)
                     return node
                 st = self._state[sig]
                 if self.policy == "refuse":
@@ -194,22 +233,44 @@ class PrivacyAccountant:
                 if isinstance(nxt, NoTrim):
                     return node
 
-        return rewrite(plan), escalations
+        try:
+            return rewrite(plan), escalations
+        except QueryRefused:
+            # a refused query executes nothing: roll this admit's reservations
+            # back out of the (possibly caller-shared) admission group, or
+            # they would shrink other queries' effective budgets forever
+            for sig, count in added.items():
+                _drop_reservations(planned, sig, count)
+            raise
+
+    def release_planned(
+        self, plan: PlanNode, planned: Dict[Tuple[str, str], int]
+    ) -> None:
+        """Drop a now-recorded plan's contributions from an admission group:
+        once :meth:`record` has charged the plan's observations to the real
+        per-signature state, keeping them in ``planned`` too would double-
+        count them against queries admitted later in the same window."""
+        for node in _iter_resizes(plan):
+            _drop_reservations(planned, self.signature(node))
+
+    def charge_failed(self, plan: PlanNode) -> None:
+        """Conservatively charge one observation per non-NoTrim Resize of a
+        plan whose execution may have disclosed its noisy sizes but could not
+        be recorded (engine failure mid-plan, demux/record failure): the
+        attacker may already hold the sample, so the budget must count it —
+        over-charging a plan that in fact died before its reveal only errs
+        toward refusing/escalating earlier, never toward extra disclosure.
+        A never-seen signature keeps ``budget=None``; a later successful
+        record initializes it with these observations already spent."""
+        for node in _iter_resizes(plan):
+            self._state.setdefault(self.signature(node), _SigState()).observed += 1
 
     # -- recording ------------------------------------------------------------
     def record(self, plan: PlanNode, report: ExecutionReport) -> None:
         """Charge one observation per executed non-NoTrim Resize, matching
         plan Resize nodes (post-order == execution order) to the report's
         per-node resize info to learn (N, T) for budget initialization."""
-        resizes: List[Resize] = []
-
-        def collect(node: PlanNode) -> None:
-            for c in node.children():
-                collect(c)
-            if isinstance(node, Resize):
-                resizes.append(node)
-
-        collect(plan)
+        resizes = list(_iter_resizes(plan, include_notrim=True))
         infos = [s.extra for s in report.nodes if s.node.startswith("Resize")]
         if len(infos) != len(resizes):
             raise RuntimeError(

@@ -1,0 +1,202 @@
+"""Query admission batching: one engine pass for many tenants (DESIGN.md §11).
+
+The multi-tenant service used to execute admitted plans strictly serially, so
+every query paid the full MPC round latency alone. This scheduler amortizes
+it: queries from independent tenants whose *admitted* physical plans are
+structurally identical — same normalized-plan fingerprint over the same
+pow2-bucketed base-table shapes, i.e. the same identity the prepared-statement
+plan cache computes, refined by bound literals and any accountant noise
+rewrites — land in one bucket and execute as ONE stacked
+:meth:`~repro.engine.executor.Engine.execute_batch` pass. Kogge-Stone levels,
+a2b conversions, bitonic stages, and their PRF folds run once for the whole
+batch; per-tenant results and :class:`ExecutionReport`s are demuxed with
+bit-exact parity against serial execution.
+
+Barrier-free pipeline: there is no global batch barrier. A bucket executes
+the moment it fills (``max_batch``), and partially-filled buckets are flushed
+once their oldest entry ages past ``max_wait_s`` (checked on every
+``submit``/``poll``/``drain``), so a mixed stream of query shapes keeps
+flowing instead of waiting for stragglers that will never come.
+
+Privacy: admission happens at ``submit`` time, against the accountant's real
+state *plus* a shared ``planned`` group covering every query admitted in the
+open window — K queued same-signature queries spend K observations at
+admission, exactly as a serial admit/record interleaving would, even though
+their ``record`` calls all land after the batched run. Inside the engine,
+every slot folds its own noise counter (fresh i.i.d. noise per query), so
+batching never merges CRT observations across tenants. Plans containing
+non-batchable operators (singleton aggregates, post-reveal hooks) execute
+immediately as a serial batch-of-1.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Dict, List, Tuple
+
+from ..plan.registry import plan_batchable
+from ..sql.compile import plan_fingerprint
+
+__all__ = ["QueryScheduler", "QueryTicket"]
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryTicket:
+    """Handle for an enqueued query; results come back from ``drain`` in
+    ticket order (``QueryResult.tenant``/``sql`` identify the query)."""
+
+    id: int
+    tenant: str
+    sql: str
+    batched: bool  # False: executed immediately as a serial batch-of-1
+
+
+@dataclasses.dataclass
+class _Pending:
+    ticket: QueryTicket
+    aq: object  # service.AdmittedQuery
+    enqueued_at: float
+
+
+class QueryScheduler:
+    """Shape-bucketed admission queue over one :class:`AnalyticsService`."""
+
+    def __init__(
+        self,
+        service,
+        max_batch: int = 16,
+        max_wait_s: float = 0.05,
+        clock=time.monotonic,
+    ):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.service = service
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
+        self.clock = clock
+        self._buckets: "OrderedDict[Tuple, List[_Pending]]" = OrderedDict()
+        self._done: Dict[int, object] = {}  # ticket id -> QueryResult
+        self._next_id = 0
+        # accountant admission group for the open batching window: spans every
+        # admitted-but-not-yet-recorded query so same-signature queries cannot
+        # jointly overdraw a budget (see PrivacyAccountant.admit)
+        self._planned: Dict[Tuple[str, str], int] = {}
+        self.stats = {
+            "enqueued": 0,
+            "batches": 0,
+            "batched_queries": 0,
+            "serial_fallbacks": 0,
+            "full_flushes": 0,
+            "deadline_flushes": 0,
+            "forced_flushes": 0,
+            "max_batch_seen": 0,
+        }
+
+    # -- admission ------------------------------------------------------------
+    def _bucket_key(self, aq) -> Tuple:
+        # the plan cache's identity (template fingerprint x placement x
+        # strategy x pow2-bucketed shapes) groups rebindable queries; stacked
+        # execution additionally needs identical literals and noise configs,
+        # which the *admitted* plan's full fingerprint pins down
+        return (plan_fingerprint(aq.admitted), self.service._shape_key())
+
+    def submit(self, tenant: str, sql: str) -> QueryTicket:
+        """Compile, admission-check, and enqueue one query. Full buckets and
+        deadline-expired buckets flush immediately (barrier-free)."""
+        self.poll()  # deadline check on every submit, whatever path follows
+        aq = self.service._admit(tenant, sql, planned=self._planned)
+        tid = self._next_id
+        self._next_id += 1
+        self.stats["enqueued"] += 1
+        if not plan_batchable(aq.admitted):
+            ticket = QueryTicket(tid, tenant, sql, batched=False)
+            self.stats["serial_fallbacks"] += 1
+            self._done[tid] = self.service._execute_admitted(aq, self._planned)
+            return ticket
+        ticket = QueryTicket(tid, tenant, sql, batched=True)
+        key = self._bucket_key(aq)
+        bucket = self._buckets.setdefault(key, [])
+        bucket.append(_Pending(ticket, aq, self.clock()))
+        if len(bucket) >= self.max_batch:
+            self._flush(key, "full_flushes")
+        return ticket
+
+    # -- execution ------------------------------------------------------------
+    def _flush(self, key: Tuple, reason: str) -> None:
+        """Execute one bucket. Failure accounting is conservative: a query
+        whose execution may have revealed its noisy sizes but could not be
+        recorded is charged to the accountant's real state
+        (``charge_failed``) — the attacker may hold the sample — and its
+        window reservation is then released deterministically, so the shared
+        ``planned`` dict never carries state past the flush."""
+        entries = self._buckets.pop(key)
+        k = len(entries)
+        acct = self.service.accountant
+        try:
+            results = self.service.engine.execute_batch(
+                [e.aq.admitted for e in entries]
+            )
+        except Exception:
+            # the pass may have died after per-slot Resizes already revealed
+            # sizes: charge every slot rather than leak a free observation
+            for e in entries:
+                acct.charge_failed(e.aq.admitted)
+                acct.release_planned(e.aq.admitted, self._planned)
+            raise
+        self.stats["batches"] += 1
+        self.stats["batched_queries"] += k
+        self.stats[reason] += 1
+        self.stats["max_batch_seen"] = max(self.stats["max_batch_seen"], k)
+        first_err: Exception | None = None
+        for e, (out, report) in zip(entries, results):
+            try:
+                self._done[e.ticket.id] = self.service._finalize(
+                    e.aq, out, report, batch_slots=k
+                )
+            except Exception as err:  # demux/record failure for THIS slot only
+                if not e.aq.recorded:  # post-record reveal failures: charged
+                    acct.charge_failed(e.aq.admitted)
+                if first_err is None:
+                    first_err = err
+            finally:
+                acct.release_planned(e.aq.admitted, self._planned)
+        if first_err is not None:
+            # sibling slots' results were still delivered above
+            raise first_err
+
+    def poll(self) -> int:
+        """Flush buckets whose oldest entry aged past the deadline; returns
+        the number of buckets flushed."""
+        now = self.clock()
+        due = [
+            key
+            for key, entries in self._buckets.items()
+            if entries and now - entries[0].enqueued_at >= self.max_wait_s
+        ]
+        for key in due:
+            self._flush(key, "deadline_flushes")
+        return len(due)
+
+    def drain(self, force: bool = True) -> List:
+        """Execute queued buckets (all when ``force``, else only those past
+        the deadline) and return completed :class:`QueryResult`s in ticket
+        order. Once the queue is empty the admission window closes."""
+        if force:
+            for key in list(self._buckets):
+                self._flush(key, "forced_flushes")
+        else:
+            self.poll()
+        out = [self._done.pop(tid) for tid in sorted(self._done)]
+        if not self._buckets:
+            self._planned.clear()  # window closed; everything is recorded
+        return out
+
+    # -- introspection --------------------------------------------------------
+    @property
+    def n_pending(self) -> int:
+        return sum(len(b) for b in self._buckets.values())
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self._buckets)

@@ -23,6 +23,13 @@ Two service-level layers sit on top (DESIGN.md §9):
   budget before execution and charged after (accountant.py). Budgets are
   global across tenants.
 
+A third layer batches admissions (DESIGN.md §11): ``enqueue()``/``drain()``
+route through :class:`~repro.service.scheduler.QueryScheduler`, which groups
+same-fingerprint queries from independent tenants into shape-bucketed batches
+and executes each as ONE stacked engine pass (``Engine.execute_batch``); the
+synchronous ``submit()`` is the batch-of-1 special case of the same
+admit -> execute -> finalize pipeline.
+
 Per-query noise freshness: the Engine folds a monotonically increasing
 counter into every Resizer's PRNG key, so repeated executions of the same
 plan draw i.i.d. noise — exactly the attacker model CRT prices.
@@ -54,7 +61,7 @@ from ..plan.policies import insert_resizers
 from ..core.resizer import ResizerConfig
 from .accountant import PrivacyAccountant, QueryRefused, strategy_key
 
-__all__ = ["AnalyticsService", "TenantSession", "QueryResult"]
+__all__ = ["AnalyticsService", "TenantSession", "QueryResult", "AdmittedQuery"]
 
 
 def _bucket_pow2(n: int) -> int:
@@ -73,6 +80,23 @@ class QueryResult:
     compile_seconds: float
     accountant_seconds: float
     escalations: List[Dict]
+    batch_slots: int = 1  # size of the engine pass this query rode in
+
+
+@dataclasses.dataclass
+class AdmittedQuery:
+    """A compiled + admission-checked query awaiting execution (the unit the
+    scheduler buckets). ``admitted`` is the accountant-rewritten plan."""
+
+    tenant: str
+    sql: str
+    plan: PlanNode
+    admitted: PlanNode
+    cache_hit: bool
+    compile_seconds: float
+    accountant_seconds: float
+    escalations: List[Dict]
+    recorded: bool = False  # set once accountant.record committed
 
 
 class TenantSession:
@@ -82,6 +106,10 @@ class TenantSession:
 
     def submit(self, sql: str) -> QueryResult:
         return self.service.submit(self.tenant, sql)
+
+    def enqueue(self, sql: str):
+        """Queue for batched execution; results arrive via ``service.drain``."""
+        return self.service.enqueue(self.tenant, sql)
 
 
 class AnalyticsService:
@@ -99,6 +127,8 @@ class AnalyticsService:
         plan_cache_size: int = 256,
         reveal_results: bool = True,
         reorder_joins: bool = True,
+        batch_max: int = 16,
+        batch_wait_s: float = 0.05,
     ):
         self.tables = tables
         self.catalog = catalog or Catalog.from_tables(tables)
@@ -114,6 +144,11 @@ class AnalyticsService:
         )
         self._plan_cache: "OrderedDict" = OrderedDict()
         self._plan_cache_max = plan_cache_size
+        from .scheduler import QueryScheduler
+
+        self.scheduler = QueryScheduler(
+            self, max_batch=batch_max, max_wait_s=batch_wait_s
+        )
         self.stats = {
             "queries": 0,
             "plan_cache_hits": 0,
@@ -179,41 +214,107 @@ class AnalyticsService:
         return plan, hit, time.perf_counter() - t0
 
     # -- the query path -------------------------------------------------------
-    def submit(self, tenant: str, sql: str) -> QueryResult:
+    def _admit(self, tenant: str, sql: str, planned=None) -> AdmittedQuery:
+        """Compile + admission-check one query (shared by the synchronous
+        path and the scheduler). ``planned`` threads the accountant's
+        cross-query admission group through a batching window."""
         plan, hit, compile_s = self.compile(sql)
         ta = time.perf_counter()
         try:
-            admitted, escalations = self.accountant.admit(plan)
+            admitted, escalations = self.accountant.admit(plan, planned)
         except QueryRefused:
             self.stats["refusals"] += 1
             raise
-        acct_s = time.perf_counter() - ta
-
-        out, report = self.engine.execute(admitted)
-
-        ta = time.perf_counter()
-        self.accountant.record(admitted, report)
-        acct_s += time.perf_counter() - ta
-
-        self.stats["queries"] += 1
-        self.stats["per_tenant"][tenant] = self.stats["per_tenant"].get(tenant, 0) + 1
-        rows = out.reveal_true_rows() if self.reveal_results else None
-        post = lookup(type(admitted)).post_reveal
-        if rows is not None and post is not None:
-            # operator-defined client-side derivation (e.g. AVG = sum // cnt)
-            rows = post(admitted, rows)
-        return QueryResult(
+        return AdmittedQuery(
             tenant=tenant,
             sql=sql,
-            plan=admitted,
+            plan=plan,
+            admitted=admitted,
+            cache_hit=hit,
+            compile_seconds=compile_s,
+            accountant_seconds=time.perf_counter() - ta,
+            escalations=escalations,
+        )
+
+    def _finalize(
+        self,
+        aq: AdmittedQuery,
+        out: SecretTable,
+        report: ExecutionReport,
+        batch_slots: int = 1,
+    ) -> QueryResult:
+        """Record the executed query's observations, update counters, and
+        reveal — identical for serial and batched (demuxed) executions."""
+        ta = time.perf_counter()
+        self.accountant.record(aq.admitted, report)
+        aq.recorded = True  # failure past this point must not charge_failed
+        acct_s = aq.accountant_seconds + (time.perf_counter() - ta)
+
+        self.stats["queries"] += 1
+        self.stats["per_tenant"][aq.tenant] = (
+            self.stats["per_tenant"].get(aq.tenant, 0) + 1
+        )
+        rows = out.reveal_true_rows() if self.reveal_results else None
+        post = lookup(type(aq.admitted)).post_reveal
+        if rows is not None and post is not None:
+            # operator-defined client-side derivation (e.g. AVG = sum // cnt)
+            rows = post(aq.admitted, rows)
+        return QueryResult(
+            tenant=aq.tenant,
+            sql=aq.sql,
+            plan=aq.admitted,
             table=out,
             rows=rows,
             report=report,
-            cache_hit=hit,
-            compile_seconds=compile_s,
+            cache_hit=aq.cache_hit,
+            compile_seconds=aq.compile_seconds,
             accountant_seconds=acct_s,
-            escalations=escalations,
+            escalations=aq.escalations,
+            batch_slots=batch_slots,
         )
+
+    def _execute_admitted(self, aq: AdmittedQuery, planned) -> QueryResult:
+        """Serial batch-of-1: execute + finalize with the failure-accounting
+        protocol (the one shared code path for sync submits and the
+        scheduler's non-batchable fallback — privacy-critical, keep single)."""
+        try:
+            out, report = self.engine.execute(aq.admitted)
+            return self._finalize(aq, out, report)
+        except Exception:
+            # execution may have revealed noisy sizes that record() never
+            # charged — price them conservatively (see charge_failed); a
+            # post-record failure (reveal/post_reveal) is already charged
+            if not aq.recorded:
+                self.accountant.charge_failed(aq.admitted)
+            raise
+        finally:
+            # recorded (or charged above): the window reservation must not
+            # double-count it
+            self.accountant.release_planned(aq.admitted, planned)
+
+    def submit(self, tenant: str, sql: str) -> QueryResult:
+        """Synchronous execution — admission + a batch-of-1 engine pass.
+
+        Shares the scheduler's admission group, so a sync submit landing in
+        the middle of an open batching window is charged against the queued
+        (admitted-but-unrecorded) observations too."""
+        self.scheduler.poll()  # sync traffic must not starve queued buckets
+        planned = self.scheduler._planned
+        aq = self._admit(tenant, sql, planned=planned)
+        return self._execute_admitted(aq, planned)
+
+    # -- batched admission (DESIGN.md §11) ------------------------------------
+    def enqueue(self, tenant: str, sql: str):
+        """Admit ``sql`` into the batching queue; same-bucket queries execute
+        as one stacked engine pass. Returns a :class:`~repro.service.scheduler.
+        QueryTicket`; fetch results with :meth:`drain`."""
+        return self.scheduler.submit(tenant, sql)
+
+    def drain(self, force: bool = True) -> List[QueryResult]:
+        """Flush the batching queue (all buckets when ``force``, else only
+        full/deadline-expired ones) and return completed results in
+        submission order."""
+        return self.scheduler.drain(force=force)
 
     # -- reporting ------------------------------------------------------------
     def cache_stats(self) -> Dict[str, float]:
@@ -229,5 +330,9 @@ class AnalyticsService:
         return {
             **self.stats,
             "plan_cache": self.cache_stats(),
+            # process-wide: Engine._JIT_CACHE is shared by every Engine, so
+            # these counters span all services in the process
+            "jit_cache": {**Engine.jit_cache_stats(), "scope": "process"},
+            "scheduler": self.scheduler.stats,
             "accountant": self.accountant.status(),
         }

@@ -19,10 +19,10 @@ whose size divides the model-axis extent gets "model". This yields:
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 __all__ = [
     "make_param_specs",

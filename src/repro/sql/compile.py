@@ -69,10 +69,8 @@ from .parser import (
     Condition,
     CountDistinctItem,
     CountStar,
-    OrExpr,
     SelectStmt,
     SumItem,
-    TableRef,
     parse,
 )
 

@@ -1,7 +1,6 @@
 """Unit + property tests for boolean circuits (comparisons, conversions)."""
 import jax
 import numpy as np
-import pytest
 
 from repro.core.circuits import (
     a2b,

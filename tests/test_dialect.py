@@ -2,7 +2,6 @@
 GROUP BY — compiled SQL executes with per-node ledger entries and matches the
 plaintext oracle; projection narrows payload and reveal."""
 import jax
-import numpy as np
 import pytest
 
 from repro.core.noise import BetaNoise

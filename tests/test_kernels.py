@@ -10,7 +10,6 @@ from repro.kernels.bitonic_stage.ref import bitonic_swap_ref
 from repro.kernels.rss_gate.ops import gate
 from repro.kernels.rss_gate.ref import rss_gate_ref
 from repro.kernels.shuffle_gather.ops import gather_rows
-from repro.kernels.shuffle_gather.ref import shuffle_gather_ref
 
 rng = np.random.default_rng(7)
 

@@ -1,16 +1,12 @@
 """Launch layer: roofline HLO parsing, mesh rules, sharding specs, and the
 subprocess-level fault-tolerance drill (simulated failure + auto-resume)."""
-import json
 import os
 import subprocess
 import sys
 
-import jax
-import numpy as np
 import pytest
 
 from repro.launch.roofline import (
-    CollectiveStats,
     Roofline,
     parse_collectives,
     shape_bytes,

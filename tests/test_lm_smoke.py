@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, get_config
-from repro.models import decode_step, forward, init_caches, init_params, loss_fn
+from repro.models import decode_step, forward, init_caches, init_params
 from repro.train import AdamWConfig, adamw_init, make_train_step
 
 

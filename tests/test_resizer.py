@@ -9,12 +9,11 @@ from repro.core.noise import (
     ConstantNoise,
     NoTrim,
     RevealNoise,
-    TruncatedLaplace,
     UniformNoise,
     shrinkwrap_default,
 )
 from repro.core.prf import setup_prf
-from repro.core.resizer import Resizer, ResizerConfig, oracle_true_count
+from repro.core.resizer import Resizer, ResizerConfig
 from repro.ops import SecretTable
 
 PRF = setup_prf(jax.random.PRNGKey(4))

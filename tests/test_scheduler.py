@@ -1,0 +1,361 @@
+"""Query admission batching (DESIGN.md §11): batched-vs-serial parity,
+accountant isolation, deadline flush, and serial fallback for non-batchable
+plans."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.noise import ConstantNoise, NoTrim, TruncatedLaplace
+from repro.data import generate_healthlnk
+from repro.plan.registry import plan_batchable
+from repro.service import AnalyticsService, PrivacyAccountant, QueryScheduler
+from repro.service.accountant import _SigState
+
+JOIN_SQL = (
+    "SELECT DISTINCT d.pid FROM diagnoses d, medications m "
+    "WHERE d.pid = m.pid AND d.icd9 = 390 AND m.med = 1"
+)
+GROUP_SQL = "SELECT major_icd9, COUNT(*) AS c FROM diagnoses GROUP BY major_icd9"
+PROJECT_SQL = "SELECT pid, icd9 FROM diagnoses WHERE icd9 = 390"
+
+
+@pytest.fixture(scope="module")
+def data():
+    return generate_healthlnk(n=8, seed=3, aspirin_frac=0.5, icd_heart_frac=0.4)
+
+
+def make_service(tables, noise, placement="after_joins", **kw):
+    kw.setdefault("batch_wait_s", 60.0)  # tests flush explicitly
+    return AnalyticsService(
+        tables,
+        noise=noise,
+        addition="sequential",
+        placement=placement,
+        accountant=PrivacyAccountant(policy="escalate"),
+        key=jax.random.PRNGKey(9),
+        **kw,
+    )
+
+
+def assert_result_parity(serial, batched):
+    """Bit-exact result + per-node ledger parity (seconds excluded: wall
+    time is the one thing batching is supposed to change)."""
+    assert len(serial) == len(batched)
+    for rs, rb in zip(serial, batched):
+        assert set(rs.rows) == set(rb.rows)
+        for c in rs.rows:
+            np.testing.assert_array_equal(rs.rows[c], rb.rows[c])
+        # shares, not just revealed values, must match the serial run
+        for c in rs.table.cols:
+            np.testing.assert_array_equal(
+                np.asarray(rs.table.col(c).shares),
+                np.asarray(rb.table.col(c).shares),
+            )
+        ds, db = rs.report.to_dict(), rb.report.to_dict()
+        assert len(ds["nodes"]) == len(db["nodes"])
+        for ns, nb in zip(ds["nodes"], db["nodes"]):
+            for field in ("node", "n_in", "n_ins", "n_out", "bytes_per_party",
+                          "rounds", "extra"):
+                assert ns[field] == nb[field], (field, ns, nb)
+        assert ds["total_bytes"] == db["total_bytes"]
+        assert ds["total_rounds"] == db["total_rounds"]
+
+
+# -----------------------------------------------------------------------------
+# Batched-vs-serial parity
+# -----------------------------------------------------------------------------
+
+def test_batched_matches_serial_fully_stacked(data):
+    """No Resizers: the whole plan runs as one vmapped pass; every slot's
+    shares, rows, and per-node (bytes, rounds) equal the serial run's."""
+    tables, _ = data
+    K = 3
+    svc_s = make_service(tables, NoTrim(), placement="none")
+    serial = [svc_s.submit(f"t{i}", GROUP_SQL) for i in range(K)]
+
+    svc_b = make_service(tables, NoTrim(), placement="none")
+    tickets = [svc_b.enqueue(f"t{i}", GROUP_SQL) for i in range(K)]
+    results = svc_b.drain()
+    assert [t.batched for t in tickets] == [True] * K
+    assert all(r.batch_slots == K for r in results)
+    assert_result_parity(serial, results)
+    bs = svc_b.engine.last_batch_stats
+    assert bs["slots"] == K and bs["stacked_nodes"] >= 1
+    assert bs["split_nodes"] == 0
+
+
+def test_batched_matches_serial_through_resize_divergence(data):
+    """With Resizers, each slot draws its own fresh noise (counter parity
+    with serial submission order); divergent trim sizes split the batch and
+    the per-slot tail still reproduces serial execution bit-exactly."""
+    tables, _ = data
+    K = 3
+    noise = TruncatedLaplace(eps=0.5, sensitivity=4)
+    svc_s = make_service(tables, noise)
+    serial = [svc_s.submit(f"t{i}", JOIN_SQL) for i in range(K)]
+
+    svc_b = make_service(tables, noise)
+    for i in range(K):
+        svc_b.enqueue(f"t{i}", JOIN_SQL)
+    results = svc_b.drain()
+    assert_result_parity(serial, results)
+    # the resize infos (noisy revealed sizes) per slot match serial exactly
+    s_sizes = [
+        [n.extra.get("s") for n in r.report.nodes if n.node.startswith("Resize")]
+        for r in serial
+    ]
+    b_sizes = [
+        [n.extra.get("s") for n in r.report.nodes if n.node.startswith("Resize")]
+        for r in results
+    ]
+    assert s_sizes == b_sizes
+    # noise counters advanced identically
+    assert svc_s.engine._resize_ctr == svc_b.engine._resize_ctr
+
+
+def test_batch_then_serial_continues_counter_stream(data):
+    """A serial submit after a drained batch folds the counter a serial-only
+    service would have used for its (K+1)-th query."""
+    tables, _ = data
+    noise = TruncatedLaplace(eps=0.5, sensitivity=4)
+    svc_s = make_service(tables, noise)
+    serial = [svc_s.submit(f"t{i}", JOIN_SQL) for i in range(3)]
+
+    svc_b = make_service(tables, noise)
+    svc_b.enqueue("a", JOIN_SQL)
+    svc_b.enqueue("b", JOIN_SQL)
+    batched = svc_b.drain()
+    tail = svc_b.submit("c", JOIN_SQL)
+    assert_result_parity(serial, batched + [tail])
+
+
+# -----------------------------------------------------------------------------
+# Accountant isolation
+# -----------------------------------------------------------------------------
+
+def test_accountant_charges_each_slot_individually(data):
+    """K batched same-signature queries consume K observations — batching
+    must never merge CRT observations across tenants."""
+    tables, _ = data
+    K = 3
+    svc = make_service(tables, TruncatedLaplace(eps=0.5, sensitivity=4))
+    for i in range(K):
+        svc.enqueue(f"t{i}", JOIN_SQL)
+    svc.drain()
+    (sig,) = svc.accountant.status()
+    assert sig["observed"] == K
+
+
+def test_accountant_does_not_cross_charge_between_tenants(data):
+    """Tenant A's batched query spends nothing from tenant B's (different-
+    signature) budget, even when both ride the same drain window."""
+    tables, _ = data
+    svc = make_service(tables, TruncatedLaplace(eps=0.5, sensitivity=4))
+    svc.enqueue("alice", JOIN_SQL)
+    svc.enqueue("bob", JOIN_SQL.replace("390", "414"))  # distinct signature
+    results = svc.drain()
+    assert len(results) == 2
+    sigs = svc.accountant.status()
+    assert len(sigs) == 2
+    assert all(s["observed"] == 1 for s in sigs)
+
+
+def test_window_admission_group_prevents_joint_overdraw(data):
+    """Two queued same-signature queries with one remaining observation:
+    the second must escalate at admission (exactly as a serial admit/record
+    interleaving would), even though neither has recorded yet."""
+    tables, _ = data
+    svc = make_service(tables, ConstantNoise(0.2))
+    aq = svc._admit("probe", JOIN_SQL)
+    (resize,) = [
+        n for n in _walk(aq.admitted) if type(n).__name__ == "Resize"
+    ]
+    sig = svc.accountant.signature(resize)
+    svc.accountant._state[sig] = _SigState(observed=2, budget=3, n=64, t=4)
+
+    svc.enqueue("alice", JOIN_SQL)  # spends the last remaining observation
+    svc.enqueue("bob", JOIN_SQL)  # must escalate at admission
+    results = svc.drain()
+    noises = [
+        [n.extra.get("skipped", False) for n in r.report.nodes
+         if n.node.startswith("Resize")]
+        for r in results
+    ]
+    assert noises[0] == [False]  # alice's resize really trimmed
+    assert noises[1] == [True]  # bob's escalated to NoTrim (const has no rung)
+    assert svc.accountant._state[sig].observed == 3  # never overdrawn
+
+
+def _walk(plan):
+    yield plan
+    for c in plan.children():
+        yield from _walk(c)
+
+
+def test_refused_query_rolls_back_window_reservations(data):
+    """A refused admit must not leak its partial reservations into the shared
+    admission window — repeated refusals would otherwise shrink every other
+    signature's effective budget forever."""
+    from repro.service import QueryRefused
+
+    tables, _ = data
+    svc = AnalyticsService(
+        tables, noise=ConstantNoise(0.2), addition="sequential",
+        placement="all_internal",  # filter resizes + join resize per query
+        accountant=PrivacyAccountant(policy="refuse"),
+        key=jax.random.PRNGKey(9), batch_wait_s=60.0,
+    )
+    aq = svc._admit("probe", JOIN_SQL)
+    join_resize = [
+        n for n in _walk(aq.admitted) if type(n).__name__ == "Resize"
+    ][-1]  # root-most resize (the join's)
+    sig = svc.accountant.signature(join_resize)
+    svc.accountant._state[sig] = _SigState(observed=1, budget=1, n=64, t=4)
+
+    for _ in range(5):
+        with pytest.raises(QueryRefused):
+            svc.enqueue("mallory", JOIN_SQL)
+    assert svc.scheduler._planned == {}  # nothing leaked
+    # the filter-resize signatures are untouched: a cheap filter query with
+    # its own budget must still be admitted
+    svc.enqueue("alice", "SELECT pid FROM diagnoses WHERE icd9 = 390")
+    (res,) = svc.drain()
+    assert res.rows is not None
+
+
+def test_demux_failure_charges_slot_and_keeps_siblings(data, monkeypatch):
+    """If one slot's record() fails after the batched pass ran, that slot's
+    disclosure is still charged (conservatively) to the accountant, its
+    siblings' results are still delivered, the error propagates, and the
+    shared admission window ends empty."""
+    tables, _ = data
+    K = 3
+    svc = make_service(tables, TruncatedLaplace(eps=0.5, sensitivity=4))
+    real_record = svc.accountant.record
+    calls = {"n": 0}
+
+    def flaky_record(plan, report):
+        calls["n"] += 1
+        if calls["n"] == 2:  # second slot's record blows up
+            raise RuntimeError("record exploded")
+        return real_record(plan, report)
+
+    monkeypatch.setattr(svc.accountant, "record", flaky_record)
+    for i in range(K):
+        svc.enqueue(f"t{i}", JOIN_SQL)
+    with pytest.raises(RuntimeError, match="record exploded"):
+        svc.drain()
+    results = svc.drain()  # siblings were finalized before the raise
+    assert len(results) == K - 1
+    assert svc.scheduler._planned == {}  # reservations fully released
+    # 2 recorded + 1 conservatively charged = K observations on the signature
+    (sig,) = svc.accountant.status()
+    assert sig["observed"] == K
+
+
+def test_batch_stats_shape_is_stable_across_fallbacks(data):
+    """`engine.last_batch_stats` carries the full physical-tally shape for
+    batch-of-1 and non-batchable drains too, not only vmapped passes."""
+    tables, _ = data
+    svc = make_service(tables, NoTrim(), placement="none")
+    svc.enqueue("a", GROUP_SQL)  # batch of one -> serial fallback
+    (res,) = svc.drain()
+    bs = svc.engine.last_batch_stats
+    assert bs["slots"] == 1 and bs["stacked_nodes"] == 0
+    assert bs["split_nodes"] == 0
+    assert bs["physical_rounds"] == res.report.total_rounds
+    assert bs["physical_bytes_per_party"] == res.report.total_bytes
+
+
+# -----------------------------------------------------------------------------
+# Flush policy
+# -----------------------------------------------------------------------------
+
+def test_full_bucket_flushes_immediately(data):
+    tables, _ = data
+    svc = make_service(tables, NoTrim(), placement="none", batch_max=2)
+    svc.enqueue("a", GROUP_SQL)
+    assert svc.scheduler.n_pending == 1
+    svc.enqueue("b", GROUP_SQL)  # bucket full -> barrier-free flush
+    assert svc.scheduler.n_pending == 0
+    assert svc.scheduler.stats["full_flushes"] == 1
+    assert len(svc.drain()) == 2
+
+
+def test_deadline_flushes_partial_bucket(data):
+    tables, _ = data
+    svc = make_service(tables, NoTrim(), placement="none")
+    now = [0.0]
+    svc.scheduler = QueryScheduler(
+        svc, max_batch=8, max_wait_s=0.5, clock=lambda: now[0]
+    )
+    svc.enqueue("a", GROUP_SQL)
+    assert svc.drain(force=False) == []  # deadline not reached
+    assert svc.scheduler.n_pending == 1
+    now[0] = 1.0
+    results = svc.drain(force=False)
+    assert len(results) == 1 and results[0].batch_slots == 1
+    assert svc.scheduler.stats["deadline_flushes"] == 1
+
+
+def test_any_submit_path_flushes_expired_buckets(data):
+    """The deadline is checked on every submit — including ones that take
+    the serial-fallback path — so a lone aged bucket cannot starve behind a
+    stream of non-batchable queries."""
+    tables, _ = data
+    svc = make_service(tables, NoTrim(), placement="none")
+    now = [0.0]
+    svc.scheduler = QueryScheduler(
+        svc, max_batch=8, max_wait_s=0.5, clock=lambda: now[0]
+    )
+    svc.enqueue("a", GROUP_SQL)
+    now[0] = 1.0  # bucket is past its deadline
+    svc.enqueue("b", "SELECT COUNT(*) FROM medications")  # serial fallback
+    assert svc.scheduler.n_pending == 0  # the aged bucket flushed first
+    assert svc.scheduler.stats["deadline_flushes"] == 1
+    assert len(svc.drain()) == 2
+
+
+def test_mixed_shapes_bucket_separately(data):
+    """Different fingerprints never share an engine pass; each bucket
+    executes with only its own slots."""
+    tables, _ = data
+    svc = make_service(tables, NoTrim(), placement="none")
+    svc.enqueue("a", GROUP_SQL)
+    svc.enqueue("b", PROJECT_SQL)
+    svc.enqueue("c", GROUP_SQL)
+    assert svc.scheduler.n_buckets == 2
+    results = svc.drain()
+    assert [r.batch_slots for r in results] == [2, 1, 2]
+    assert svc.scheduler.stats["batches"] == 2
+
+
+# -----------------------------------------------------------------------------
+# Non-batchable fallback
+# -----------------------------------------------------------------------------
+
+def test_singleton_aggregate_falls_back_to_serial(data):
+    tables, plain = data
+    svc = make_service(tables, NoTrim(), placement="none")
+    count_sql = "SELECT COUNT(*) FROM medications WHERE dosage = 325"
+    assert not plan_batchable(svc.compile(count_sql)[0])
+    t = svc.enqueue("alice", count_sql)
+    assert not t.batched
+    assert svc.scheduler.stats["serial_fallbacks"] == 1
+    assert svc.scheduler.n_pending == 0  # executed immediately, no bucket
+    (res,) = svc.drain()
+    assert res.batch_slots == 1
+    m = plain["medications"]
+    assert int(res.rows["cnt"][0]) == int((m["dosage"] == 325).sum())
+
+
+def test_mixed_batchable_and_fallback_results_in_ticket_order(data):
+    tables, _ = data
+    svc = make_service(tables, NoTrim(), placement="none")
+    svc.enqueue("a", GROUP_SQL)
+    svc.enqueue("b", "SELECT COUNT(*) FROM medications")
+    svc.enqueue("c", GROUP_SQL)
+    results = svc.drain()
+    assert [r.sql for r in results] == [
+        GROUP_SQL, "SELECT COUNT(*) FROM medications", GROUP_SQL,
+    ]

@@ -8,6 +8,7 @@ from repro.core.crt import attacker_estimate, crt_rounds
 from repro.core.noise import ConstantNoise, NoTrim, TruncatedLaplace
 from repro.data import generate_healthlnk, plaintext_oracle
 from repro.data.queries import QUERY_SQL
+from repro.engine import Engine
 from repro.service import (
     AnalyticsService,
     PrivacyAccountant,
@@ -129,6 +130,61 @@ def test_avg_rows_carry_derived_average(data):
     assert int(r.rows["d"][0]) == int(m["dosage"][mask].sum()) // max(
         int(mask.sum()), 1
     )
+
+
+# -----------------------------------------------------------------------------
+# Cache stats: a batched pass serving K slots counts K logical hits
+# -----------------------------------------------------------------------------
+
+def test_jit_cache_counts_k_logical_hits_for_batched_pass(data):
+    """One compiled program reused for K batch slots served K queries: the
+    jit-cache stats must say so (K-1 logical hits on the compiling pass, K
+    hits on every later reuse), and the plan cache likewise counts each
+    enqueued query's lookup."""
+    tables, _ = data
+    svc = AnalyticsService(
+        tables, noise=NoTrim(), placement="none", jit_ops=True,
+        key=jax.random.PRNGKey(9), batch_wait_s=60.0,
+    )
+    sql = "SELECT pid, icd9 FROM diagnoses WHERE icd9 = 390"
+    n_vmapped = 2  # Filter + Project run through the vmapped jit path
+    K = 3
+    Engine.reset_jit_stats()
+    for i in range(K):
+        svc.enqueue(f"t{i}", sql)
+    svc.drain()
+    stats = Engine.jit_cache_stats()
+    # one compile per vmapped node, each covering all K slots
+    assert stats["misses"] == n_vmapped
+    assert stats["hits"] == n_vmapped * (K - 1)
+    # plan cache: K lookups for the same template = 1 miss + K-1 logical hits
+    assert svc.cache_stats()["misses"] == 1
+    assert svc.cache_stats()["hits"] == K - 1
+
+    # a second identical batch reuses both compiled programs outright
+    for i in range(K):
+        svc.enqueue(f"t{i}", sql)
+    svc.drain()
+    stats2 = Engine.jit_cache_stats()
+    assert stats2["misses"] == n_vmapped
+    assert stats2["hits"] == n_vmapped * (2 * K - 1)
+
+
+def test_jit_cache_stats_count_serial_path_too(data):
+    tables, _ = data
+    svc = AnalyticsService(
+        tables, noise=NoTrim(), placement="none", jit_ops=True,
+        key=jax.random.PRNGKey(9),
+    )
+    sql = "SELECT pid FROM diagnoses WHERE icd9 = 414"
+    Engine.reset_jit_stats()
+    svc.session("a").submit(sql)
+    first = Engine.jit_cache_stats()
+    assert first["hits"] == 0 and first["misses"] > 0
+    svc.session("a").submit(sql)
+    second = Engine.jit_cache_stats()
+    assert second["misses"] == first["misses"]
+    assert second["hits"] == first["misses"]  # full reuse, node for node
 
 
 # -----------------------------------------------------------------------------

@@ -1,14 +1,11 @@
 """Unit tests: RSS share algebra and the interactive gates."""
 import jax
 import numpy as np
-import pytest
 
 from repro.core.ledger import measure_comm
-from repro.core.prf import setup_prf, zero_share_add, zero_share_xor
+from repro.core.prf import zero_share_add, zero_share_xor
 from repro.core.ring import RING32
 from repro.core.sharing import (
-    AShare,
-    BShare,
     and_,
     const_a,
     const_b,

@@ -1,8 +1,10 @@
 """Service-layer sweep: SQL compile time, plan-cache hit rate (including the
 prepared-statement literal sweep), accountant overhead, the escalation path,
-and the query-admission batching sweep (queries/sec serial vs batched at
-batch sizes 1/4/16 — DESIGN.md §11), over the HealthLnK queries submitted as
-SQL through :class:`AnalyticsService` by several tenants.
+the query-admission batching sweep (queries/sec serial vs batched at
+batch sizes 1/4/16 — DESIGN.md §11), and the durable-state persistence sweep
+(WAL-on vs WAL-off admit->execute latency + snapshot compaction time —
+DESIGN.md §12), over the HealthLnK queries submitted as SQL through
+:class:`AnalyticsService` by several tenants.
 
 Emits ``BENCH_service.json`` at the repo root with machine-readable per-node
 ``ExecutionReport.to_dict()`` payloads alongside the service counters (the
@@ -100,6 +102,75 @@ def _bench_batching(tables, rows: list, artifact: dict, quick: bool) -> None:
     }
 
 
+def _bench_persistence(tables, rows: list, artifact: dict, quick: bool) -> None:
+    """Admit->execute latency with the durable-state layer off vs on (WAL
+    journaling per intent/record + calibration feedback), plus snapshot
+    compaction time. The query carries a Resizer, so every submit journals
+    one intent and one record when the WAL is on."""
+    import shutil
+    import tempfile
+
+    repeats = 3 if quick else 5
+    sql = QUERY_SQL["dosage_study"]
+
+    def run_mode(state_dir):
+        svc = AnalyticsService(
+            tables,
+            noise=TruncatedLaplace(eps=0.5, sensitivity=4),
+            placement="after_joins",
+            accountant=PrivacyAccountant(policy="escalate"),
+            key=jax.random.PRNGKey(3),
+            state_dir=state_dir,
+        )
+        s = svc.session("bench")
+        s.submit(sql)  # warm: compile + first execution outside timing
+        lat, acct = [], []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            res = s.submit(sql)
+            lat.append(time.perf_counter() - t0)
+            acct.append(res.accountant_seconds)
+        return svc, sorted(lat)[repeats // 2], sorted(acct)[repeats // 2]
+
+    _, lat_off, acct_off = run_mode(None)
+    state_dir = tempfile.mkdtemp(prefix="reflex-state-bench-")
+    try:
+        svc_on, lat_on, acct_on = run_mode(state_dir)
+        ledger = svc_on.accountant.store
+        wal_bytes = ledger.wal_bytes
+        wal_records, _ = ledger.wal.read_from(0)
+        t0 = time.perf_counter()
+        svc_on.compact_state()
+        compaction_s = time.perf_counter() - t0
+    finally:
+        shutil.rmtree(state_dir, ignore_errors=True)
+
+    artifact["persistence"] = {
+        "sql": sql,
+        "repeats": repeats,
+        "wal_off_us_per_query": lat_off * 1e6,
+        "wal_on_us_per_query": lat_on * 1e6,
+        "overhead_us_per_query": (lat_on - lat_off) * 1e6,
+        "accountant_wal_off_us": acct_off * 1e6,
+        "accountant_wal_on_us": acct_on * 1e6,
+        "compaction_ms": compaction_s * 1e3,
+        "wal_records": len(wal_records),
+        "wal_bytes_before_compaction": wal_bytes,
+        "calibration_entries": len(svc_on.calibration),
+    }
+    rows.append((
+        "service_persistence_wal_off_us", lat_off * 1e6, "admit+execute, in-memory state"
+    ))
+    rows.append((
+        "service_persistence_wal_on_us", lat_on * 1e6,
+        f"intent+record journaled, {len(wal_records)} WAL records",
+    ))
+    rows.append((
+        "service_persistence_compaction_ms", compaction_s * 1e3,
+        f"snapshot of {wal_bytes} WAL bytes",
+    ))
+
+
 def run(quick: bool = False) -> list:
     n_rows = 12 if quick else N_ROWS
     rows: list[Row] = []
@@ -184,6 +255,9 @@ def run(quick: bool = False) -> list:
 
     # -- query admission batching: serial vs one stacked engine pass ----------
     _bench_batching(tables, rows, artifact, quick)
+
+    # -- durable state: WAL on/off latency + compaction (DESIGN.md §12) -------
+    _bench_persistence(tables, rows, artifact, quick)
 
     artifact["plan_cache"] = cache
     artifact["accountant"] = {

@@ -151,6 +151,11 @@ def plaintext_oracle(query: str, plain: Dict[str, Dict[str, np.ndarray]]):
         mask = m["med"] == MED_ASPIRIN
         total, cnt = int(m["dosage"][mask].sum()), int(mask.sum())
         return {"sum": total, "cnt": cnt, "avg": total // max(cnt, 1)}
+    if query in ("dosage_min", "dosage_max"):
+        vals = m["dosage"][m["med"] == MED_ASPIRIN]
+        if len(vals) == 0:
+            return None  # empty selection: the engine reveals zero rows
+        return int(vals.min() if query == "dosage_min" else vals.max())
     if query == "heart_or_circulatory":
         return int(
             ((d["icd9"] == ICD9_HEART_414) | (d["icd9"] == ICD9_CIRCULATORY)).sum()

@@ -17,6 +17,8 @@ from ..plan.nodes import (
     Filter,
     GroupByCount,
     Join,
+    Max,
+    Min,
     OrderBy,
     PlanNode,
     Project,
@@ -39,6 +41,8 @@ __all__ = [
     "projection_join_plan",
     "dosage_sum_plan",
     "dosage_avg_plan",
+    "dosage_min_plan",
+    "dosage_max_plan",
     "heart_or_circulatory_plan",
     "diag_breakdown_plan",
     "all_query_plans",
@@ -121,6 +125,19 @@ def dosage_avg_plan() -> PlanNode:
     return Avg(m, "dosage", name="avg_dosage")
 
 
+def dosage_min_plan() -> PlanNode:
+    """SELECT MIN(dosage) AS lo FROM medications WHERE med='aspirin' —
+    sort-head terminal aggregate over the bitonic machinery."""
+    m = Filter(Scan("medications"), [Predicate("med", "eq", MED_ASPIRIN)])
+    return Min(m, "dosage", name="lo")
+
+
+def dosage_max_plan() -> PlanNode:
+    """SELECT MAX(dosage) AS hi FROM medications WHERE med='aspirin'."""
+    m = Filter(Scan("medications"), [Predicate("med", "eq", MED_ASPIRIN)])
+    return Max(m, "dosage", name="hi")
+
+
 def heart_or_circulatory_plan() -> PlanNode:
     """SELECT COUNT(*) FROM diagnoses WHERE icd9='414' OR
     icd9='circulatory' — the first disjunctive predicate tree."""
@@ -149,6 +166,8 @@ def all_query_plans():
         "projection_join": projection_join_plan(),
         "dosage_sum": dosage_sum_plan(),
         "dosage_avg": dosage_avg_plan(),
+        "dosage_min": dosage_min_plan(),
+        "dosage_max": dosage_max_plan(),
         "heart_or_circulatory": heart_or_circulatory_plan(),
         "diag_breakdown": diag_breakdown_plan(),
     }
@@ -196,6 +215,12 @@ QUERY_SQL = {
         "SELECT AVG(dosage) AS avg_dosage FROM medications "
         f"WHERE med = {MED_ASPIRIN}"
     ),
+    "dosage_min": (
+        f"SELECT MIN(dosage) AS lo FROM medications WHERE med = {MED_ASPIRIN}"
+    ),
+    "dosage_max": (
+        f"SELECT MAX(dosage) AS hi FROM medications WHERE med = {MED_ASPIRIN}"
+    ),
     "heart_or_circulatory": (
         "SELECT COUNT(*) FROM diagnoses "
         f"WHERE icd9 = {ICD9_HEART_414} OR icd9 = {ICD9_CIRCULATORY}"
@@ -212,6 +237,8 @@ DIALECT_QUERIES = (
     "projection_join",
     "dosage_sum",
     "dosage_avg",
+    "dosage_min",
+    "dosage_max",
     "heart_or_circulatory",
     "diag_breakdown",
 )

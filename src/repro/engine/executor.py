@@ -269,6 +269,11 @@ class Engine:
         self._resize_ctr = 0
         self._last_resize_info: Optional[Dict] = None
         self.last_batch_stats: Dict = {}
+        # revealed-size feedback: called as hook(node, info) after every
+        # non-skipped Resize reveal-and-trim (serial and per-batch-slot alike).
+        # The service wires this to the CalibrationStore so sizes that are
+        # ALREADY public refine future planning — zero extra disclosure.
+        self.reveal_hook: Optional[Callable[[PlanNode, Dict], None]] = None
 
     def execute(self, plan: PlanNode) -> tuple[SecretTable, ExecutionReport]:
         if self.validate:
@@ -305,6 +310,8 @@ class Engine:
         if lookup(type(node)).provides_resize_info:
             extra = self._last_resize_info or {}
             self._last_resize_info = None
+            if self.reveal_hook is not None and extra and not extra.get("skipped"):
+                self.reveal_hook(node, extra)
         stats = NodeStats(
             node=node.describe(),
             n_in=n_ins[0] if n_ins else 0,

@@ -18,5 +18,7 @@ from .aggregate import (  # noqa: F401
     avg_column,
     count_distinct,
     count_valid,
+    max_column,
+    min_column,
     sum_column,
 )

@@ -1,4 +1,5 @@
-"""Terminal aggregates: COUNT(*), COUNT(DISTINCT col), SUM(col), AVG(col).
+"""Terminal aggregates: COUNT(*), COUNT(DISTINCT col), SUM(col), AVG(col),
+MIN(col), MAX(col).
 
 These produce 1-row tables. Additions are local under arithmetic sharing, so
 after a bit2a (2 rounds) / b2a (2 rounds) conversion the reduction is free —
@@ -9,6 +10,11 @@ AVG is the (sum, count) pair as arithmetic shares: secure division is
 disproportionately expensive in MPC, and every comparable engine (Conclave's
 aggregation backends, SPECIAL) reveals sum and count and divides in the
 clear. The service layer derives ``avg = sum // count`` at reveal time.
+
+MIN/MAX are a sort-head over the existing bitonic machinery: invalid rows
+sink past the extremum via the ORDER BY sentinel keying, so the head row of
+the sorted table IS the answer (and is itself invalid when no true rows
+exist — MIN over an empty selection reveals no row at all).
 """
 from __future__ import annotations
 
@@ -18,7 +24,14 @@ from ..core.sharing import mul
 from .distinct import oblivious_distinct
 from .table import SecretTable
 
-__all__ = ["count_valid", "count_distinct", "sum_column", "avg_column"]
+__all__ = [
+    "count_valid",
+    "count_distinct",
+    "sum_column",
+    "avg_column",
+    "min_column",
+    "max_column",
+]
 
 
 def count_valid(table: SecretTable, prf: PRFSetup, name: str = "cnt") -> SecretTable:
@@ -50,6 +63,38 @@ def sum_column(
     from ..core.sharing import const_b
 
     return SecretTable({name: one}, const_b(1, (1,)))
+
+
+def _extreme_column(
+    table: SecretTable, col: str, prf: PRFSetup, name: str, descending: bool
+) -> SecretTable:
+    """Sort-head extremum: one oblivious sort on ``col`` (invalid rows keyed
+    to the far sentinel so they sink past every true row), then a public
+    1-row head slice. The head row's validity bit is the \"selection was
+    non-empty\" bit, so an empty selection reveals nothing.
+
+    Only the aggregated column (plus validity) rides the bitonic network —
+    every other payload column would be sorted just to be discarded by the
+    1-row head, multiplying the sort's comparison traffic by the width."""
+    from .orderby import oblivious_orderby
+
+    slim = SecretTable({col: table.cols[col]}, table.valid)
+    out = oblivious_orderby(slim, col, prf, descending=descending, limit=1)
+    return SecretTable({name: out.cols[col]}, out.valid)
+
+
+def min_column(
+    table: SecretTable, col: str, prf: PRFSetup, name: str = "min"
+) -> SecretTable:
+    """MIN(col) over true rows -> 1-row table with a boolean-share word."""
+    return _extreme_column(table, col, prf, name, descending=False)
+
+
+def max_column(
+    table: SecretTable, col: str, prf: PRFSetup, name: str = "max"
+) -> SecretTable:
+    """MAX(col) over true rows -> 1-row table with a boolean-share word."""
+    return _extreme_column(table, col, prf, name, descending=True)
 
 
 def avg_column(

@@ -10,6 +10,8 @@ from .nodes import (  # noqa: F401
     CountDistinct,
     Sum,
     Avg,
+    Min,
+    Max,
     Resize,
     PlanNode,
 )

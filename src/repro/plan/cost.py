@@ -41,17 +41,44 @@ __all__ = ["CostModel", "BYTES", "sort_bytes", "shuffle_bytes", "resizer_bytes"]
 class CostModel:
     """Walks a plan, propagating (oblivious size N, estimated true size T,
     ncols) and summing comm bytes — dispatching per-operator formulas
-    through the registry."""
+    through the registry.
+
+    ``calibration`` (a :class:`repro.state.calibration.CalibrationStore`, or
+    any object with the same ``refine(node, est, noise)`` hook) replaces the
+    static selectivity defaults with sizes the engine has *already revealed*
+    for matching subplans: T becomes the observed E[S], and — when ``noise``
+    says placement will trim there — the oblivious size flowing upward
+    becomes the post-trim size. Join reordering then improves across
+    restarts with zero additional disclosure (DESIGN.md §12.4).
+    """
 
     table_sizes: Dict[str, int]
     table_cols: Dict[str, int]
     selectivity: float = 0.1  # planner's default per-predicate selectivity
     join_selectivity: float = 0.01
     noise: NoiseStrategy | None = None
+    calibration: object | None = None  # duck-typed: refine(node, est, noise)
 
     def estimate(self, node: PlanNode) -> Dict[str, float]:
         children = [self.estimate(c) for c in node.children()]
-        return lookup(type(node)).estimate(node, children, self)
+        est = lookup(type(node)).estimate(node, children, self)
+        if self.calibration is not None:
+            est = self.calibration.refine(node, est, self.noise)
+        return est
+
+    def _estimate_untrimmed(self, node: PlanNode) -> Dict[str, float]:
+        """Like :meth:`estimate` but the node's OWN output size is not
+        reduced to the post-trim E[S] (children still are). The Resizer
+        profitability decision must see the full pre-trim N at the candidate
+        node — otherwise calibration's own trim model makes every observed
+        node look already-small and placement stops inserting the very
+        Resizer that produced the observation."""
+        children = [self.estimate(c) for c in node.children()]
+        est = lookup(type(node)).estimate(node, children, self)
+        if self.calibration is not None:
+            # noise=None: calibrate T only, never the oblivious size
+            est = self.calibration.refine(node, est, None)
+        return est
 
     def plan_bytes(self, node: PlanNode) -> float:
         return self.estimate(node)["bytes"]
@@ -63,7 +90,7 @@ class CostModel:
         cost times the expected row reduction."""
         if self.noise is None:
             return True
-        est = self.estimate(node)
+        est = self._estimate_untrimmed(node)
         n, t, cols = int(est["n"]), int(est["t"]), int(est["cols"])
         s = min(t + self.noise.mean(n, t), n)
         saved_rows = n - s

@@ -33,6 +33,8 @@ __all__ = [
     "CountDistinct",
     "Sum",
     "Avg",
+    "Min",
+    "Max",
     "Resize",
 ]
 
@@ -229,6 +231,31 @@ class Avg(PlanNode):
 
     def describe(self) -> str:
         return f"Avg({self.col}->{self.name})"
+
+
+@dataclasses.dataclass
+class Min(PlanNode):
+    """MIN(col) over true rows -> 1-row table (sort-head, see
+    repro.ops.aggregate). An empty selection yields zero revealed rows."""
+
+    child: PlanNode
+    col: str
+    name: str = "min"
+
+    def describe(self) -> str:
+        return f"Min({self.col}->{self.name})"
+
+
+@dataclasses.dataclass
+class Max(PlanNode):
+    """MAX(col) over true rows -> 1-row table (sort-head)."""
+
+    child: PlanNode
+    col: str
+    name: str = "max"
+
+    def describe(self) -> str:
+        return f"Max({self.col}->{self.name})"
 
 
 @dataclasses.dataclass

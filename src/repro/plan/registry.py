@@ -61,6 +61,8 @@ from ..ops import (
     avg_column,
     count_distinct,
     count_valid,
+    max_column,
+    min_column,
     oblivious_distinct,
     oblivious_filter,
     oblivious_groupby_count,
@@ -78,6 +80,8 @@ from .nodes import (
     Filter,
     GroupByCount,
     Join,
+    Max,
+    Min,
     OrderBy,
     PlanNode,
     Project,
@@ -664,6 +668,53 @@ register(OperatorDef(
         None,
     ),
     post_reveal=_avg_post_reveal,
+    sql_shape="head",
+    singleton=True,
+    batchable=False,
+))
+
+
+def _minmax_schema(node, children, catalog) -> PlanSchema:
+    children[0].require(node.col, node)
+    return PlanSchema(OrderedDict({node.name: "b"}))
+
+
+def _minmax_estimate(node, children, cm) -> Dict:
+    # sort-head over the bitonic machinery: only the aggregated column rides
+    # the sort (ops.aggregate._extreme_column slims the table first), then a
+    # free public 1-row head slice
+    c = children[0]
+    n, cost = _sortish_estimate({**c, "cols": 1})
+    return {"n": 1, "t": 1, "cols": 1, "bytes": c["bytes"] + cost}
+
+
+def _minmax_render_head(kw: str, default_name: str):
+    # the default name is a dialect keyword — render the alias only when set
+    def render(r, node, schema):
+        alias = f" AS {node.name}" if node.name != default_name else ""
+        return f"{kw}({r.qual(schema, node.col)}){alias}", None
+
+    return render
+
+
+register(OperatorDef(
+    node_type=Min,
+    schema=_minmax_schema,
+    estimate=_minmax_estimate,
+    protocol=lambda node: lambda prf, t: min_column(t, node.col, prf, node.name),
+    render_head=_minmax_render_head("MIN", "min"),
+    sql_shape="head",
+    singleton=True,
+    batchable=False,
+))
+
+
+register(OperatorDef(
+    node_type=Max,
+    schema=_minmax_schema,
+    estimate=_minmax_estimate,
+    protocol=lambda node: lambda prf, t: max_column(t, node.col, prf, node.name),
+    render_head=_minmax_render_head("MAX", "max"),
     sql_shape="head",
     singleton=True,
     batchable=False,

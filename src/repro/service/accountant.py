@@ -27,6 +27,22 @@ strategy form a *new* signature: mixing draws from different distributions
 does not refund the attacker's spent observations (Eq. 1 assumes i.i.d.
 noise), so per-strategy accounting is conservative and correct.
 
+**Durability (DESIGN.md §12).** With a :class:`repro.state.JournalStore`
+attached, the ledger survives restarts and is shared across replicas via a
+two-phase **intent -> record** protocol: ``admit`` journals one *intent* per
+observation it is about to allow — durably, *before* the engine reveals
+anything — and ``record``/``charge_failed`` later journal the matching
+*record*/*charge*. An intent without a matching record (a crash between
+reveal and record, or a torn record line) stays open forever and counts
+against the budget exactly like a spent observation — the attacker may
+already hold the sample — so crash-replay refuses at-or-before where an
+uninterrupted run would, never after. A torn *intent* line means the append
+never returned, so the engine never ran: dropping it discloses nothing.
+Open intents owned by *this* session are excluded from ``remaining`` (they
+are already counted by the in-memory admission group ``planned``); foreign
+open intents — other live replicas' in-flight queries, or a dead session's
+conservative charges — are subtracted like observations.
+
 Simulation note: T is read from the Resizer's oracle info — the coordinator-
 side trusted state a real deployment would hold as each party's share of the
 accounting, or bound via a DP estimate.
@@ -34,6 +50,7 @@ accounting, or bound via a DP estimate.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import math
 from typing import Dict, List, Optional, Tuple
 
@@ -116,6 +133,10 @@ class _SigState:
     budget: Optional[int] = None  # set at first observation (needs N, T)
     n: int = 0
     t: int = 0
+    # open intents: journaled "about to reveal" charges not yet matched by a
+    # record (intent id -> owner session). Foreign entries count against the
+    # budget like observations (conservative: the sample may be out there).
+    intents: Dict[str, str] = dataclasses.field(default_factory=dict)
 
 
 class PrivacyAccountant:
@@ -128,6 +149,7 @@ class PrivacyAccountant:
         confidence: float = 0.999,
         policy: str = "escalate",  # "escalate" | "refuse"
         min_eps: float = 0.0625,
+        store=None,  # repro.state.JournalStore for a durable, shared ledger
     ):
         if policy not in ("escalate", "refuse"):
             raise ValueError(f"unknown policy {policy!r}")
@@ -138,6 +160,134 @@ class PrivacyAccountant:
         self._state: Dict[Tuple[str, str], _SigState] = {}
         self.escalation_count = 0
         self.refusal_count = 0
+        self._store = None
+        self._intent_ids = itertools.count(1)
+        if store is not None:
+            self.attach_store(store)
+
+    # -- durable journal (intent -> record; see module docstring) -------------
+    @property
+    def durable(self) -> bool:
+        return self._store is not None
+
+    @property
+    def store(self):
+        return self._store
+
+    def attach_store(self, store) -> None:
+        """Bind a :class:`repro.state.JournalStore` and fold its snapshot +
+        WAL into this accountant's state. Every open intent found on disk
+        belongs to some *other* (possibly dead) session and is conservatively
+        counted against its signature's budget from here on.
+
+        Observations charged while this accountant ran non-durably are NOT
+        discarded: they merge on top of the journal's state (summed observed,
+        the tighter budget). They stay local-only — the journal has no record
+        of them, so other replicas cannot see them — which errs toward
+        refusing earlier here, never toward extra disclosure anywhere."""
+        if self._store is not None:
+            raise ValueError("accountant already has a journal store")
+        pre = self._state
+        self._state = {}
+        self._store = store
+        with store.transaction() as sync:
+            self._sync(sync)
+        for sig, st_mem in pre.items():
+            st = self._state.get(sig)
+            if st is None:
+                self._state[sig] = st_mem
+                continue
+            st.observed += st_mem.observed
+            st.intents.update(st_mem.intents)
+            if st_mem.budget is not None and (
+                st.budget is None or st_mem.budget < st.budget
+            ):
+                st.budget, st.n, st.t = st_mem.budget, st_mem.n, st_mem.t
+
+    def _sync(self, sync) -> None:
+        if sync.reload:
+            self._state.clear()
+            if sync.snapshot:
+                self._load_snapshot(sync.snapshot.get("state", {}))
+        for rec in sync.records:
+            self._apply(rec)
+
+    def _apply(self, rec: Dict) -> None:
+        """Fold one journal record into in-memory state — the single place
+        WAL semantics are defined (startup replay, tail-sync, and this
+        session's own appends all route through here)."""
+        typ = rec.get("type")
+        if typ not in ("intent", "record", "charge"):
+            return
+        sig = (rec["fp"], rec["strat"])
+        st = self._state.setdefault(sig, _SigState())
+        if typ == "intent":
+            st.intents[rec["intent"]] = rec.get("owner", "?")
+            return
+        iid = rec.get("intent")
+        if iid is not None:
+            st.intents.pop(iid, None)
+        st.observed += 1
+        if typ == "record" and st.budget is None:
+            st.n, st.t = int(rec["n"]), int(rec["t"])
+            st.budget = int(rec["budget"])
+
+    def _load_snapshot(self, blob: Dict) -> None:
+        for entry in blob.get("sigs", []):
+            self._state[(entry["fp"], entry["strat"])] = _SigState(
+                observed=int(entry["observed"]),
+                budget=entry["budget"],
+                n=int(entry["n"]),
+                t=int(entry["t"]),
+                intents=dict(entry.get("intents", {})),
+            )
+
+    def _snapshot_blob(self) -> Dict:
+        return {
+            "sigs": [
+                {
+                    "fp": sig[0],
+                    "strat": sig[1],
+                    "observed": st.observed,
+                    "budget": st.budget,
+                    "n": st.n,
+                    "t": st.t,
+                    "intents": dict(st.intents),
+                }
+                for sig, st in self._state.items()
+            ]
+        }
+
+    def maybe_compact(self, max_wal_bytes: int = 1 << 16) -> bool:
+        """Fold the WAL into a snapshot once it outgrows ``max_wal_bytes``
+        (open intents are preserved in the snapshot — compaction never
+        forgets a conservative charge)."""
+        if self._store is None or self._store.wal_bytes <= max_wal_bytes:
+            return False
+        with self._store.transaction() as sync:
+            self._sync(sync)
+            self._store.compact(self._snapshot_blob())
+        return True
+
+    def _oldest_own_intent(self, sig: Tuple[str, str]) -> Optional[str]:
+        st = self._state.get(sig)
+        if st is None or self._store is None:
+            return None
+        own = self._store.session
+        for iid, owner in st.intents.items():  # dict preserves append order
+            if owner == own:
+                return iid
+        return None
+
+    def _reserved(self, sig: Tuple[str, str]) -> int:
+        """Foreign open intents: other replicas' in-flight observations and
+        dead sessions' conservative charges. This session's own open intents
+        are excluded — ``planned`` already counts them at admission."""
+        st = self._state.get(sig)
+        if st is None or not st.intents:
+            return 0
+        own = self._store.session if self._store is not None else None
+        return sum(1 for owner in st.intents.values() if owner != own)
 
     # -- signatures -----------------------------------------------------------
     def signature(self, node: Resize) -> Tuple[str, str]:
@@ -162,12 +312,41 @@ class PrivacyAccountant:
         st = self._state.get(sig)
         if st is None or st.budget is None:
             return None  # not yet observed: first observation is always free
-        return st.budget - st.observed
+        return st.budget - st.observed - self._reserved(sig)
+
+    def spent(self, sig: Tuple[str, str]) -> int:
+        """Observations charged against ``sig`` including open (foreign)
+        intents — the conservative count crash-recovery tests assert on."""
+        st = self._state.get(sig)
+        if st is None:
+            return 0
+        return st.observed + len(st.intents)
 
     # -- admission ------------------------------------------------------------
     def admit(
         self, plan: PlanNode, planned: Optional[Dict[Tuple[str, str], int]] = None
     ) -> Tuple[PlanNode, List[Dict]]:
+        """Durable path: sync foreign journal records, decide, then journal
+        one *intent* per reserved observation — all under the state lease, so
+        two replicas can never jointly overdraw — before any engine work.
+        Non-durable path: the in-memory decision alone (see below)."""
+        if self._store is None:
+            return self._admit_locked(plan, planned)[:2]
+        with self._store.transaction() as sync:
+            self._sync(sync)
+            admitted, escalations, added = self._admit_locked(plan, planned)
+            for sig, count in added.items():
+                for _ in range(count):
+                    iid = f"{self._store.session}-{next(self._intent_ids)}"
+                    self._apply(sync.append({
+                        "type": "intent", "fp": sig[0], "strat": sig[1],
+                        "intent": iid,
+                    }))
+            return admitted, escalations
+
+    def _admit_locked(
+        self, plan: PlanNode, planned: Optional[Dict[Tuple[str, str], int]] = None
+    ) -> Tuple[PlanNode, List[Dict], Dict[Tuple[str, str], int]]:
         """Check every Resize in the plan against its budget. Returns a
         (possibly rewritten) plan plus the escalation records. Raises
         :class:`QueryRefused` under ``policy='refuse'``. The input plan is
@@ -234,11 +413,13 @@ class PrivacyAccountant:
                     return node
 
         try:
-            return rewrite(plan), escalations
+            return rewrite(plan), escalations, added
         except QueryRefused:
             # a refused query executes nothing: roll this admit's reservations
             # back out of the (possibly caller-shared) admission group, or
             # they would shrink other queries' effective budgets forever
+            # (no intents were journaled yet — they are appended only after
+            # the whole rewrite succeeds)
             for sig, count in added.items():
                 _drop_reservations(planned, sig, count)
             raise
@@ -261,15 +442,34 @@ class PrivacyAccountant:
         over-charging a plan that in fact died before its reveal only errs
         toward refusing/escalating earlier, never toward extra disclosure.
         A never-seen signature keeps ``budget=None``; a later successful
-        record initializes it with these observations already spent."""
-        for node in _iter_resizes(plan):
-            self._state.setdefault(self.signature(node), _SigState()).observed += 1
+        record initializes it with these observations already spent.
+
+        Durable path: journals a *charge* record closing this plan's open
+        intent (the same net state a crash-replay would reach)."""
+        if self._store is None:
+            for node in _iter_resizes(plan):
+                self._state.setdefault(
+                    self.signature(node), _SigState()
+                ).observed += 1
+            return
+        with self._store.transaction() as sync:
+            self._sync(sync)
+            for node in _iter_resizes(plan):
+                sig = self.signature(node)
+                self._apply(sync.append({
+                    "type": "charge", "fp": sig[0], "strat": sig[1],
+                    "intent": self._oldest_own_intent(sig),
+                }))
 
     # -- recording ------------------------------------------------------------
     def record(self, plan: PlanNode, report: ExecutionReport) -> None:
         """Charge one observation per executed non-NoTrim Resize, matching
         plan Resize nodes (post-order == execution order) to the report's
-        per-node resize info to learn (N, T) for budget initialization."""
+        per-node resize info to learn (N, T) for budget initialization.
+
+        Durable path: each charge is journaled as a *record* closing the
+        oldest open intent this session holds for the signature (equivalent
+        observations are i.i.d. draws, so oldest-first matching is exact)."""
         resizes = list(_iter_resizes(plan, include_notrim=True))
         infos = [s.extra for s in report.nodes if s.node.startswith("Resize")]
         if len(infos) != len(resizes):
@@ -277,20 +477,38 @@ class PrivacyAccountant:
                 f"report has {len(infos)} resize entries for "
                 f"{len(resizes)} Resize nodes — cannot attribute observations"
             )
-        for node, info in zip(resizes, infos):
-            if isinstance(node.cfg.noise, NoTrim) or info.get("skipped"):
-                continue
-            sig = self.signature(node)
-            st = self._state.setdefault(sig, _SigState())
-            if st.budget is None:
-                st.n, st.t = int(info["n"]), int(info["t"])
-                st.budget = max(
-                    self.budget_for(
-                        node.cfg.noise, node.cfg.addition, st.n, st.t
-                    ),
-                    1,
+        charges = [
+            (node, info)
+            for node, info in zip(resizes, infos)
+            if not (isinstance(node.cfg.noise, NoTrim) or info.get("skipped"))
+        ]
+        if self._store is None:
+            for node, info in charges:
+                self._charge_observation(self.signature(node), node, info)
+            return
+        with self._store.transaction() as sync:
+            self._sync(sync)
+            for node, info in charges:
+                sig = self.signature(node)
+                n, t = int(info["n"]), int(info["t"])
+                budget = max(
+                    self.budget_for(node.cfg.noise, node.cfg.addition, n, t), 1
                 )
-            st.observed += 1
+                self._apply(sync.append({
+                    "type": "record", "fp": sig[0], "strat": sig[1],
+                    "intent": self._oldest_own_intent(sig),
+                    "n": n, "t": t, "budget": budget,
+                }))
+
+    def _charge_observation(self, sig, node, info) -> None:
+        st = self._state.setdefault(sig, _SigState())
+        if st.budget is None:
+            st.n, st.t = int(info["n"]), int(info["t"])
+            st.budget = max(
+                self.budget_for(node.cfg.noise, node.cfg.addition, st.n, st.t),
+                1,
+            )
+        st.observed += 1
 
     # -- reporting ------------------------------------------------------------
     def status(self) -> List[Dict]:
@@ -300,7 +518,10 @@ class PrivacyAccountant:
                 "strategy": sig[1],
                 "observed": st.observed,
                 "budget": st.budget,
-                "remaining": None if st.budget is None else st.budget - st.observed,
+                "remaining": None if st.budget is None
+                else st.budget - st.observed - self._reserved(sig),
+                "reserved": self._reserved(sig),
+                "open_intents": len(st.intents),
                 "n": st.n,
                 "t": st.t,
             }

@@ -190,6 +190,9 @@ class QueryScheduler:
         out = [self._done.pop(tid) for tid in sorted(self._done)]
         if not self._buckets:
             self._planned.clear()  # window closed; everything is recorded
+            # quiet point: every slot's intent has its record journaled, so
+            # folding the durable WALs into snapshots loses nothing
+            self.service._maybe_compact()
         return out
 
     # -- introspection --------------------------------------------------------

@@ -30,6 +30,15 @@ and executes each as ONE stacked engine pass (``Engine.execute_batch``); the
 synchronous ``submit()`` is the batch-of-1 special case of the same
 admit -> execute -> finalize pipeline.
 
+A fourth layer makes the service's ground truth durable (DESIGN.md §12):
+``state_dir=`` puts the accountant's CRT ledger behind a WAL-backed
+:class:`repro.state.JournalStore` (intent -> record journaling, so budgets
+survive restarts and N replicas sharing the directory enforce ONE global
+budget) and adds a :class:`repro.state.CalibrationStore` fed by the engine's
+revealed-size hook: every already-disclosed intermediate size S refines the
+planner's cost model — join reordering improves across restarts with zero
+additional disclosure.
+
 Per-query noise freshness: the Engine folds a monotonically increasing
 counter into every Resizer's PRNG key, so repeated executions of the same
 plan draw i.i.d. noise — exactly the attacker model CRT prices.
@@ -129,6 +138,9 @@ class AnalyticsService:
         reorder_joins: bool = True,
         batch_max: int = 16,
         batch_wait_s: float = 0.05,
+        state_dir: Optional[str] = None,  # durable shared state (DESIGN §12)
+        wal_fsync: bool = True,
+        compact_wal_bytes: int = 1 << 16,  # auto-compaction threshold
     ):
         self.tables = tables
         self.catalog = catalog or Catalog.from_tables(tables)
@@ -142,6 +154,20 @@ class AnalyticsService:
             tables, key=key if key is not None else jax.random.PRNGKey(0),
             jit_ops=jit_ops,
         )
+        self.state_dir = state_dir
+        self.compact_wal_bytes = compact_wal_bytes
+        self.calibration = None
+        if state_dir is not None:
+            from ..state import CalibrationStore, JournalStore
+
+            if not self.accountant.durable:
+                self.accountant.attach_store(
+                    JournalStore(state_dir, "ledger", fsync=wal_fsync)
+                )
+            self.calibration = CalibrationStore(
+                JournalStore(state_dir, "calibration", fsync=wal_fsync)
+            )
+            self.engine.reveal_hook = self._observe_reveal
         self._plan_cache: "OrderedDict" = OrderedDict()
         self._plan_cache_max = plan_cache_size
         from .scheduler import QueryScheduler
@@ -176,7 +202,9 @@ class AnalyticsService:
         re-binds the cached physical plan (Resizer placement included)
         instead of recompiling."""
         t0 = time.perf_counter()
-        cm = default_cost_model(self.catalog, noise=self.noise)
+        cm = default_cost_model(
+            self.catalog, noise=self.noise, calibration=self.calibration
+        )
         logical = compile_logical(
             sql, self.catalog, cost_model=cm, reorder_joins=self.reorder_joins
         )
@@ -248,6 +276,10 @@ class AnalyticsService:
         ta = time.perf_counter()
         self.accountant.record(aq.admitted, report)
         aq.recorded = True  # failure past this point must not charge_failed
+        if self.calibration is not None:
+            # one journal transaction for all of this query's revealed sizes
+            # (buffered during execution, off the engine's critical path)
+            self.calibration.flush()
         acct_s = aq.accountant_seconds + (time.perf_counter() - ta)
 
         self.stats["queries"] += 1
@@ -316,6 +348,33 @@ class AnalyticsService:
         submission order."""
         return self.scheduler.drain(force=force)
 
+    # -- durable state (DESIGN.md §12) ----------------------------------------
+    def _observe_reveal(self, node: PlanNode, info: Dict) -> None:
+        """Engine revealed-size feedback hook: persist the already-public
+        (N, S) pair for the resized subplan so future planning uses observed
+        selectivities instead of static defaults. S is on the wire either
+        way — recording it discloses nothing new."""
+        if self.calibration is not None:
+            self.calibration.observe_plan(
+                node.child, n=int(info["n"]), s=int(info["s"])
+            )
+
+    def _maybe_compact(self) -> None:
+        """Opportunistic snapshot+truncate of both journals once their WALs
+        outgrow the threshold (called by the scheduler at window close and
+        safe to call any time — compaction preserves open intents)."""
+        if self.state_dir is None:
+            return
+        self.accountant.maybe_compact(self.compact_wal_bytes)
+        self.calibration.maybe_compact(self.compact_wal_bytes)
+
+    def compact_state(self) -> None:
+        """Force-compact the durable journals now (restart-fast snapshots)."""
+        if self.state_dir is None:
+            return
+        self.accountant.maybe_compact(-1)
+        self.calibration.maybe_compact(-1)
+
     # -- reporting ------------------------------------------------------------
     def cache_stats(self) -> Dict[str, float]:
         h, m = self.stats["plan_cache_hits"], self.stats["plan_cache_misses"]
@@ -335,4 +394,9 @@ class AnalyticsService:
             "jit_cache": {**Engine.jit_cache_stats(), "scope": "process"},
             "scheduler": self.scheduler.stats,
             "accountant": self.accountant.status(),
+            "state": None if self.state_dir is None else {
+                "dir": self.state_dir,
+                "ledger": self.accountant.store.status(),
+                "calibration": self.calibration.status(),
+            },
         }

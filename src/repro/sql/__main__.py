@@ -9,8 +9,9 @@
    growth goldens) must compile to a plan structurally equal to its
    hand-compiled twin in data/queries.py;
 2. one query per new dialect feature (PROJECT-narrowed join, SUM, AVG,
-   OR-predicate, 2-column GROUP BY) is compiled AND executed on a tiny
-   synthetic dataset and checked against the plaintext oracle. Under
+   MIN/MAX sort-head, OR-predicate, 2-column GROUP BY) is compiled AND
+   executed on a tiny synthetic dataset and checked against the plaintext
+   oracle. Under
    ``REPRO_USE_PALLAS=1`` (the CI kernel-parity job) this drives the Pallas
    kernels in interpret mode.
 
@@ -73,6 +74,10 @@ def _check_dialect_execution() -> int:
                     int(rows["avg_dosage_cnt"][0]), 1
                 )
                 ok = got_avg == oracle["avg"]
+            elif name == "dosage_min":
+                ok = int(rows["lo"][0]) == oracle
+            elif name == "dosage_max":
+                ok = int(rows["hi"][0]) == oracle
             elif name == "heart_or_circulatory":
                 ok = int(rows["cnt"][0]) == oracle
             else:  # diag_breakdown

@@ -51,6 +51,8 @@ from ..plan.nodes import (
     Filter,
     GroupByCount,
     Join,
+    Max,
+    Min,
     OrderBy,
     PlanNode,
     Project,
@@ -69,6 +71,8 @@ from .parser import (
     Condition,
     CountDistinctItem,
     CountStar,
+    MaxItem,
+    MinItem,
     SelectStmt,
     SumItem,
     parse,
@@ -408,7 +412,8 @@ def _apply_terminals(
         return sub.schema.physical(res.owner(col), col.name)
 
     aggs = [i for i in stmt.items
-            if isinstance(i, (CountStar, CountDistinctItem, SumItem, AvgItem))]
+            if isinstance(i, (CountStar, CountDistinctItem, SumItem, AvgItem,
+                              MinItem, MaxItem))]
     plain = [i for i in stmt.items if isinstance(i, ColumnRef)]
 
     count_name: Optional[str] = None
@@ -437,6 +442,10 @@ def _apply_terminals(
             node = CountDistinct(node, phys(item.col))
         elif isinstance(item, SumItem):
             node = Sum(node, phys(item.col), name=item.alias or "sum")
+        elif isinstance(item, MinItem):
+            node = Min(node, phys(item.col), name=item.alias or "min")
+        elif isinstance(item, MaxItem):
+            node = Max(node, phys(item.col), name=item.alias or "max")
         else:
             node = Avg(node, phys(item.col), name=item.alias or "avg")
     elif stmt.distinct:
@@ -496,11 +505,16 @@ def _apply_terminals(
 # Entry points
 # -----------------------------------------------------------------------------
 
-def default_cost_model(catalog: Catalog, noise=None) -> CostModel:
+def default_cost_model(catalog: Catalog, noise=None, calibration=None) -> CostModel:
+    """Catalog-derived cost model. ``calibration`` (see
+    :class:`repro.state.calibration.CalibrationStore`) replaces the static
+    selectivity defaults with observed revealed sizes, so comma-FROM join
+    reordering improves as the engine discloses — calibrated reorder."""
     return CostModel(
         table_sizes={t: catalog.size(t) for t in catalog.tables},
         table_cols={t: len(cols) for t, cols in catalog.tables.items()},
         noise=noise,
+        calibration=calibration,
     )
 
 

@@ -19,6 +19,8 @@ KEYWORDS = {
     "count",
     "sum",
     "avg",
+    "min",
+    "max",
     "from",
     "join",
     "on",

@@ -12,6 +12,8 @@ Grammar (keywords case-insensitive, integer literals only):
                 | COUNT '(' DISTINCT column ')' [AS ident]
                 | SUM '(' column ')' [AS ident]
                 | AVG '(' column ')' [AS ident]
+                | MIN '(' column ')' [AS ident]
+                | MAX '(' column ')' [AS ident]
     from_clause:= table_ref (',' table_ref)*                -- reorderable pool
                 | table_ref (JOIN table_ref ON cond (AND cond)*)*  -- fixed order
     table_ref  := ident [AS] [ident]
@@ -49,6 +51,8 @@ __all__ = [
     "CountDistinctItem",
     "SumItem",
     "AvgItem",
+    "MinItem",
+    "MaxItem",
     "SelectStmt",
     "parse",
 ]
@@ -136,7 +140,21 @@ class AvgItem:
     alias: Optional[str] = None
 
 
-SelectItem = Union[ColumnRef, CountStar, CountDistinctItem, SumItem, AvgItem]
+@dataclasses.dataclass(frozen=True)
+class MinItem:
+    col: ColumnRef
+    alias: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class MaxItem:
+    col: ColumnRef
+    alias: Optional[str] = None
+
+
+SelectItem = Union[
+    ColumnRef, CountStar, CountDistinctItem, SumItem, AvgItem, MinItem, MaxItem
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -154,7 +172,8 @@ class SelectStmt:
 
 _OPS = {"EQ": "eq", "LT": "lt", "LE": "le", "GT": "gt", "GE": "ge", "NE": "ne"}
 _FLIP = {"eq": "eq", "ne": "ne", "lt": "gt", "le": "ge", "gt": "lt", "ge": "le"}
-_AGG_ITEMS = {"COUNT": None, "SUM": SumItem, "AVG": AvgItem}
+_AGG_ITEMS = {"COUNT": None, "SUM": SumItem, "AVG": AvgItem,
+              "MIN": MinItem, "MAX": MaxItem}
 
 
 class _Parser:
@@ -257,7 +276,7 @@ class _Parser:
                 self.expect("RPAREN", "')'")
                 return CountDistinctItem(col, alias=self._opt_alias())
             raise self.error("COUNT supports only COUNT(*) and COUNT(DISTINCT col)")
-        if self.cur.kind in ("SUM", "AVG"):
+        if self.cur.kind in ("SUM", "AVG", "MIN", "MAX"):
             cls = _AGG_ITEMS[self.advance().kind]
             self.expect("LPAREN", "'(' after aggregate")
             col = self._column()

@@ -21,6 +21,8 @@ from repro.plan import (
     Filter,
     GroupByCount,
     Join,
+    Max,
+    Min,
     OrderBy,
     PlanNode,
     Project,
@@ -59,6 +61,8 @@ SAMPLES = {
     CountDistinct: lambda: CountDistinct(_dx(), "pid"),
     Sum: lambda: Sum(Scan("medications"), "dosage"),
     Avg: lambda: Avg(Scan("medications"), "dosage"),
+    Min: lambda: Min(Scan("medications"), "dosage"),
+    Max: lambda: Max(Scan("medications"), "dosage", name="peak"),
     Resize: lambda: Resize(
         Filter(_dx(), [Predicate("icd9", "eq", 414)]),
         ResizerConfig(noise=BetaNoise(2, 6)),

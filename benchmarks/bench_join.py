@@ -1,0 +1,216 @@
+"""Equi-join algorithm sweep: Cartesian product vs bitonic sort-merge.
+
+For each table size N (both sides N rows, per-key multiplicity bounded by
+``MULT``) the sweep executes the same logical join under both physical
+algorithms and records
+
+* median wall seconds (warm — compile/dispatch caches primed outside timing),
+* the join node's ledger bytes-per-party and rounds (the compare stage:
+  the N^2 equality circuit for product, the union sort + neighbor alignment
+  for sort-merge),
+* the cost model's analytic byte estimates and which algorithm
+  ``select_join_algorithms`` picks under ``mode="auto"``,
+
+plus a serial-vs-batched comparison (K identical joins as one vmapped engine
+pass) for both algorithms. Emits ``BENCH_join.json`` at the repo root; the
+artifact's shape is pinned by ``benchmarks/bench_join_schema.json`` and
+validated in the CI bench-smoke job via ``benchmarks/validate_bench.py``.
+
+``--quick`` (the CI smoke mode) shrinks the size grid so the job finishes in
+a couple of minutes; the full sweep covers N = 2^8 .. 2^14 (the product
+execution is capped at ``PRODUCT_EXEC_CAP`` — beyond it only the analytic
+byte estimate is recorded, which is exactly the Cartesian ceiling the
+sort-merge algorithm exists to break).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+from benchmarks.common import Row, emit, timeit
+from repro.engine import Engine
+from repro.ops.table import SecretTable
+from repro.plan import Join, JoinSortMerge, Scan, select_join_algorithms
+from repro.sql import Catalog
+from repro.sql.compile import default_cost_model
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_join.json")
+
+SIZES = tuple(2 ** e for e in range(8, 15))  # 2^8 .. 2^14
+QUICK_SIZES = (256, 512)
+MULT = 4  # declared per-key duplicate bound (drives sort-merge fanout)
+PRODUCT_EXEC_CAP = 2 ** 13  # N^2 lanes beyond this: model bytes only
+BATCH_K = 4
+
+
+def _mk_tables(n: int, seed: int = 0):
+    """Two N-row tables with every key appearing exactly MULT times."""
+    rng = np.random.default_rng(seed)
+
+    def cols():
+        keys = np.repeat(
+            np.arange(max(n // MULT, 1), dtype=np.uint32), MULT
+        )[:n]
+        rng.shuffle(keys)
+        return {"k": keys, "v": rng.integers(0, 1000, n).astype(np.uint32)}
+
+    kl, kr = jax.random.split(jax.random.PRNGKey(seed), 2)
+    return {
+        "l": SecretTable.from_plaintext(cols(), kl),
+        "r": SecretTable.from_plaintext(cols(), kr),
+    }
+
+
+def _catalog(tables):
+    return Catalog.from_tables(
+        tables, multiplicity={"l": {"k": MULT}, "r": {"k": MULT}}
+    )
+
+
+def _plans():
+    return {
+        "product": Join(Scan("l"), Scan("r"), ("k", "k")),
+        "sortmerge": JoinSortMerge(
+            Scan("l"), Scan("r"), ("k", "k"), fanout=MULT
+        ),
+    }
+
+
+def _join_stats(report):
+    s = [st for st in report.nodes if st.node.startswith("Join")][0]
+    return s.bytes_per_party, s.rounds
+
+
+def _bench_size(n: int, rows: list, quick: bool) -> dict:
+    tables = _mk_tables(n)
+    catalog = _catalog(tables)
+    cm = default_cost_model(catalog)
+    plans = _plans()
+
+    entry: dict = {"n": n}
+    entry["model_bytes"] = {
+        name: cm.estimate(plan)["bytes"] for name, plan in plans.items()
+    }
+    auto = select_join_algorithms(plans["product"], cm, catalog, mode="auto")
+    entry["auto_selects"] = (
+        "sortmerge" if isinstance(auto, JoinSortMerge) else "product"
+    )
+
+    repeats = 3 if n <= 4096 else 2
+    for name, plan in plans.items():
+        if name == "product" and n > PRODUCT_EXEC_CAP:
+            entry[name] = {"executed": False}
+            continue
+        eng = Engine(tables, key=jax.random.PRNGKey(1))
+
+        def run(p=plan, e=eng):
+            out, rep = e.execute(p)
+            return out.valid.shares, rep
+
+        wall = timeit(run, repeats=repeats, warmup=1)
+        _, report = eng.execute(plan)
+        bpp, rnds = _join_stats(report)
+        entry[name] = {
+            "executed": True,
+            "wall_s": wall,
+            "join_bytes_per_party": bpp,
+            "join_rounds": rnds,
+        }
+        rows.append((f"join_{name}_n{n}_wall_ms", wall * 1e3, f"{bpp} B/party"))
+
+    if entry["product"].get("executed") and entry["sortmerge"]["executed"]:
+        entry["sortmerge_vs_product_bytes"] = (
+            entry["sortmerge"]["join_bytes_per_party"]
+            / entry["product"]["join_bytes_per_party"]
+        )
+        entry["sortmerge_vs_product_wall"] = (
+            entry["sortmerge"]["wall_s"] / entry["product"]["wall_s"]
+        )
+    return entry
+
+
+def _bench_batched(n: int, rows: list) -> dict:
+    """K identical joins: K serial engine passes vs one vmapped pass."""
+    tables = _mk_tables(n)
+    out: dict = {"n": n, "k": BATCH_K}
+    for name, plan in _plans().items():
+        eng = Engine(tables, key=jax.random.PRNGKey(1))
+        serial = timeit(
+            lambda e=eng, p=plan: [e.execute(p)[0].valid.shares
+                                   for _ in range(BATCH_K)],
+            repeats=3,
+        )
+        eng_b = Engine(tables, key=jax.random.PRNGKey(1))
+        batched = timeit(
+            lambda e=eng_b, p=plan: [
+                t.valid.shares for t, _ in e.execute_batch([p] * BATCH_K)
+            ],
+            repeats=3,
+        )
+        out[name] = {
+            "serial_s": serial,
+            "batched_s": batched,
+            "speedup": serial / batched,
+        }
+        rows.append((
+            f"join_batched_{name}_n{n}_speedup", serial / batched,
+            f"{BATCH_K} joins, one vmapped pass",
+        ))
+    return out
+
+
+def run(quick: bool = False) -> list:
+    sizes = QUICK_SIZES if quick else SIZES
+    rows: list[Row] = []
+    artifact: dict = {
+        "quick": quick,
+        "mult": MULT,
+        "sizes": list(sizes),
+        "product_exec_cap": PRODUCT_EXEC_CAP,
+        "sweep": {},
+    }
+    for n in sizes:
+        artifact["sweep"][str(n)] = _bench_size(n, rows, quick)
+
+    artifact["batched"] = _bench_batched(256 if quick else 1024, rows)
+
+    # acceptance summary: the first measured size where sort-merge wins both
+    # the compare-stage bytes and the wall clock, and what auto picks there
+    crossover = None
+    for n in sizes:
+        e = artifact["sweep"][str(n)]
+        if not e.get("sortmerge", {}).get("executed"):
+            continue
+        if not e.get("product", {}).get("executed"):
+            break
+        if (
+            e["sortmerge_vs_product_bytes"] < 1.0
+            and e["sortmerge_vs_product_wall"] < 1.0
+        ):
+            crossover = n
+            break
+    artifact["acceptance"] = {
+        "crossover_n": crossover,
+        "auto_selects_at_crossover": (
+            artifact["sweep"][str(crossover)]["auto_selects"]
+            if crossover is not None
+            else None
+        ),
+    }
+
+    with open(JSON_PATH, "w") as f:
+        json.dump(artifact, f, indent=2, sort_keys=True, default=float)
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke mode: small size grid")
+    args = ap.parse_args()
+    emit(run(quick=args.quick))

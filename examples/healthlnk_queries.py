@@ -60,6 +60,13 @@ def check(qname, result, oracle):
               and shown["avg_dosage_cnt"] == oracle["cnt"]
               and shown["avg_dosage"] == oracle["avg"])
         return shown["avg_dosage"], ok
+    if qname == "med_dosage_sum":
+        shown = {int(k): int(v) for k, v in zip(rows["med"], rows["total"])}
+        return shown, shown == oracle
+    if qname == "med_dosage_avg":
+        # the service's post_reveal already folded (sum, cnt) -> mean
+        shown = {int(k): int(v) for k, v in zip(rows["med"], rows["mean"])}
+        return shown, shown == {k: v["avg"] for k, v in oracle.items()}
     if qname == "projection_join":
         # the oracle is the sorted (pid, dosage) pair set
         shown = sorted({(int(p), int(v))

@@ -31,12 +31,15 @@ across paths; only launch count and memory traffic change (DESIGN.md §7).
 """
 from __future__ import annotations
 
+import functools
+
+import jax
 import jax.numpy as jnp
 
-from ..kernels import fusion_enabled
-from .ledger import fused_scope
-from .prf import PRFSetup
-from .sharing import AShare, BShare, and_, mul
+from ..kernels import fusion_enabled, kernels_enabled
+from .ledger import fused_scope, log_comm
+from .prf import PRFSetup, _fold_keys, _zero_share
+from .sharing import AShare, BShare, _cross_terms_xor, and_, mul
 
 __all__ = [
     "eq",
@@ -66,6 +69,28 @@ def _and_pair(a1: BShare, b1: BShare, a2: BShare, b2: BShare, prf: PRFSetup):
     return BShare(z.shares[:, 0]), BShare(z.shares[:, 1])
 
 
+# Whole-level jitted gate payloads for the non-fused path: one dispatch per
+# communication round instead of a chain of eager share ops. The PRF fold,
+# zero-sharing, and cross terms are the same computations the gate-by-gate
+# path runs, so shares and ledger entries are bit-identical.
+
+@functools.partial(jax.jit, static_argnames=("d",))
+def _ks_level_words(g, p, pair_keys, tag, d: int):
+    keys = _fold_keys(pair_keys, tag)
+    alpha = _zero_share(keys, (2,) + g.shape[1:], g.dtype, xor=True)
+    x = jnp.stack([p, p], axis=1)
+    y = jnp.stack([g << d, p << d], axis=1)
+    z = _cross_terms_xor(x, y) ^ alpha
+    return g ^ z[:, 0], z[:, 1]
+
+
+@functools.partial(jax.jit, static_argnames=("d",))
+def _eq_fold_words(v, pair_keys, d: int):
+    keys = _fold_keys(pair_keys, d)
+    alpha = _zero_share(keys, v.shape[1:], v.dtype, xor=True)
+    return _cross_terms_xor(v, v >> d) ^ alpha
+
+
 # -----------------------------------------------------------------------------
 # Equality
 # -----------------------------------------------------------------------------
@@ -78,7 +103,11 @@ def _and_reduce_bits(v: BShare, prf: PRFSetup, width: int) -> BShare:
         return and_fold_fused(v, prf, width).and_public(v.ring.const(1))
     d = width // 2
     while d >= 1:
-        v = and_(v, v >> d, prf.fold(d))
+        if kernels_enabled():
+            v = and_(v, v >> d, prf.fold(d))
+        else:
+            log_comm("and", 1, v.size * v.ring.bytes)
+            v = BShare(_eq_fold_words(v.shares, prf.pair_keys, d))
         d //= 2
     return v.and_public(v.ring.const(1))
 
@@ -114,9 +143,16 @@ def _ks_levels(
         return ks_levels_fused(g, p, prf, width, fold_base)
     d = 1
     while d < width:
-        pg, pp = _and_pair(p, g << d, p, p << d, prf.fold(fold_base + d))
-        g = g ^ pg
-        p = pp
+        if kernels_enabled():
+            pg, pp = _and_pair(p, g << d, p, p << d, prf.fold(fold_base + d))
+            g = g ^ pg
+            p = pp
+        else:
+            log_comm("and", 1, 2 * g.size * g.ring.bytes)
+            gs, ps = _ks_level_words(
+                g.shares, p.shares, prf.pair_keys, fold_base + d, d
+            )
+            g, p = BShare(gs), BShare(ps)
         d *= 2
     return g
 

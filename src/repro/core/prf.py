@@ -18,6 +18,7 @@ mirroring the monotone PRF counter of a real deployment.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Tuple
 
 import jax
@@ -26,6 +27,42 @@ import jax.numpy as jnp
 from .ring import Ring, default_ring
 
 __all__ = ["PRFSetup", "setup_prf", "zero_share_add", "zero_share_xor", "rand_replicated"]
+
+
+# Module-level jitted helpers: ``jax.vmap`` retraces its callee on every call,
+# which made each fold/draw cost milliseconds of pure dispatch overhead — the
+# dominant cost of round-heavy circuits (bitonic sort does thousands of PRF
+# derivations). Compiled once per shape here, they are single cached dispatches
+# thereafter, and the derived values are bit-identical to the eager path.
+
+@jax.jit
+def _fold_keys(pair_keys: jnp.ndarray, tag) -> jnp.ndarray:
+    folded = jax.vmap(lambda k: jax.random.fold_in(k, tag))(
+        jax.vmap(jax.random.wrap_key_data)(pair_keys)
+    )
+    return jax.vmap(jax.random.key_data)(folded)
+
+
+@functools.partial(jax.jit, static_argnames=("shape", "dtype"))
+def _draw_bits(pair_keys: jnp.ndarray, shape, dtype) -> jnp.ndarray:
+    keys = jax.vmap(jax.random.wrap_key_data)(pair_keys)
+    bits = jax.vmap(
+        lambda k: jax.random.bits(k, shape=shape, dtype=jnp.uint32)
+    )(keys)
+    return bits.astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("shape",))
+def _draw_uniform(pair_keys: jnp.ndarray, shape) -> jnp.ndarray:
+    keys = jax.vmap(jax.random.wrap_key_data)(pair_keys)
+    return jax.vmap(lambda k: jax.random.uniform(k, shape=shape))(keys)
+
+
+@functools.partial(jax.jit, static_argnames=("shape", "dtype", "xor"))
+def _zero_share(pair_keys: jnp.ndarray, shape, dtype, xor: bool) -> jnp.ndarray:
+    f = _draw_bits(pair_keys, shape, dtype)
+    g = jnp.roll(f, 1, axis=0)
+    return f ^ g if xor else f - g
 
 
 @jax.tree_util.register_pytree_node_class
@@ -44,23 +81,15 @@ class PRFSetup:
 
     def fold(self, tag: jnp.ndarray | int) -> "PRFSetup":
         """Derive fresh per-use keys (the PRF counter)."""
-        folded = jax.vmap(lambda k: jax.random.fold_in(k, tag))(
-            jax.vmap(jax.random.wrap_key_data)(self.pair_keys)
-        )
-        return PRFSetup(jax.vmap(jax.random.key_data)(folded))
+        return PRFSetup(_fold_keys(self.pair_keys, tag))
 
     def draw(self, shape: Tuple[int, ...], ring: Ring) -> jnp.ndarray:
         """F(k_i, .) for each pair key -> (3, *shape) ring elements."""
-        keys = jax.vmap(jax.random.wrap_key_data)(self.pair_keys)
-        bits = jax.vmap(
-            lambda k: jax.random.bits(k, shape=shape, dtype=jnp.uint32)
-        )(keys)
-        return bits.astype(ring.dtype)
+        return _draw_bits(self.pair_keys, tuple(shape), ring.dtype)
 
     def draw_uniform(self, shape: Tuple[int, ...]) -> jnp.ndarray:
         """Per-pair-key uniform [0,1) floats -> (3, *shape) float32."""
-        keys = jax.vmap(jax.random.wrap_key_data)(self.pair_keys)
-        return jax.vmap(lambda k: jax.random.uniform(k, shape=shape))(keys)
+        return _draw_uniform(self.pair_keys, tuple(shape))
 
 
 def setup_prf(key: jax.Array) -> PRFSetup:
@@ -72,15 +101,13 @@ def setup_prf(key: jax.Array) -> PRFSetup:
 def zero_share_add(prf: PRFSetup, shape, ring: Ring | None = None) -> jnp.ndarray:
     """(3, *shape) additive sharing of zero: alpha_i = F(k_i) - F(k_{i-1})."""
     ring = ring or default_ring()
-    f = prf.draw(tuple(shape), ring)
-    return f - jnp.roll(f, 1, axis=0)
+    return _zero_share(prf.pair_keys, tuple(shape), ring.dtype, xor=False)
 
 
 def zero_share_xor(prf: PRFSetup, shape, ring: Ring | None = None) -> jnp.ndarray:
     """(3, *shape) XOR sharing of zero: alpha_i = F(k_i) ^ F(k_{i-1})."""
     ring = ring or default_ring()
-    f = prf.draw(tuple(shape), ring)
-    return f ^ jnp.roll(f, 1, axis=0)
+    return _zero_share(prf.pair_keys, tuple(shape), ring.dtype, xor=True)
 
 
 def rand_replicated(prf: PRFSetup, shape, ring: Ring | None = None) -> jnp.ndarray:

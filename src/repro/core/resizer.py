@@ -208,15 +208,17 @@ class Resizer:
             }
         )
         if cfg.use_sort:
-            from .sort import bitonic_sort
+            from .sort import bitonic_sort_narrow
             from ..ops.groupby import pad_pow2
 
             padded = pad_pow2(SecretTable({k: v for k, v in cols.items() if k not in ("__k", "__valid")}, table.valid))
-            # re-assemble with the padded keep column (pad rows keep=0)
+            # re-assemble with the padded keep column (pad rows keep=0);
+            # only the keep bit + a row index ride the sorting network — the
+            # payload is gathered once post-sort (bitonic_sort_narrow)
             k_pad = k_col.pad_rows(padded.n)
             cols = {"__k": k_pad, "__valid": padded.valid}
             cols.update(padded.cols)
-            shuffled = bitonic_sort(cols, "__k", prf.fold(821), descending=True)
+            shuffled = bitonic_sort_narrow(cols, "__k", prf.fold(821), descending=True)
             n = padded.n
         else:
             shuffled = secure_shuffle(cols, prf.fold(821))

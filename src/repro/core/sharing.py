@@ -26,6 +26,7 @@ deployment is not provided (and not needed for performance analysis).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Sequence, Tuple
 
 import jax
@@ -33,7 +34,7 @@ import jax.numpy as jnp
 
 from ..kernels import kernels_enabled
 from .ledger import log_comm
-from .prf import PRFSetup, rand_replicated, zero_share_add, zero_share_xor
+from .prf import PRFSetup, _zero_share, rand_replicated, zero_share_add, zero_share_xor
 from .ring import Ring, default_ring
 
 __all__ = [
@@ -166,7 +167,7 @@ class AShare(_ShareBase):
     def add_public(self, c) -> "AShare":
         """Add a public constant: by convention share 0 absorbs it."""
         c = _as_ring(c, self.ring)
-        return AShare(self.shares.at[0].add(c))
+        return AShare(_absorb_add(self.shares, c))
 
     def mul_public(self, c) -> "AShare":
         c = _as_ring(c, self.ring)
@@ -204,7 +205,7 @@ class BShare(_ShareBase):
 
     def xor_public(self, c) -> "BShare":
         c = _as_ring(c, self.ring)
-        return BShare(self.shares.at[0].set(self.shares[0] ^ c))
+        return BShare(_absorb_xor(self.shares, c))
 
     def __invert__(self) -> "BShare":
         return self.xor_public(self.ring.mask)
@@ -230,6 +231,19 @@ class BShare(_ShareBase):
     def bit(self, j: int) -> "BShare":
         """Extract bit j into the LSB position."""
         return BShare((self.shares >> j) & self.ring.const(1))
+
+
+# Jitted share-0 absorption: the eager ``.at[0]`` scatter costs ~1ms per call
+# and public-constant absorption sits inside every circuit level.
+
+@jax.jit
+def _absorb_add(shares: jnp.ndarray, c) -> jnp.ndarray:
+    return shares.at[0].add(c)
+
+
+@jax.jit
+def _absorb_xor(shares: jnp.ndarray, c) -> jnp.ndarray:
+    return shares.at[0].set(shares[0] ^ c)
 
 
 # -----------------------------------------------------------------------------
@@ -286,6 +300,17 @@ def _cross_terms_xor(xs: jnp.ndarray, ys: jnp.ndarray) -> jnp.ndarray:
     return (xs & ys) ^ (xs & yn) ^ (xn & ys)
 
 
+@functools.partial(jax.jit, static_argnames=("boolean", "dtype"))
+def _gate_words(xs, ys, pair_keys, boolean: bool, dtype):
+    """Full non-kernel gate payload (zero-share + cross terms + rerandomize)
+    compiled as one dispatch — the per-gate eager op chain dominated wall time
+    for round-heavy circuits (bitonic sort)."""
+    alpha = _zero_share(pair_keys, xs.shape[1:], dtype, xor=boolean)
+    if boolean:
+        return _cross_terms_xor(xs, ys) ^ alpha
+    return _cross_terms_add(xs, ys) + alpha
+
+
 def _kernel_gate(xs, ys, alpha, boolean: bool):
     """Single-gate kernel dispatch (the *fused* multi-gate circuits route in
     core/circuits.py instead and never reach this per-gate path)."""
@@ -303,10 +328,15 @@ def mul(x: AShare, y: AShare, prf: PRFSetup) -> AShare:
     result to its predecessor to restore replication (the resharing hop).
     """
     ring = x.ring
-    alpha = zero_share_add(prf, x.shape, ring)
-    z = _kernel_gate(x.shares, y.shares, alpha, boolean=False)
-    if z is None:
-        z = _cross_terms_add(x.shares, y.shares) + alpha
+    if kernels_enabled():
+        # broadcast BEFORE the kernel: gate() flattens lanes, so mismatched
+        # operand shapes (e.g. a (n,2) pair scanned against a (n,1) flag)
+        # would silently misalign; alpha is drawn at the broadcast shape
+        xs, ys = jnp.broadcast_arrays(x.shares, y.shares)
+        alpha = zero_share_add(prf, xs.shape[1:], ring)
+        z = _kernel_gate(xs, ys, alpha, boolean=False)
+    else:
+        z = _gate_words(x.shares, y.shares, prf.pair_keys, False, ring.dtype)
     log_comm("mul", 1, x.size * ring.bytes)
     return AShare(z)
 
@@ -314,10 +344,12 @@ def mul(x: AShare, y: AShare, prf: PRFSetup) -> AShare:
 def and_(x: BShare, y: BShare, prf: PRFSetup) -> BShare:
     """Secret AND (bitwise over k-bit lanes): 1 round, k bits per lane/party."""
     ring = x.ring
-    alpha = zero_share_xor(prf, x.shape, ring)
-    z = _kernel_gate(x.shares, y.shares, alpha, boolean=True)
-    if z is None:
-        z = _cross_terms_xor(x.shares, y.shares) ^ alpha
+    if kernels_enabled():
+        xs, ys = jnp.broadcast_arrays(x.shares, y.shares)
+        alpha = zero_share_xor(prf, xs.shape[1:], ring)
+        z = _kernel_gate(xs, ys, alpha, boolean=True)
+    else:
+        z = _gate_words(x.shares, y.shares, prf.pair_keys, True, ring.dtype)
     log_comm("and", 1, x.size * ring.bytes)
     return BShare(z)
 

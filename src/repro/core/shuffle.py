@@ -28,7 +28,13 @@ from .ledger import fused_scope, log_comm
 from .prf import PRFSetup, zero_share_add, zero_share_xor
 from .sharing import AShare, BShare
 
-__all__ = ["secure_shuffle", "composed_permutation", "HOPS"]
+__all__ = [
+    "secure_shuffle",
+    "inverse_shuffle",
+    "apply_secret_perm",
+    "composed_permutation",
+    "HOPS",
+]
 
 HOPS = 3
 
@@ -100,3 +106,71 @@ def secure_shuffle(
             # one resharing hop: the pi_j-ignorant party receives fresh shares
             log_comm("shuffle_hop", 1, n * row_bytes)
     return out
+
+
+def inverse_shuffle(
+    cols: Dict[str, Share],
+    prf: PRFSetup,
+    gather_fn=None,
+) -> Dict[str, Share]:
+    """Undo ``secure_shuffle(cols, prf)``: apply the hop permutations inverted
+    and in reverse order. Same round/byte pattern as the forward shuffle (each
+    hop is one table move + resharing); the re-randomization tags differ so
+    forward and inverse hops never reuse a zero-sharing.
+    """
+    if not cols:
+        return cols
+    first = next(iter(cols.values()))
+    n = first.shape[0]
+    row_bytes = sum(
+        c.ring.bytes * (c.size // max(c.shape[0], 1)) for c in cols.values()
+    )
+    if gather_fn is None:
+        from ..kernels import kernels_enabled
+
+        if kernels_enabled():
+            from ..kernels.shuffle_gather.ops import gather_rows
+
+            def gather_fn(shares, perm):
+                flat = shares.reshape(3, shares.shape[1], -1)
+                out = jnp.stack([gather_rows(flat[i], perm) for i in range(3)])
+                return out.reshape(shares.shape)
+
+    take = gather_fn or (lambda shares, perm: jnp.take(shares, perm, axis=1))
+
+    with fused_scope("shuffle", rounds=HOPS):
+        out = dict(cols)
+        for hop in reversed(range(HOPS)):
+            perm = jnp.argsort(_hop_perm(prf, hop, n))
+            new = {}
+            for idx, (name, col) in enumerate(out.items()):
+                moved = col.map_shares(lambda s, p=perm: take(s, p))
+                new[name] = _rerandomize(moved, prf, 5500 + 17 * hop + idx)
+            out = new
+            log_comm("shuffle_hop", 1, n * row_bytes)
+    return out
+
+
+def apply_secret_perm(
+    cols: Dict[str, Share], pi: "BShare", prf: PRFSetup
+) -> Dict[str, Share]:
+    """Gather rows of ``cols`` by a secret-shared permutation: out_i = cols_{pi(i)}.
+
+    Shuffle-and-reveal (Asharov et al. style): shuffle the shared index vector
+    ``pi`` by a hidden permutation sigma, open ``r = pi ∘ sigma`` — a uniformly
+    random permutation, so the opening leaks nothing about ``pi`` — gather the
+    payload by the public ``r`` (free), then inverse-shuffle the result to peel
+    sigma back off. Only sound when ``pi`` is a true permutation of 0..n-1
+    (e.g. a sorted row-index column); arbitrary index vectors would leak their
+    multiplicity pattern through ``r``.
+
+    Cost: one 1-column shuffle + one n-word reveal + one W-column inverse
+    shuffle — O(n) bytes per payload column, vs. O(n log^2 n) for carrying the
+    payload through a sorting network.
+    """
+    from .sharing import reveal_b
+
+    shuffled = secure_shuffle({"__pi": pi}, prf)
+    r = reveal_b(shuffled["__pi"])
+    moved = {name: col.take(r, axis=0) for name, col in cols.items()}
+    return inverse_shuffle(moved, prf)

@@ -24,9 +24,14 @@ import jax.numpy as jnp
 from .circuits import and_bit, eq, lt, or_bit
 from .ledger import active_ledger
 from .prf import PRFSetup
-from .sharing import AShare, BShare, and_
+from .sharing import AShare, BShare, and_, const_b
 
-__all__ = ["bitonic_sort", "bitonic_stages", "sort_valid_first"]
+__all__ = [
+    "bitonic_sort",
+    "bitonic_sort_narrow",
+    "bitonic_stages",
+    "sort_valid_first",
+]
 
 Share = Union[AShare, BShare]
 
@@ -47,14 +52,24 @@ def _lex_lt(
 ) -> BShare:
     """Lexicographic ``his < los`` over parallel key columns: column 0
     decides unless it ties, in which case column 1 decides, and so on —
-    lt_0 OR (eq_0 AND lt_1) OR (eq_0 AND eq_1 AND lt_2) ..."""
-    res = lt(his[0], los[0], prf.fold(0))
+    lt_0 OR (eq_0 AND lt_1) OR (eq_0 AND eq_1 AND lt_2) ...
+
+    All columns' lt circuits (and all tie eq circuits) are independent, so
+    they run as one batched call each — the rounds the ledger already models;
+    only the shallow combine chain stays sequential."""
+    if len(his) == 1:
+        return lt(his[0], los[0], prf.fold(0))
+    h = BShare(jnp.stack([c.shares for c in his], axis=1))  # (3, K, n)
+    lo = BShare(jnp.stack([c.shares for c in los], axis=1))
+    lts = lt(h, lo, prf.fold(0))
+    eqs = eq(BShare(h.shares[:, :-1]), BShare(lo.shares[:, :-1]), prf.fold(6))
+    res = BShare(lts.shares[:, 0])
     ties = None
     for i in range(1, len(his)):
         p = prf.fold(i)
-        e = eq(his[i - 1], los[i - 1], p.fold(1))
+        e = BShare(eqs.shares[:, i - 1])
         ties = e if ties is None else and_bit(ties, e, p.fold(2))
-        lt_i = lt(his[i], los[i], p.fold(3))
+        lt_i = BShare(lts.shares[:, i])
         res = or_bit(res, and_bit(ties, lt_i, p.fold(4)), p.fold(5))
     return res
 
@@ -96,13 +111,15 @@ def _stage(
     s = s.xor_public(jnp.where(asc, 0, 1).astype(s.ring.dtype))
     mask = s.lsb_mask()
 
-    out = {}
-    for idx_c, (name, col) in enumerate(cols.items()):
-        own = col
-        other = col.take(partner, axis=0)
-        d = and_(mask, own ^ other, prf.fold(9000 + 31 * k + 7 * j + idx_c))
-        out[name] = own ^ d
-    return out
+    # conditional swap of every column in one batched AND (per-column selects
+    # are independent; same words, one dispatch)
+    names = list(cols)
+    own = BShare(jnp.stack([cols[nm].shares for nm in names], axis=1))  # (3,C,n)
+    other = own.take(partner, axis=1)
+    m3 = BShare(jnp.broadcast_to(mask.shares[:, None, :], own.shares.shape))
+    d = and_(m3, own ^ other, prf.fold(9000 + 31 * k + 7 * j))
+    new = own ^ d
+    return {nm: BShare(new.shares[:, i]) for i, nm in enumerate(names)}
 
 
 def bitonic_sort(
@@ -138,6 +155,39 @@ def bitonic_sort(
     return cols
 
 
+def bitonic_sort_narrow(
+    cols: Dict[str, Share],
+    key_col: Union[str, Sequence[str]],
+    prf: PRFSetup,
+    descending: bool = False,
+) -> Dict[str, Share]:
+    """``bitonic_sort`` with payload narrowing: only the key columns plus a
+    shared row-index column ride the compare-exchange network; the remaining
+    (payload) columns are gathered once post-sort by the sorted index — a
+    secret permutation — via shuffle-and-reveal (``apply_secret_perm``).
+
+    Network traffic per payload column drops from O(n log^2 n) select words to
+    O(n) shuffle words. The index column itself costs one network column, so
+    narrowing only pays for >= 2 payload columns; below that we fall back to
+    the classic full-payload network (identical output either way).
+    """
+    key_cols = [key_col] if isinstance(key_col, str) else list(key_col)
+    payload = {n_: c for n_, c in cols.items() if n_ not in key_cols}
+    if len(payload) < 2:
+        return bitonic_sort(cols, key_col, prf, descending)
+    from .shuffle import apply_secret_perm
+
+    n = next(iter(cols.values())).shape[0]
+    net = {kc: cols[kc] for kc in key_cols}
+    assert "__idx" not in cols, "__idx is reserved by bitonic_sort_narrow"
+    net["__idx"] = const_b(jnp.arange(n, dtype=jnp.uint32), (n,))
+    net = bitonic_sort(net, key_cols, prf, descending)
+    idx = net.pop("__idx")
+    moved = apply_secret_perm(payload, idx, prf.fold(686))
+    # reassemble in the caller's original column order
+    return {n_: (net[n_] if n_ in net else moved[n_]) for n_ in cols}
+
+
 def sort_valid_first(
     cols: Dict[str, BShare], valid_col: str, prf: PRFSetup
 ) -> Dict[str, BShare]:
@@ -147,4 +197,4 @@ def sort_valid_first(
     keep arbitrary relative order (the network is not stable, which is fine —
     and is why Shrinkwrap needs no tie-breaking either).
     """
-    return bitonic_sort(cols, valid_col, prf, descending=True)
+    return bitonic_sort_narrow(cols, valid_col, prf, descending=True)

@@ -165,4 +165,14 @@ def plaintext_oracle(query: str, plain: Dict[str, Dict[str, np.ndarray]]):
         for mi, di in zip(d["major_icd9"].tolist(), d["diag"].tolist()):
             counts[(int(mi), int(di))] = counts.get((int(mi), int(di)), 0) + 1
         return counts
+    if query in ("med_dosage_sum", "med_dosage_avg"):
+        sums: Dict[int, int] = {}
+        cnts: Dict[int, int] = {}
+        for mv, dv in zip(m["med"].tolist(), m["dosage"].tolist()):
+            sums[int(mv)] = sums.get(int(mv), 0) + int(dv)
+            cnts[int(mv)] = cnts.get(int(mv), 0) + 1
+        if query == "med_dosage_sum":
+            return sums
+        return {k: {"sum": sums[k], "cnt": cnts[k], "avg": sums[k] // cnts[k]}
+                for k in sums}
     raise ValueError(query)

@@ -15,7 +15,9 @@ from ..plan.nodes import (
     CountValid,
     Distinct,
     Filter,
+    GroupByAvg,
     GroupByCount,
+    GroupBySum,
     Join,
     Max,
     Min,
@@ -45,6 +47,8 @@ __all__ = [
     "dosage_max_plan",
     "heart_or_circulatory_plan",
     "diag_breakdown_plan",
+    "med_dosage_sum_plan",
+    "med_dosage_avg_plan",
     "all_query_plans",
     "all_query_sql",
     "QUERY_SQL",
@@ -157,6 +161,18 @@ def diag_breakdown_plan() -> PlanNode:
     return GroupByCount(Scan("diagnoses"), ("major_icd9", "diag"))
 
 
+def med_dosage_sum_plan() -> PlanNode:
+    """SELECT med, SUM(dosage) AS total FROM medications GROUP BY med —
+    per-group SUM via the segmented-scan GroupBy core."""
+    return GroupBySum(Scan("medications"), "med", "dosage", name="total")
+
+
+def med_dosage_avg_plan() -> PlanNode:
+    """SELECT med, AVG(dosage) AS mean FROM medications GROUP BY med —
+    revealed as per-group (sum, cnt); the client derives sum // cnt."""
+    return GroupByAvg(Scan("medications"), "med", "dosage", name="mean")
+
+
 def all_query_plans():
     return {
         "comorbidity": comorbidity_plan(),
@@ -170,6 +186,8 @@ def all_query_plans():
         "dosage_max": dosage_max_plan(),
         "heart_or_circulatory": heart_or_circulatory_plan(),
         "diag_breakdown": diag_breakdown_plan(),
+        "med_dosage_sum": med_dosage_sum_plan(),
+        "med_dosage_avg": med_dosage_avg_plan(),
     }
 
 
@@ -229,6 +247,12 @@ QUERY_SQL = {
         "SELECT major_icd9, diag, COUNT(*) AS cnt FROM diagnoses "
         "GROUP BY major_icd9, diag"
     ),
+    "med_dosage_sum": (
+        "SELECT med, SUM(dosage) AS total FROM medications GROUP BY med"
+    ),
+    "med_dosage_avg": (
+        "SELECT med, AVG(dosage) AS mean FROM medications GROUP BY med"
+    ),
 }
 
 # The dialect-feature subset (used by the `python -m repro.sql --check`
@@ -241,6 +265,8 @@ DIALECT_QUERIES = (
     "dosage_max",
     "heart_or_circulatory",
     "diag_breakdown",
+    "med_dosage_sum",
+    "med_dosage_avg",
 )
 
 

@@ -168,6 +168,14 @@ class _BatchVal:
         return int(self.stacked.valid.shares.shape[-1])
 
 
+def _physical_sig(plan: PlanNode) -> tuple:
+    """Preorder tuple of operator class names — the *physical* plan shape
+    (logical fingerprints collapse physical variants by design)."""
+    return (plan.label,) + tuple(
+        s for c in plan.children() for s in _physical_sig(c)
+    )
+
+
 def _count_resizes(plan: PlanNode) -> int:
     """Noise-counter consumers per plan (post-order Resize count)."""
     n = sum(_count_resizes(c) for c in plan.children())
@@ -336,7 +344,10 @@ class Engine:
             (t.n, tuple(sorted((k, type(v).__name__) for k, v in t.cols.items())))
             for t in children
         )
-        return (node.describe(), child_sig)
+        # node.label disambiguates physical variants that share a describe()
+        # string by design (JoinSortMerge inherits Join's — fingerprints must
+        # not move when the planner flips algorithms, but compiled programs do)
+        return (node.label, node.describe(), child_sig)
 
     def _apply(self, node: PlanNode, children: List[SecretTable]) -> SecretTable:
         prf = self.prf
@@ -409,11 +420,17 @@ class Engine:
             }
             return results
         fp = plans[0].pretty()
+        # pretty() is the *logical* fingerprint and is deliberately identical
+        # across physical join variants; the preorder label tuple is the
+        # physical signature — stacking a Join slot with a JoinSortMerge slot
+        # would vmap one algorithm over the other's inputs
+        psig = _physical_sig(plans[0])
         for p in plans[1:]:
-            if p.pretty() != fp:
+            if p.pretty() != fp or _physical_sig(p) != psig:
                 raise ValueError(
                     "execute_batch requires structurally identical plans; "
-                    "bucket by full plan fingerprint before batching"
+                    "bucket by full plan fingerprint (and physical operator "
+                    "signature) before batching"
                 )
         if self.validate:
             from ..sql.catalog import Catalog
@@ -527,7 +544,7 @@ class Engine:
 
         if not self.jit_ops:
             return batched(self.prf, *stacked)
-        key = (node.describe(), self._batch_sig(stacked), ("batch", k))
+        key = (node.label, node.describe(), self._batch_sig(stacked), ("batch", k))
         jitted = Engine._jit_cache_get(key, count=k)
         if jitted is None:
             profile: Dict = {}

@@ -12,6 +12,10 @@ from .rss_gate import BLOCK, rss_gate
 
 
 def gate(xs, ys, alpha, boolean: bool = True, use_kernel: bool = True, block: int = BLOCK):
+    # lanes are flattened below, so broadcast-compatible operands (e.g. a
+    # (3,n,2) x against a (3,n,1) y) must be materialized to a common shape
+    # first or their flat lane indices misalign
+    xs, ys, alpha = jnp.broadcast_arrays(xs, ys, alpha)
     if not use_kernel or xs.size == 0:  # pallas_call cannot slice 0-lane operands
         return rss_gate_ref(xs, ys, alpha, boolean)
     record_launch("rss_gate")

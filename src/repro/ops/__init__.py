@@ -11,7 +11,12 @@ size.
 from .table import SecretTable  # noqa: F401
 from .filter import And, Or, Predicate, oblivious_filter  # noqa: F401
 from .join import oblivious_join  # noqa: F401
-from .groupby import oblivious_groupby_count  # noqa: F401
+from .join_sortmerge import oblivious_join_sortmerge  # noqa: F401
+from .groupby import (  # noqa: F401
+    oblivious_groupby_avg,
+    oblivious_groupby_count,
+    oblivious_groupby_sum,
+)
 from .orderby import oblivious_orderby  # noqa: F401
 from .distinct import oblivious_distinct  # noqa: F401
 from .aggregate import (  # noqa: F401

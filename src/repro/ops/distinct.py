@@ -5,7 +5,7 @@ import jax.numpy as jnp
 
 from ..core.prf import PRFSetup
 from ..core.sharing import BShare, select
-from ..core.sort import bitonic_sort
+from ..core.sort import bitonic_sort_narrow
 from .groupby import SENTINEL, pad_pow2, segment_starts
 from .table import SecretTable
 
@@ -25,7 +25,7 @@ def oblivious_distinct(table: SecretTable, col: str, prf: PRFSetup) -> SecretTab
 
     cols = {"__sk": sort_key, "__valid": table.valid}
     cols.update({k: table.bshare_col(k, prf) for k in table.cols})
-    cols = bitonic_sort(cols, "__sk", prf)
+    cols = bitonic_sort_narrow(cols, "__sk", prf)
     valid = cols.pop("__valid")
     cols.pop("__sk")
 

@@ -25,13 +25,21 @@ from typing import List, Sequence, Union
 
 import jax.numpy as jnp
 
-from ..core.circuits import and_bit, bit2a, eq, or_bit
+from ..core.circuits import and_bit, b2a, bit2a, eq, or_bit
 from ..core.prf import PRFSetup
 from ..core.sharing import AShare, BShare, mul, select
-from ..core.sort import bitonic_sort
+from ..core.sort import bitonic_sort_narrow
 from .table import SecretTable
 
-__all__ = ["oblivious_groupby_count", "segment_starts", "segmented_count", "pad_pow2"]
+__all__ = [
+    "oblivious_groupby_count",
+    "oblivious_groupby_sum",
+    "oblivious_groupby_avg",
+    "segment_starts",
+    "segmented_count",
+    "segmented_reduce",
+    "pad_pow2",
+]
 
 SENTINEL = 0xFFFFFFFE
 
@@ -81,49 +89,51 @@ def segment_starts(
     return and_bit(valid, not_e, prf.fold(602))
 
 
-def segmented_count(valid: BShare, start: BShare, prf: PRFSetup) -> AShare:
-    """Segmented inclusive prefix-sum of the valid bits (count within group).
+def _shift_a(x: AShare, d: int, fill: int) -> AShare:
+    s = x.shares
+    pad = jnp.zeros(s.shape[:1] + (d,) + s.shape[2:], s.dtype)
+    shifted = jnp.concatenate([pad, s[:, :-d]], axis=1)
+    out = AShare(shifted)
+    fills = jnp.zeros(x.shape, dtype=s.dtype).at[:d].set(fill)
+    return out.add_public(fills)
+
+
+def segmented_reduce(vals: AShare, f: AShare, prf: PRFSetup) -> AShare:
+    """Segmented inclusive prefix-sum of arithmetic ``vals``.
 
     Kogge-Stone over the associative combine
     (V, F) o (Vl, Fl) = (V + Vl * (1 - F), F OR Fl); log2(N) levels x 2 ring
-    multiplications.
+    multiplications. ``f`` is the arithmetic {0,1} segment-start flag; it may
+    have one fewer trailing dim than ``vals`` (broadcast across lanes) so a
+    (sum, count) pair reduces in a single scan.
     """
-    n = valid.shape[0]
-    v = bit2a(valid, prf.fold(611))
-    f = bit2a(start, prf.fold(612))
-
-    def shift_a(x: AShare, d: int, fill: int) -> AShare:
-        s = x.shares
-        pad = jnp.zeros(s.shape[:1] + (d,) + s.shape[2:], s.dtype)
-        shifted = jnp.concatenate([pad, s[:, :-d]], axis=1)
-        out = AShare(shifted)
-        fills = jnp.zeros(x.shape, dtype=s.dtype).at[:d].set(fill)
-        return out.add_public(fills)
-
+    n = vals.shape[0]
     d = 1
     lvl = 0
     while d < n:
-        vl = shift_a(v, d, 0)
-        fl = shift_a(f, d, 1)  # out-of-range neighbors act as boundaries
+        vl = _shift_a(vals, d, 0)
+        fl = _shift_a(f, d, 1)  # out-of-range neighbors act as boundaries
         keep = -f + 1  # (1 - F): local
-        v = v + mul(vl, keep, prf.fold(620 + lvl))
+        vals = vals + mul(vl, keep, prf.fold(620 + lvl))
         fmul = mul(f, fl, prf.fold(640 + lvl))
         f = f + fl - fmul  # OR
         d *= 2
         lvl += 1
-    return v
+    return vals
 
 
-def oblivious_groupby_count(
-    table: SecretTable,
-    key_col: Union[str, Sequence[str]],
-    prf: PRFSetup,
-    count_name: str = "cnt",
-) -> SecretTable:
-    key_cols = [key_col] if isinstance(key_col, str) else list(key_col)
-    table = pad_pow2(table)
+def segmented_count(valid: BShare, start: BShare, prf: PRFSetup) -> AShare:
+    """Segmented inclusive prefix-sum of the valid bits (count within group)."""
+    v = bit2a(valid, prf.fold(611))
+    f = bit2a(start, prf.fold(612))
+    return segmented_reduce(v, f, prf)
+
+
+def _masked_sort_keys(table: SecretTable, key_cols, prf: PRFSetup):
+    """Sentinel-masked sort keys: select(valid ? key : SENTINEL) per key
+    column, so invalid rows sink to the sorted suffix. Returns the sort-key
+    column dict and its names in key order."""
     vmask = table.valid.lsb_mask()
-
     sort_names = []
     cols: dict = {}
     for i, kc in enumerate(key_cols):
@@ -137,19 +147,11 @@ def oblivious_groupby_count(
         p = prf.fold(651) if i == 0 else prf.fold(651).fold(i)
         cols[name] = select(vmask, keyb, sentinel, p)
         sort_names.append(name)
-    cols["__valid"] = table.valid
-    cols.update({k: table.bshare_col(k, prf) for k in table.cols})
+    return cols, sort_names
 
-    cols = bitonic_sort(cols, sort_names, prf)
-    valid = cols.pop("__valid")
-    keys_sorted = [cols[kc] for kc in key_cols]
-    for name in sort_names:
-        cols.pop(name)
 
-    start = segment_starts(keys_sorted, valid, prf)
-    cnt = segmented_count(valid, start, prf)
-
-    # last row of each segment := representative
+def _representatives(valid: BShare, start: BShare, prf: PRFSetup) -> BShare:
+    """Mark the last row of each valid segment (it carries the aggregate)."""
     nxt_start = _shift_up(start, fill=1)
     nxt_valid = _shift_up(valid, fill=0)
     not_nxt_valid = nxt_valid.xor_public(nxt_valid.ring.const(1))
@@ -158,8 +160,98 @@ def oblivious_groupby_count(
         not_nxt_valid.and_public(not_nxt_valid.ring.const(1)),
         prf.fold(661),
     )
-    rep = and_bit(valid, boundary, prf.fold(662))
+    return and_bit(valid, boundary, prf.fold(662))
+
+
+def oblivious_groupby_count(
+    table: SecretTable,
+    key_col: Union[str, Sequence[str]],
+    prf: PRFSetup,
+    count_name: str = "cnt",
+) -> SecretTable:
+    key_cols = [key_col] if isinstance(key_col, str) else list(key_col)
+    table = pad_pow2(table)
+
+    # Narrow sort: only the masked keys + the valid bit enter the network.
+    # The masked keys double as the output key columns — they equal the raw
+    # keys on every valid row, and only valid representatives ever surface.
+    cols, sort_names = _masked_sort_keys(table, key_cols, prf)
+    cols["__valid"] = table.valid
+
+    cols = bitonic_sort_narrow(cols, sort_names, prf)
+    valid = cols.pop("__valid")
+    keys_sorted = [cols[name] for name in sort_names]
+
+    start = segment_starts(keys_sorted, valid, prf)
+    cnt = segmented_count(valid, start, prf)
+    rep = _representatives(valid, start, prf)
 
     out_cols: dict = {kc: ks for kc, ks in zip(key_cols, keys_sorted)}
     out_cols[count_name] = cnt
+    return SecretTable(out_cols, rep)
+
+
+def _groupby_agg(
+    table: SecretTable,
+    key_col: Union[str, Sequence[str]],
+    val_col: str,
+    prf: PRFSetup,
+    with_count: bool,
+):
+    """Shared sort + segmented-scan core of GROUP BY SUM / AVG. Returns
+    (sorted key cols by name, per-row aggregate AShare(s), representative
+    valid bits)."""
+    key_cols = [key_col] if isinstance(key_col, str) else list(key_col)
+    table = pad_pow2(table)
+
+    cols, sort_names = _masked_sort_keys(table, key_cols, prf)
+    cols["__valid"] = table.valid
+    cols["__val"] = table.bshare_col(val_col, prf)
+
+    cols = bitonic_sort_narrow(cols, sort_names, prf)
+    valid = cols.pop("__valid")
+    val_b = cols.pop("__val")
+    keys_sorted = [cols[name] for name in sort_names]
+
+    start = segment_starts(keys_sorted, valid, prf)
+    va = b2a(val_b, prf.fold(663))
+    vbit = bit2a(valid, prf.fold(664))
+    masked = mul(va, vbit, prf.fold(665))  # invalid rows contribute 0
+    f = bit2a(start, prf.fold(612))
+    if with_count:
+        # (sum, count) reduce in one scan: stack as a 2-wide lane, broadcast f
+        pair = AShare.stack([masked, vbit], axis=1)
+        agg = segmented_reduce(pair, AShare(f.shares[..., None]), prf.fold(617))
+        aggs = [agg[:, 0], agg[:, 1]]
+    else:
+        aggs = [segmented_reduce(masked, f, prf.fold(617))]
+    rep = _representatives(valid, start, prf)
+    out_keys = dict(zip(key_cols, keys_sorted))
+    return out_keys, aggs, rep
+
+
+def oblivious_groupby_sum(
+    table: SecretTable,
+    key_col: Union[str, Sequence[str]],
+    val_col: str,
+    prf: PRFSetup,
+    name: str = "sum",
+) -> SecretTable:
+    out_cols, (total,), rep = _groupby_agg(table, key_col, val_col, prf, False)
+    out_cols[name] = total
+    return SecretTable(out_cols, rep)
+
+
+def oblivious_groupby_avg(
+    table: SecretTable,
+    key_col: Union[str, Sequence[str]],
+    val_col: str,
+    prf: PRFSetup,
+    name: str = "avg",
+) -> SecretTable:
+    """Per-group (sum, count) pair; the division happens post-reveal
+    (same convention as the scalar AVG aggregate)."""
+    out_cols, (total, cnt), rep = _groupby_agg(table, key_col, val_col, prf, True)
+    out_cols[f"{name}_sum"] = total
+    out_cols[f"{name}_cnt"] = cnt
     return SecretTable(out_cols, rep)

@@ -1,0 +1,243 @@
+"""Oblivious sort-merge equi-join — breaks the Cartesian compare ceiling.
+
+The product join (:mod:`repro.ops.join`) evaluates one secure equality per
+(i, j) pair: O(N1*N2) compare work no matter how selective the join is. This
+module implements the sort-based alternative (ORQ-style): tag both inputs with
+an origin bit, sort the *union* by ``(key, origin)`` with the existing bitonic
+network — O((N1+N2) log^2 (N1+N2)) compare-exchange stages — then derive the
+valid column with an oblivious segmented propagation pass over neighbors.
+
+Layout after the union sort (build rows sort before probe rows inside each
+key segment, because origin_build = 0 < 1 = origin_probe)::
+
+    [ ...  k k k | k' k' ... ]      key segments (boundaries via one eq vs.
+      b b  p p p   b  p            the row above); b = build row, p = probe
+
+Each *probe* row then needs the payload of the matching *build* rows in its
+segment. A Kogge-Stone segmented copy-last scan propagates the payload of the
+rank-r valid build row forward within its segment (log2 N levels, 3 rounds
+each); output copy r marks a probe row valid iff its segment contains at
+least r+1 valid build rows. ``fanout`` — a *public* upper bound on build-side
+key multiplicity (from catalog metadata) — bounds the number of copies, so
+the output has ``fanout * pow2(N1+N2)`` rows instead of ``N1*N2``. With
+``fanout=1`` (unique build keys, the PK-FK case) this is a single pass.
+
+Correctness contract: results are identical to the product join *post-trim*
+(same set of valid rows, same values on them) provided ``fanout`` really
+bounds the number of valid build rows per key — the planner only selects this
+algorithm when the catalog declares such a bound.
+
+Narrowing: only ``(key, origin, row-index)`` ride the sorting network; all
+payload columns and the valid bit are gathered once post-sort through the
+sorted index — a secret permutation — via shuffle-and-reveal
+(:func:`repro.core.shuffle.apply_secret_perm`).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from ..core.circuits import a2b, and_bit, eq, eq_public, le
+from ..core.ledger import fused_scope
+from ..core.prf import PRFSetup
+from ..core.sharing import BShare, and_, const_b, select
+from ..core.shuffle import apply_secret_perm
+from ..core.sort import bitonic_sort
+from .groupby import _shift_down, segmented_count
+from .join import _disambiguate
+from .table import SecretTable
+
+__all__ = ["oblivious_join_sortmerge"]
+
+
+def _pow2_ceil(n: int) -> int:
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+def _union_col(col: BShare, before: int, n: int) -> BShare:
+    """Place ``col`` at row offset ``before`` of an n-row union column; all
+    other rows are zero shares (value 0, and always invalid)."""
+    after = n - before - col.shape[0]
+    return col.map_shares(
+        lambda s: jnp.pad(s, [(0, 0), (before, after)] + [(0, 0)] * (s.ndim - 2))
+    )
+
+
+def _rows(col: BShare, d: int, fill: int) -> BShare:
+    """Shift the scan state down by ``d`` along the union-row axis (value
+    axis 1 of a (copies, n, ...) share); out-of-range rows read ``fill``."""
+
+    def sh(s):
+        pad = jnp.zeros(s.shape[:2] + (d,) + s.shape[3:], s.dtype)
+        return jnp.concatenate([pad, s[:, :, :-d]], axis=2)
+
+    out = col.map_shares(sh)
+    fills = jnp.zeros(col.shape, dtype=col.ring.dtype).at[:, :d].set(fill)
+    return out.xor_public(fills)
+
+
+def _bcast(col: BShare, copies: int) -> BShare:
+    """(n,) -> (copies, n) view (public replication, free)."""
+    return col.map_shares(
+        lambda s: jnp.broadcast_to(s[:, None, :], (3, copies) + s.shape[1:])
+    )
+
+
+def _empty_like(left: SecretTable, right: SecretTable) -> SecretTable:
+    cols: Dict[str, BShare] = {}
+    z = jnp.zeros((3, 0), dtype=jnp.uint32)
+    for name in left.cols:
+        cols[name] = BShare(z)
+    for name in right.cols:
+        cols[_disambiguate(cols, name)] = BShare(z)
+    return SecretTable(cols, BShare(z))
+
+
+def oblivious_join_sortmerge(
+    left: SecretTable,
+    right: SecretTable,
+    on: Tuple[str, str],
+    prf: PRFSetup,
+    theta: Optional[Tuple[str, str, str]] = None,
+    fanout: int = 1,
+    build: str = "left",
+) -> SecretTable:
+    """Equi-join ``left.on[0] == right.on[1]`` via union sort + segmented
+    propagation; output size = fanout * pow2(n1 + n2).
+
+    ``build`` names the side whose rows are propagated ("left"/"right");
+    ``fanout`` must publicly bound that side's valid rows per key value.
+    ``theta`` is the same optional (left_col, op, right_col) extra predicate
+    the product join accepts, op in {"le", "eq"}.
+    """
+    if build not in ("left", "right"):
+        raise ValueError(f"build side must be 'left' or 'right', got {build!r}")
+    if fanout < 1:
+        raise ValueError(f"fanout must be >= 1, got {fanout}")
+    if left.n == 0 or right.n == 0:
+        return _empty_like(left, right)
+
+    p = prf.fold(520)
+    if build == "left":
+        btab, ptab, bkey, pkey = left, right, on[0], on[1]
+    else:
+        btab, ptab, bkey, pkey = right, left, on[1], on[0]
+    nb, nprobe = btab.n, ptab.n
+    n = _pow2_ceil(nb + nprobe)
+
+    # ---- union: build rows first, then probe rows, then padding -------------
+    ukey = BShare.concat(
+        [btab.bshare_col(bkey, p), ptab.bshare_col(pkey, p)]
+    ).pad_rows(n)
+    origin = const_b(
+        jnp.concatenate(
+            [
+                jnp.zeros(nb, dtype=jnp.uint32),
+                jnp.ones(nprobe, dtype=jnp.uint32),
+                jnp.zeros(n - nb - nprobe, dtype=jnp.uint32),
+            ]
+        ),
+        (n,),
+    )
+    uvalid = BShare.concat([btab.valid, ptab.valid]).pad_rows(n)
+
+    payload: Dict[str, BShare] = {"__valid": uvalid}
+    bnames = list(btab.cols)
+    pnames = list(ptab.cols)
+    for name in bnames:
+        payload[f"b.{name}"] = _union_col(btab.bshare_col(name, p), 0, n)
+    for name in pnames:
+        payload[f"p.{name}"] = _union_col(ptab.bshare_col(name, p), nb, n)
+
+    # ---- sort the narrow network (key, origin, row index) -------------------
+    net = {
+        "__key": ukey,
+        "__orig": origin,
+        "__idx": const_b(jnp.arange(n, dtype=jnp.uint32), (n,)),
+    }
+    net = bitonic_sort(net, ["__key", "__orig"], p.fold(1))
+    moved = apply_secret_perm(payload, net["__idx"], p.fold(2))
+    key_s, orig_s = net["__key"], net["__orig"]
+    valid_s = moved["__valid"]
+
+    # ---- segment boundaries & build-row markers -----------------------------
+    e = eq(key_s, _shift_down(key_s), p.fold(3))
+    e = e.and_public(jnp.ones(n, dtype=e.ring.dtype).at[0].set(0))
+    bnd = e.xor_public(e.ring.const(1))  # row 0 always starts a segment
+    not_orig = orig_s.xor_public(orig_s.ring.const(1))
+    defined = and_bit(not_orig, valid_s, p.fold(4))
+
+    if fanout > 1:
+        # rank of each valid build row within its key segment (1-based),
+        # then one-hot it across the fanout copies with a single batched
+        # public equality
+        rank = segmented_count(defined, bnd, p.fold(5))
+        rank_b = a2b(rank, p.fold(6))
+        rk = _bcast(rank_b, fanout)
+        wanted = (jnp.arange(fanout, dtype=jnp.uint32) + 1)[:, None]
+        hit = eq_public(rk, jnp.broadcast_to(wanted, (fanout, n)), p.fold(7))
+        g = and_bit(_bcast(defined, fanout), hit, p.fold(8))
+    else:
+        g = defined.reshape(1, n)
+
+    # ---- segmented copy-last propagation of the build payload ---------------
+    wb = max(len(bnames), 1)
+    if bnames:
+        pack = BShare.stack([moved[f"b.{c}"] for c in bnames], axis=1)  # (n, Wb)
+    else:
+        pack = const_b(0, (n, 1))
+    v = _bcast(pack, fanout)  # (fanout, n, Wb)
+    f = _bcast(bnd, fanout)  # (fanout, n)
+    levels = max(n.bit_length() - 1, 0)
+    ps = p.fold(9)
+    with fused_scope("sortmerge_scan", rounds=3 * levels):
+        d, lvl = 1, 0
+        while d < n:
+            gl = _rows(g, d, 0)
+            vl = _rows(v, d, 0)
+            fl = _rows(f, d, 1)
+            ng = g.xor_public(g.ring.const(1))
+            nf = f.xor_public(f.ring.const(1))
+            nfl = fl.xor_public(fl.ring.const(1))
+            u = and_(ng, nf, ps.fold(4 * lvl))
+            # f | fl shares u's round (independent ANDs)
+            f = and_(nf, nfl, ps.fold(4 * lvl + 1)).xor_public(f.ring.const(1))
+            t = and_(u, gl, ps.fold(4 * lvl + 2))
+            tm = t.lsb_mask().map_shares(
+                lambda s: jnp.broadcast_to(s[..., None], s.shape + (wb,))
+            )
+            v = select(tm, vl, v, ps.fold(4 * lvl + 3))
+            g = g ^ t  # t is disjoint from g (t requires g = 0)
+            d *= 2
+            lvl += 1
+
+    # ---- output validity ----------------------------------------------------
+    ov = and_bit(orig_s, valid_s, p.fold(10))  # probe row with a true tuple
+    out_valid = and_bit(_bcast(ov, fanout), g, p.fold(11))
+    if theta is not None:
+        tcol_l, top, tcol_r = theta
+        if top not in ("le", "eq"):
+            raise ValueError(f"unsupported theta op {top}")
+        if build == "left":
+            xl = v[:, :, bnames.index(tcol_l)]
+            xr = _bcast(moved[f"p.{tcol_r}"], fanout)
+        else:
+            xl = _bcast(moved[f"p.{tcol_l}"], fanout)
+            xr = v[:, :, bnames.index(tcol_r)]
+        extra = le(xl, xr, p.fold(12)) if top == "le" else eq(xl, xr, p.fold(12))
+        out_valid = and_bit(out_valid, extra, p.fold(13))
+
+    # ---- assemble: fanout copies stacked row-major --------------------------
+    def flat(col: BShare) -> BShare:  # (fanout, n) -> (fanout * n,)
+        return col.map_shares(lambda s: s.reshape((3, fanout * n) + s.shape[3:]))
+
+    build_out = {name: flat(v[:, :, i]) for i, name in enumerate(bnames)}
+    probe_out = {name: flat(_bcast(moved[f"p.{name}"], fanout)) for name in pnames}
+    lcols, rcols = (build_out, probe_out) if build == "left" else (probe_out, build_out)
+    cols: Dict[str, BShare] = {}
+    for name in left.cols:
+        cols[name] = lcols[name]
+    for name in right.cols:
+        cols[_disambiguate(cols, name)] = rcols[name]
+    return SecretTable(cols, flat(out_valid))

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from ..core.prf import PRFSetup
 from ..core.sharing import BShare, select
-from ..core.sort import bitonic_sort
+from ..core.sort import bitonic_sort_narrow
 from .table import SecretTable
 
 __all__ = ["oblivious_orderby"]
@@ -43,7 +43,7 @@ def oblivious_orderby(
     for k in table.cols:
         if k != col:
             cols[k] = table.bshare_col(k, prf)
-    cols = bitonic_sort(cols, "__sk", prf, descending=descending)
+    cols = bitonic_sort_narrow(cols, "__sk", prf, descending=descending)
     valid = cols.pop("__valid")
     # the sort key doubles as the (masked) column value for valid rows
     out_cols = dict(cols)

@@ -26,7 +26,10 @@ __all__ = [
     "Filter",
     "Project",
     "Join",
+    "JoinSortMerge",
     "GroupByCount",
+    "GroupBySum",
+    "GroupByAvg",
     "OrderBy",
     "Distinct",
     "CountValid",
@@ -143,6 +146,25 @@ class Join(PlanNode):
 
 
 @dataclasses.dataclass
+class JoinSortMerge(Join):
+    """Physical sort-merge variant of :class:`Join` (same logical contract).
+
+    Produced only by the planner's algorithm-selection pass
+    (:func:`repro.plan.policies.select_join_algorithms`) — the SQL compiler
+    always emits the logical :class:`Join`. ``describe()`` is deliberately
+    *inherited*: plan fingerprints, the privacy accountant's observation
+    signatures, and the service plan cache must not change when the planner
+    flips the physical algorithm (the disclosed sizes are identical).
+
+    ``fanout`` is a public catalog-derived upper bound on the build side's
+    valid rows per key; ``build`` names that side ("left"/"right").
+    """
+
+    fanout: int = 1
+    build: str = "left"
+
+
+@dataclasses.dataclass
 class GroupByCount(PlanNode):
     """GROUP BY one or more key columns with a COUNT(*) aggregate.
 
@@ -169,6 +191,52 @@ class GroupByCount(PlanNode):
         # plan fingerprints (sql/compile.py) and jit-cache keys, and two plans
         # differing only in the count column name are different plans
         return f"GroupByCount({','.join(self.keys)}->{self.count_name})"
+
+
+@dataclasses.dataclass
+class GroupBySum(PlanNode):
+    """GROUP BY key column(s) with a SUM(col) aggregate (segmented
+    arithmetic scan; see repro.ops.groupby)."""
+
+    child: PlanNode
+    key: Union[str, Tuple[str, ...]]
+    col: str = ""
+    name: str = "sum"
+
+    def __post_init__(self):
+        if not isinstance(self.key, str):
+            key = tuple(self.key)
+            self.key = key[0] if len(key) == 1 else key
+
+    @property
+    def keys(self) -> Tuple[str, ...]:
+        return (self.key,) if isinstance(self.key, str) else self.key
+
+    def describe(self) -> str:
+        return f"GroupBySum({','.join(self.keys)}:{self.col}->{self.name})"
+
+
+@dataclasses.dataclass
+class GroupByAvg(PlanNode):
+    """GROUP BY key column(s) with an AVG(col) aggregate: per-group (sum,
+    count) pair; the division happens post-reveal like :class:`Avg`."""
+
+    child: PlanNode
+    key: Union[str, Tuple[str, ...]]
+    col: str = ""
+    name: str = "avg"
+
+    def __post_init__(self):
+        if not isinstance(self.key, str):
+            key = tuple(self.key)
+            self.key = key[0] if len(key) == 1 else key
+
+    @property
+    def keys(self) -> Tuple[str, ...]:
+        return (self.key,) if isinstance(self.key, str) else self.key
+
+    def describe(self) -> str:
+        return f"GroupByAvg({','.join(self.keys)}:{self.col}->{self.name})"
 
 
 @dataclasses.dataclass

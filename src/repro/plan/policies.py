@@ -13,13 +13,14 @@ Resize itself).
 """
 from __future__ import annotations
 
+import os
 from typing import Callable, Optional
 
 from ..core.resizer import ResizerConfig
-from .nodes import PlanNode, Resize
+from .nodes import Filter, Join, JoinSortMerge, PlanNode, Project, Resize, Scan
 from .registry import lookup
 
-__all__ = ["insert_resizers"]
+__all__ = ["insert_resizers", "select_join_algorithms"]
 
 
 def insert_resizers(
@@ -63,3 +64,83 @@ def insert_resizers(
         return node
 
     return rewrite(plan, True)
+
+
+# -----------------------------------------------------------------------------
+# Join algorithm selection (physical Join -> JoinSortMerge rewrite)
+# -----------------------------------------------------------------------------
+
+def _key_multiplicity(node: PlanNode, col: str, catalog) -> Optional[int]:
+    """Public upper bound on duplicates of ``col`` at this subplan's output,
+    derived from the catalog's declared per-table bounds. Only rewrites that
+    cannot *increase* multiplicity propagate the bound; anything else (joins,
+    aggregates, unknown shapes) returns None = unbounded."""
+    if catalog is None:
+        return None
+    if isinstance(node, Scan):
+        return catalog.key_multiplicity(node.table, col)
+    if isinstance(node, (Filter, Resize)):
+        return _key_multiplicity(node.children()[0], col, catalog)
+    if isinstance(node, Project) and col in node.cols:
+        return _key_multiplicity(node.children()[0], col, catalog)
+    return None
+
+
+def select_join_algorithms(
+    plan: PlanNode,
+    cost_model=None,
+    catalog=None,
+    mode: Optional[str] = None,
+) -> PlanNode:
+    """Rewrite logical :class:`Join` nodes to :class:`JoinSortMerge` where the
+    sort-merge algorithm is applicable (a finite catalog multiplicity bound on
+    at least one input's join key) and — in ``auto`` mode — cheaper per the
+    cost model.
+
+    mode (default: ``$REPRO_JOIN_ALGO`` or ``auto``):
+      * ``product``   — never rewrite (the lazy Cartesian join everywhere)
+      * ``sortmerge`` — rewrite every applicable join (force the new path)
+      * ``auto``      — rewrite when applicable AND the analytic byte cost of
+                        the sort-merge variant beats the product variant
+
+    The rewrite is physical-only: ``JoinSortMerge.describe()`` is inherited
+    from Join, so plan fingerprints, accountant signatures, and rendered SQL
+    are identical across the flip (DESIGN.md §13).
+    """
+    if mode is None:
+        mode = os.environ.get("REPRO_JOIN_ALGO") or "auto"
+    if mode not in ("auto", "product", "sortmerge"):
+        raise ValueError(
+            f"join algo mode {mode!r} (expected auto|product|sortmerge)"
+        )
+    if mode == "product":
+        return plan
+
+    def rewrite(node: PlanNode) -> PlanNode:
+        node = node.replace_children([rewrite(c) for c in node.children()])
+        if type(node) is not Join:
+            return node
+        lb = _key_multiplicity(node.left, node.on[0], catalog)
+        rb = _key_multiplicity(node.right, node.on[1], catalog)
+        if lb is None and rb is None:
+            return node  # no public fanout bound -> sort-merge inapplicable
+        # build on the side with the smaller finite bound (fewer match slots)
+        if rb is None or (lb is not None and lb <= rb):
+            fanout, build = lb, "left"
+        else:
+            fanout, build = rb, "right"
+        sm = JoinSortMerge(
+            node.left, node.right, node.on, node.theta,
+            fanout=max(int(fanout), 1), build=build,
+        )
+        if mode == "sortmerge":
+            return sm
+        if cost_model is None:
+            return node
+        own = lambda est, kids: est["bytes"] - sum(k["bytes"] for k in kids)
+        kids = [cost_model.estimate(c) for c in node.children()]
+        d_prod = lookup(Join).estimate(node, kids, cost_model)
+        d_sm = lookup(JoinSortMerge).estimate(sm, kids, cost_model)
+        return sm if own(d_sm, kids) < own(d_prod, kids) else node
+
+    return rewrite(plan)

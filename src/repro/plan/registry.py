@@ -65,8 +65,11 @@ from ..ops import (
     min_column,
     oblivious_distinct,
     oblivious_filter,
+    oblivious_groupby_avg,
     oblivious_groupby_count,
+    oblivious_groupby_sum,
     oblivious_join,
+    oblivious_join_sortmerge,
     oblivious_orderby,
     sum_column,
 )
@@ -78,8 +81,11 @@ from .nodes import (
     CountValid,
     Distinct,
     Filter,
+    GroupByAvg,
     GroupByCount,
+    GroupBySum,
     Join,
+    JoinSortMerge,
     Max,
     Min,
     OrderBy,
@@ -444,6 +450,73 @@ register(OperatorDef(
 ))
 
 
+def sortmerge_join_bytes(
+    n1: int,
+    n2: int,
+    build_cols: int,
+    probe_cols: int,
+    fanout: int = 1,
+    theta: bool = False,
+) -> float:
+    """Analytic comm cost of the sort-merge join (ops/join_sortmerge.py):
+    union sort on pow2(n1+n2) rows + O(n) payload gather + segmented
+    propagation — vs. the product join's O(n1*n2) equality sweep."""
+    n = 1 << max(int(math.ceil(math.log2(max(n1 + n2, 2)))), 1)
+    levels = max(int(math.log2(n)), 1)
+    # union sort: 3 network columns (key, origin, index), 2-key lexicographic
+    cost = _stages(n) * n * (BYTES["lt"] + 3 * BYTES["and"])
+    cost += _stages(n) * n * (BYTES["eq"] + BYTES["lt"] + 2 * BYTES["and"])
+    # payload gather via shuffle-and-reveal: 1-col shuffle + n-word reveal +
+    # (build + probe + valid)-column inverse shuffle
+    w = build_cols + probe_cols + 1
+    cost += 3 * n * 4 + 4 * n + 3 * n * 4 * w
+    # segment boundary equality + build-row marker AND
+    cost += n * (BYTES["eq"] + BYTES["and"])
+    if fanout > 1:
+        # rank scan (2 bit2a + 2 ring mults/level), one a2b, batched rank eq
+        cost += n * 2 * BYTES["bit2a"] + levels * n * 8 + n * BYTES["a2b"]
+        cost += fanout * n * (BYTES["eq"] + BYTES["and"])
+    # segmented copy-last scan: 3 control ANDs + build-width select per level
+    cost += levels * fanout * n * (3 + max(build_cols, 1)) * BYTES["and"]
+    # output validity
+    cost += 2 * fanout * n * BYTES["and"]
+    if theta:
+        cost += fanout * n * (BYTES["lt"] + BYTES["and"])
+    return cost
+
+
+def _sortmerge_estimate(node: JoinSortMerge, children, cm) -> Dict:
+    l, r = children
+    bc, pc = (
+        (l["cols"], r["cols"]) if node.build == "left" else (r["cols"], l["cols"])
+    )
+    n_union = 1 << max(int(math.ceil(math.log2(max(l["n"] + r["n"], 2)))), 1)
+    cost = sortmerge_join_bytes(
+        int(l["n"]), int(r["n"]), int(bc), int(pc), node.fanout, node.theta is not None
+    )
+    return {
+        "n": node.fanout * n_union,
+        "t": max(l["t"] * r["t"] * cm.join_selectivity, 1),
+        "cols": l["cols"] + r["cols"],
+        "bytes": l["bytes"] + r["bytes"] + cost,
+    }
+
+
+register(OperatorDef(
+    node_type=JoinSortMerge,
+    schema=_join_schema,
+    estimate=_sortmerge_estimate,
+    protocol=lambda node: lambda prf, l, r: oblivious_join_sortmerge(
+        l, r, node.on, prf, theta=node.theta, fanout=node.fanout, build=node.build
+    ),
+    # physical-only node: the planner's algorithm-selection pass introduces it
+    # after compilation; SQL text always renders from the logical Join plan
+    sql_shape="none",
+    resizer="internal",
+    balloons=True,
+))
+
+
 def _sortish_estimate(c: Dict, extra_key_cols: int = 0) -> (int, float):
     """Shared sort-based cost core for GroupBy/Distinct/OrderBy."""
     n = 1 << max(int(math.ceil(math.log2(max(c["n"], 2)))), 0)
@@ -491,6 +564,84 @@ register(OperatorDef(
     render_head=_render_groupby_head,
     sql_shape="head",
     resizer="internal",
+))
+
+
+def _groupby_agg_schema(out_names):
+    def schema(node, children, catalog) -> PlanSchema:
+        c = children[0]
+        for k in node.keys:
+            c.require(k, node)
+        c.require(node.col, node)
+        out = OrderedDict((k, c.kind(k)) for k in node.keys)
+        for n in out_names(node):
+            out[n] = "a"
+        return PlanSchema(out)
+
+    return schema
+
+
+def _groupby_agg_estimate(node, children, cm) -> Dict:
+    c = children[0]
+    n, cost = _sortish_estimate(c, extra_key_cols=len(node.keys) - 1)
+    # value b2a + valid bit2a + mask mult + segmented scan over the pair
+    cost += n * (BYTES["b2a"] + 2 * BYTES["bit2a"] + BYTES["and"])
+    cost += math.log2(max(n, 2)) * n * 16
+    return {
+        "n": n,
+        "t": min(c["t"], n),
+        "cols": len(node.keys) + 2,
+        "bytes": c["bytes"] + cost,
+    }
+
+
+def _render_groupby_agg_head(kw: str, default_name: str):
+    # the default name is a dialect keyword — render the alias only when set
+    def render(r, node, schema):
+        keys = [r.qual(schema, k) for k in node.keys]
+        alias = f" AS {node.name}" if node.name != default_name else ""
+        head = ", ".join(keys) + f", {kw}({r.qual(schema, node.col)}){alias}"
+        return head, "GROUP BY " + ", ".join(keys)
+
+    return render
+
+
+def _groupby_avg_post_reveal(node: GroupByAvg, rows):
+    import numpy as np
+
+    s, c = rows.get(f"{node.name}_sum"), rows.get(f"{node.name}_cnt")
+    if s is None or c is None:
+        return rows
+    out = {k: v for k, v in rows.items() if k not in (f"{node.name}_sum", f"{node.name}_cnt")}
+    out[node.name] = s // np.maximum(c, 1)
+    return out
+
+
+register(OperatorDef(
+    node_type=GroupBySum,
+    schema=_groupby_agg_schema(lambda node: [node.name]),
+    estimate=_groupby_agg_estimate,
+    protocol=lambda node: lambda prf, t: oblivious_groupby_sum(
+        t, node.keys, node.col, prf, node.name
+    ),
+    render_head=_render_groupby_agg_head("SUM", "sum"),
+    sql_shape="head",
+    resizer="internal",
+))
+
+
+register(OperatorDef(
+    node_type=GroupByAvg,
+    schema=_groupby_agg_schema(lambda node: [f"{node.name}_sum", f"{node.name}_cnt"]),
+    estimate=_groupby_agg_estimate,
+    protocol=lambda node: lambda prf, t: oblivious_groupby_avg(
+        t, node.keys, node.col, prf, node.name
+    ),
+    render_head=_render_groupby_agg_head("AVG", "avg"),
+    post_reveal=_groupby_avg_post_reveal,
+    sql_shape="head",
+    resizer="internal",
+    batchable=False,
 ))
 
 

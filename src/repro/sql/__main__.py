@@ -43,6 +43,7 @@ def check() -> int:
         else:
             print(f"OK   {name}")
     failures += _check_dialect_execution()
+    failures += _check_sortmerge_execution()
     return 1 if failures else 0
 
 
@@ -80,6 +81,20 @@ def _check_dialect_execution() -> int:
                 ok = int(rows["hi"][0]) == oracle
             elif name == "heart_or_circulatory":
                 ok = int(rows["cnt"][0]) == oracle
+            elif name == "med_dosage_sum":
+                got = {
+                    int(k): int(v)
+                    for k, v in zip(rows["med"], rows["total"])
+                }
+                ok = got == oracle
+            elif name == "med_dosage_avg":
+                got = {
+                    int(k): {"sum": int(s), "cnt": int(c), "avg": int(s) // max(int(c), 1)}
+                    for k, s, c in zip(
+                        rows["med"], rows["mean_sum"], rows["mean_cnt"]
+                    )
+                }
+                ok = got == oracle
             else:  # diag_breakdown
                 got = {
                     (int(a), int(b)): int(c)
@@ -99,6 +114,60 @@ def _check_dialect_execution() -> int:
             print(f"FAIL exec {name}: {type(e).__name__}: {e}")
             failures += 1
     return failures
+
+
+def _check_sortmerge_execution() -> int:
+    """Force the sort-merge physical join on one golden join query and check
+    its revealed rows match the product join and the plaintext oracle."""
+    import jax
+    import numpy as np
+
+    from ..data.healthlnk import generate_healthlnk, plaintext_oracle
+    from ..data.queries import QUERY_SQL
+    from ..engine.executor import Engine
+    from ..plan.nodes import JoinSortMerge
+    from .catalog import Catalog
+    from .compile import compile_query
+
+    name = "dosage_study"
+    try:
+        tables, plain = generate_healthlnk(n=8, seed=3, aspirin_frac=0.5)
+        # declare the observed per-key duplicate bound so the planner may
+        # pick the sort-merge algorithm (a real deployment declares this as
+        # schema metadata)
+        mult = {
+            t: {"pid": int(np.bincount(cols["pid"]).max())}
+            for t, cols in plain.items()
+        }
+        catalog = Catalog.from_tables(tables, multiplicity=mult)
+        eng = Engine(tables, key=jax.random.PRNGKey(2))
+        results = {}
+        for mode in ("product", "sortmerge"):
+            plan = compile_query(QUERY_SQL[name], catalog, join_algo=mode)
+            has_sm = any(
+                isinstance(n, JoinSortMerge) for n in _walk_nodes(plan)
+            )
+            if (mode == "sortmerge") != has_sm:
+                print(f"FAIL exec {name} [{mode}]: algorithm selection "
+                      f"did not produce the expected physical join")
+                return 1
+            out, _ = eng.execute(plan)
+            results[mode] = sorted(out.reveal_true_rows()["pid"].tolist())
+        oracle = sorted(set(plaintext_oracle(name, plain)))
+        if results["product"] == results["sortmerge"] == oracle:
+            print(f"OK   exec {name} [sortmerge == product == oracle]")
+            return 0
+        print(f"FAIL exec {name} [sortmerge]: {results} vs oracle {oracle}")
+        return 1
+    except Exception as e:  # noqa: BLE001
+        print(f"FAIL exec {name} [sortmerge]: {type(e).__name__}: {e}")
+        return 1
+
+
+def _walk_nodes(plan):
+    yield plan
+    for c in plan.children():
+        yield from _walk_nodes(c)
 
 
 def main(argv) -> int:

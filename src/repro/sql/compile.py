@@ -49,7 +49,9 @@ from ..plan.nodes import (
     CountValid,
     Distinct,
     Filter,
+    GroupByAvg,
     GroupByCount,
+    GroupBySum,
     Join,
     Max,
     Min,
@@ -59,7 +61,7 @@ from ..plan.nodes import (
     Scan,
     Sum,
 )
-from ..plan.policies import insert_resizers
+from ..plan.policies import insert_resizers, select_join_algorithms
 from ..plan.registry import SchemaError, infer_schema, lookup
 from .catalog import Catalog, HEALTHLNK_CATALOG
 from .lexer import SqlError
@@ -419,19 +421,26 @@ def _apply_terminals(
     count_name: Optional[str] = None
     if stmt.group_by:
         keys = tuple(phys(k) for k in stmt.group_by)
-        counts = [i for i in aggs if isinstance(i, CountStar)]
-        if len(counts) != 1 or len(aggs) != 1:
+        if len(aggs) != 1 or not isinstance(
+            aggs[0], (CountStar, SumItem, AvgItem)
+        ):
             raise SqlError(
-                "GROUP BY queries must select exactly one COUNT(*) "
-                "(plus the grouping columns)", sql,
+                "GROUP BY queries must select exactly one COUNT(*), SUM(col) "
+                "or AVG(col) (plus the grouping columns)", sql,
             )
         if any(phys(c) not in keys for c in plain):
             raise SqlError(
                 "GROUP BY queries may only select the grouping columns and "
-                "COUNT(*)", sql,
+                "the aggregate", sql,
             )
-        count_name = counts[0].alias or "cnt"
-        node = GroupByCount(node, keys, count_name=count_name)
+        agg = aggs[0]
+        if isinstance(agg, CountStar):
+            count_name = agg.alias or "cnt"
+            node = GroupByCount(node, keys, count_name=count_name)
+        elif isinstance(agg, SumItem):
+            node = GroupBySum(node, keys, phys(agg.col), name=agg.alias or "sum")
+        else:
+            node = GroupByAvg(node, keys, phys(agg.col), name=agg.alias or "avg")
     elif aggs and not plain:
         if len(stmt.items) != 1:
             raise SqlError("only a single aggregate per query is supported", sql)
@@ -599,6 +608,7 @@ def compile_query(
     addition: str = "parallel",
     cost_model: Optional[CostModel] = None,
     reorder_joins: bool = True,
+    join_algo: Optional[str] = None,
 ) -> PlanNode:
     """SQL -> fully Resizer-placed physical plan.
 
@@ -606,9 +616,21 @@ def compile_query(
     pass ``cfg_factory`` instead for per-node configs. ``placement`` follows
     :func:`repro.plan.policies.insert_resizers`; ``cost_based`` placement uses
     ``cost_model`` (defaulting to one derived from the catalog sizes).
+
+    ``join_algo`` (default ``$REPRO_JOIN_ALGO`` or ``auto``) picks the
+    physical join algorithm per join node
+    (:func:`repro.plan.policies.select_join_algorithms`). The rewrite only
+    fires for catalogs that declare key multiplicity bounds, so plans over
+    the bare schema catalog are byte-stable.
     """
     plan = compile_logical(
         sql, catalog, cost_model=cost_model, reorder_joins=reorder_joins
+    )
+    plan = select_join_algorithms(
+        plan,
+        cost_model=cost_model or default_cost_model(catalog),
+        catalog=catalog,
+        mode=join_algo,
     )
     if placement == "none":
         return plan

@@ -33,6 +33,21 @@ def test_rss_gate_multidim():
     np.testing.assert_array_equal(got, np.asarray(rss_gate_ref(xs, ys, al, True)))
 
 
+def test_rss_gate_broadcast_operands():
+    """Broadcast-compatible operands ((3,n,2) x against a (3,n,1) y, the
+    shape the segmented (sum,count) scan feeds mul) must align per-lane —
+    the flattener used to misalign them silently."""
+    xs = rng.integers(0, 2**32, (3, 200, 2), dtype=np.uint32)
+    ys = rng.integers(0, 2**32, (3, 200, 1), dtype=np.uint32)
+    al = rng.integers(0, 2**32, (3, 200, 2), dtype=np.uint32)
+    for boolean in (True, False):
+        got = np.asarray(gate(xs, ys, al, boolean=boolean))
+        want = np.asarray(
+            rss_gate_ref(xs, np.broadcast_to(ys, xs.shape), al, boolean)
+        )
+        np.testing.assert_array_equal(got, want)
+
+
 def test_rss_gate_preserves_protocol_semantics(prf):
     """Kernel output must be a valid sharing of x*y (sums to the product)."""
     from repro.core.prf import zero_share_add

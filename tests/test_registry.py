@@ -19,8 +19,11 @@ from repro.plan import (
     CountValid,
     Distinct,
     Filter,
+    GroupByAvg,
     GroupByCount,
+    GroupBySum,
     Join,
+    JoinSortMerge,
     Max,
     Min,
     OrderBy,
@@ -54,7 +57,12 @@ SAMPLES = {
     ),
     Project: lambda: Project(_dx(), ("pid", "icd9")),
     Join: lambda: Join(_dx(), Scan("medications"), ("pid", "pid")),
+    JoinSortMerge: lambda: JoinSortMerge(
+        _dx(), Scan("medications"), ("pid", "pid"), fanout=2, build="right"
+    ),
     GroupByCount: lambda: GroupByCount(_dx(), ("major_icd9", "diag")),
+    GroupBySum: lambda: GroupBySum(Scan("medications"), "med", "dosage"),
+    GroupByAvg: lambda: GroupByAvg(Scan("medications"), "med", "dosage"),
     OrderBy: lambda: OrderBy(_dx(), "time", descending=True, limit=4),
     Distinct: lambda: Distinct(_dx(), "pid"),
     CountValid: lambda: CountValid(_dx()),

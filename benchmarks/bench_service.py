@@ -3,8 +3,9 @@ prepared-statement literal sweep), accountant overhead, the escalation path,
 the query-admission batching sweep (queries/sec serial vs batched at
 batch sizes 1/4/16 — DESIGN.md §11), and the durable-state persistence sweep
 (WAL-on vs WAL-off admit->execute latency + snapshot compaction time —
-DESIGN.md §12), over the HealthLnK queries submitted as SQL through
-:class:`AnalyticsService` by several tenants.
+DESIGN.md §12), and the tracing-overhead sweep (traced vs untraced batched
+drain + exact ledger parity — DESIGN.md §14), over the HealthLnK queries
+submitted as SQL through :class:`AnalyticsService` by several tenants.
 
 Emits ``BENCH_service.json`` at the repo root with machine-readable per-node
 ``ExecutionReport.to_dict()`` payloads alongside the service counters (the
@@ -28,6 +29,7 @@ from benchmarks.common import Row, timeit
 from repro.core.noise import NoTrim, TruncatedLaplace
 from repro.data import generate_healthlnk
 from repro.data.queries import QUERY_SQL
+from repro.obs import Tracer
 from repro.service import AnalyticsService, PrivacyAccountant
 from repro.sql import compile_logical, compile_query
 
@@ -171,6 +173,77 @@ def _bench_persistence(tables, rows: list, artifact: dict, quick: bool) -> None:
     ))
 
 
+def _bench_telemetry(tables, rows: list, artifact: dict, quick: bool) -> None:
+    """Tracing overhead on the batched serving path (DESIGN.md §14): median
+    enqueue->drain wall time of an identical k-query batch with no tracer vs
+    inside a :class:`Tracer`, plus exact per-node ledger parity between the
+    two runs (tracing only *observes* the ledger, so the tallies must match
+    bit for bit — the acceptance bar is <=5% overhead, reported here and
+    asserted loosely so CI timing noise cannot flake the job)."""
+    k = 4
+    repeats = 3 if quick else 7
+
+    def mk():
+        return AnalyticsService(
+            tables, noise=NoTrim(), placement="none", jit_ops=True,
+            key=jax.random.PRNGKey(2), batch_wait_s=60.0,
+        )
+
+    def drain_batch(svc, tracer):
+        for i in range(k):
+            svc.enqueue(f"t{i}", BATCH_SQL)
+        if tracer is None:
+            return svc.drain()
+        with tracer:
+            return svc.drain()
+
+    def node_tallies(results):
+        return [
+            [
+                (s.node, s.n_ins, s.n_out, s.bytes_per_party, s.rounds)
+                for s in r.report.nodes
+            ]
+            for r in results
+        ]
+
+    svc_plain, svc_traced = mk(), mk()
+    res_plain = drain_batch(svc_plain, None)  # warm: k-slot programs compile
+    warm_tr = Tracer()
+    res_traced = drain_batch(svc_traced, warm_tr)
+    parity = node_tallies(res_plain) == node_tallies(res_traced)
+
+    plain_ts, traced_ts = [], []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        drain_batch(svc_plain, None)
+        plain_ts.append(time.perf_counter() - t0)
+        tr = Tracer()
+        t0 = time.perf_counter()
+        drain_batch(svc_traced, tr)
+        traced_ts.append(time.perf_counter() - t0)
+    plain_s = sorted(plain_ts)[repeats // 2]
+    traced_s = sorted(traced_ts)[repeats // 2]
+    overhead_pct = (traced_s - plain_s) / plain_s * 100
+
+    artifact["telemetry"] = {
+        "sql": BATCH_SQL,
+        "batch": k,
+        "repeats": repeats,
+        "untraced_us": plain_s * 1e6,
+        "traced_us": traced_s * 1e6,
+        "overhead_pct": overhead_pct,
+        "spans_per_batch": len(tr.spans),
+        "ledger_parity": parity,
+    }
+    rows.append((
+        "service_tracing_overhead_pct", overhead_pct,
+        f"batched k={k}, {len(tr.spans)} spans/batch, "
+        f"ledger parity {'OK' if parity else 'BROKEN'}",
+    ))
+    if not parity:
+        raise SystemExit("telemetry bench: traced ledger tallies diverged")
+
+
 def run(quick: bool = False) -> list:
     n_rows = 12 if quick else N_ROWS
     rows: list[Row] = []
@@ -258,6 +331,9 @@ def run(quick: bool = False) -> list:
 
     # -- durable state: WAL on/off latency + compaction (DESIGN.md §12) -------
     _bench_persistence(tables, rows, artifact, quick)
+
+    # -- observability: tracing overhead + ledger parity (DESIGN.md §14) ------
+    _bench_telemetry(tables, rows, artifact, quick)
 
     artifact["plan_cache"] = cache
     artifact["accountant"] = {

@@ -1,0 +1,89 @@
+"""CI telemetry smoke: one traced end-to-end workload, exported artifacts.
+
+Runs a small HealthLnK service with the full observability surface on —
+lifecycle tracing, the metrics registry, and WAL-backed durable state — and
+writes three artifacts at the repo root:
+
+* ``TELEMETRY_spans.jsonl``  — one redacted span per line (Tracer.write)
+* ``TELEMETRY_metrics.json`` — MetricsRegistry.snapshot() after the run
+* ``TELEMETRY_metrics.prom`` — the Prometheus text exposition of the same
+
+The workload covers both service paths so every span name in the DESIGN.md
+§14.1 taxonomy appears at least once: an interactive ``submit`` of a join
+query with a Resizer (query → compile → admit → execute → node[…] → reveal →
+record) and a batched drain of three tenants (schedule.wait + batch.flush),
+plus a forced journal compaction for the WAL histograms.
+
+``benchmarks/validate_telemetry.py`` checks the artifacts against the
+checked-in ``telemetry_span_schema.json`` / ``telemetry_metrics_schema.json``
+— including that no secret-dependent key (true cardinality ``t``, noise
+draws ``p``/``eta``) ever reached an exported span attribute or metric label.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import sys
+import tempfile
+
+import jax
+
+from repro.core.noise import TruncatedLaplace
+from repro.data import generate_healthlnk
+from repro.obs import Tracer
+from repro.service import AnalyticsService, PrivacyAccountant
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..")
+SPANS_PATH = os.path.join(OUT_DIR, "TELEMETRY_spans.jsonl")
+METRICS_PATH = os.path.join(OUT_DIR, "TELEMETRY_metrics.json")
+PROM_PATH = os.path.join(OUT_DIR, "TELEMETRY_metrics.prom")
+
+JOIN_SQL = (
+    "SELECT DISTINCT d.pid FROM diagnoses d, medications m "
+    "WHERE d.pid = m.pid AND m.med = 1"
+)
+GROUP_SQL = "SELECT major_icd9, COUNT(*) AS c FROM diagnoses GROUP BY major_icd9"
+
+
+def run() -> int:
+    tables, _ = generate_healthlnk(n=16, seed=3, aspirin_frac=0.5)
+    state_dir = tempfile.mkdtemp(prefix="reflex-telemetry-")
+    try:
+        svc = AnalyticsService(
+            tables,
+            noise=TruncatedLaplace(eps=0.5, sensitivity=4),
+            placement="after_joins",
+            accountant=PrivacyAccountant(),
+            key=jax.random.PRNGKey(2),
+            batch_wait_s=60.0,
+            state_dir=state_dir,
+        )
+        with Tracer() as tr:
+            # interactive path: the join query carries a Resizer, so the
+            # node[Resize] span is the one whose raw info holds secrets —
+            # exactly what the validator's redaction check targets
+            svc.submit("alice", JOIN_SQL)
+            # batched path: schedule.wait records + one batch.flush span
+            for tenant in ("alice", "bob", "carol"):
+                svc.enqueue(tenant, GROUP_SQL)
+            svc.drain()
+        svc.compact_state()  # exercise the compaction histogram
+        tr.write(SPANS_PATH)
+        with open(METRICS_PATH, "w") as f:
+            json.dump(svc.metrics_snapshot(), f, indent=2, sort_keys=True)
+        with open(PROM_PATH, "w") as f:
+            f.write(svc.render_metrics())
+    finally:
+        shutil.rmtree(state_dir, ignore_errors=True)
+    print(
+        f"wrote {os.path.normpath(SPANS_PATH)}: {len(tr.spans)} spans, "
+        f"{len(tr.redactions)} secret attrs redacted"
+    )
+    print(f"wrote {os.path.normpath(METRICS_PATH)} and "
+          f"{os.path.normpath(PROM_PATH)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(run())

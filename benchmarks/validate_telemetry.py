@@ -1,0 +1,186 @@
+"""Validate the telemetry-smoke artifacts against their checked-in schemas.
+
+Dependency-free (no jsonschema, no repro imports): like
+``validate_bench.py``, the schema files pin required shapes and the validator
+walks them — but the telemetry schemas also carry the *disclosure policy*
+(the secret key deny-list), so CI fails if a secret-dependent value ever
+reaches an exported span attribute or metric label, even if the in-repo
+redaction code regresses in a way the unit tests miss.
+
+Checks on ``TELEMETRY_spans.jsonl``:
+  * every line parses and matches the ``span`` shape;
+  * every ``required_span_names`` entry (and one match per
+    ``required_span_prefixes`` entry) appears at least once;
+  * every non-null ``parent_id`` references a ``span_id`` in the file;
+  * no attribute key — at any nesting depth — is in ``secret_attr_keys``.
+
+Checks on ``TELEMETRY_metrics.json``:
+  * every ``required_metrics`` entry exists with the pinned kind and the
+    ``metric_entry`` shape;
+  * every label name on every metric is in ``allowed_label_names`` and
+    never in ``secret_label_names``.
+
+Usage:
+    python benchmarks/validate_telemetry.py \
+        TELEMETRY_spans.jsonl benchmarks/telemetry_span_schema.json \
+        TELEMETRY_metrics.json benchmarks/telemetry_metrics_schema.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+_TYPES = {
+    "number": (int, float),
+    "string": str,
+    "boolean": bool,
+    "object": dict,
+    "array": list,
+}
+
+
+def check(node, spec, path: str, errors: list) -> None:
+    if isinstance(spec, str):
+        if spec == "number_or_null":
+            if node is None:
+                return
+            spec = "number"
+        want = _TYPES[spec]
+        # bool is an int subclass: don't let a boolean satisfy "number"
+        if isinstance(node, bool) and spec == "number":
+            errors.append(f"{path}: expected number, got boolean")
+        elif not isinstance(node, want):
+            errors.append(
+                f"{path}: expected {spec}, got {type(node).__name__}"
+            )
+        return
+    if not isinstance(node, dict):
+        errors.append(f"{path}: expected object, got {type(node).__name__}")
+        return
+    for key, sub in spec.items():
+        if key not in node:
+            errors.append(f"{path}.{key}: missing required key")
+        else:
+            check(node[key], sub, f"{path}.{key}", errors)
+
+
+def _walk_keys(obj):
+    """Every dict key at any nesting depth (the attrs disclosure sweep)."""
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            yield k
+            yield from _walk_keys(v)
+    elif isinstance(obj, list):
+        for v in obj:
+            yield from _walk_keys(v)
+
+
+def validate_spans(lines: list, schema: dict) -> list:
+    errors: list = []
+    spans = []
+    for i, line in enumerate(lines):
+        try:
+            spans.append(json.loads(line))
+        except ValueError as e:
+            errors.append(f"spans line {i + 1}: not JSON ({e})")
+    if not spans:
+        errors.append("spans: empty trace")
+        return errors
+
+    span_spec = schema["span"]
+    secret = set(schema.get("secret_attr_keys", ()))
+    ids = set()
+    for i, sp in enumerate(spans):
+        path = f"spans[{i}]"
+        check(sp, span_spec, path, errors)
+        if isinstance(sp, dict):
+            ids.add(sp.get("span_id"))
+            leaked = sorted(set(_walk_keys(sp.get("attrs", {}))) & secret)
+            for key in leaked:
+                errors.append(
+                    f"{path} ({sp.get('name')}): SECRET attr key {key!r} "
+                    "reached the exported trace"
+                )
+    for i, sp in enumerate(spans):
+        parent = sp.get("parent_id") if isinstance(sp, dict) else None
+        if parent is not None and parent not in ids:
+            errors.append(
+                f"spans[{i}]: parent_id {parent} references no span in file"
+            )
+
+    names = [sp.get("name", "") for sp in spans if isinstance(sp, dict)]
+    for want in schema.get("required_span_names", ()):
+        if want not in names:
+            errors.append(f"spans: required span name {want!r} never appears")
+    for prefix in schema.get("required_span_prefixes", ()):
+        if not any(n.startswith(prefix) for n in names):
+            errors.append(
+                f"spans: no span name starts with required prefix {prefix!r}"
+            )
+    return errors
+
+
+def validate_metrics(snapshot: dict, schema: dict) -> list:
+    errors: list = []
+    entry_spec = schema["metric_entry"]
+    allowed = set(schema.get("allowed_label_names", ()))
+    secret = set(schema.get("secret_label_names", ()))
+    for name, kind in schema.get("required_metrics", {}).items():
+        if name not in snapshot:
+            errors.append(f"metrics.{name}: missing required metric")
+            continue
+        entry = snapshot[name]
+        check(entry, entry_spec, f"metrics.{name}", errors)
+        got = entry.get("kind") if isinstance(entry, dict) else None
+        if got != kind:
+            errors.append(
+                f"metrics.{name}: expected kind {kind!r}, got {got!r}"
+            )
+    # the disclosure sweep covers EVERY exported metric, not just required
+    for name, entry in snapshot.items():
+        if not isinstance(entry, dict):
+            continue
+        for ln in entry.get("labelnames", []):
+            if ln in secret:
+                errors.append(
+                    f"metrics.{name}: SECRET label name {ln!r} exported"
+                )
+            elif ln not in allowed:
+                errors.append(
+                    f"metrics.{name}: label name {ln!r} not in the schema's "
+                    "allowed_label_names (extend the schema deliberately)"
+                )
+    return errors
+
+
+def main(argv) -> int:
+    if len(argv) != 5:
+        print(__doc__)
+        return 2
+    with open(argv[1]) as f:
+        lines = [ln for ln in f.read().splitlines() if ln.strip()]
+    with open(argv[2]) as f:
+        span_schema = json.load(f)
+    with open(argv[3]) as f:
+        snapshot = json.load(f)
+    with open(argv[4]) as f:
+        metrics_schema = json.load(f)
+    errors = validate_spans(lines, span_schema)
+    errors += validate_metrics(snapshot, metrics_schema)
+    if errors:
+        for e in errors:
+            print(f"TELEMETRY VIOLATION {e}")
+        return 1
+    print(
+        f"{argv[1]}: OK ({len(lines)} spans, "
+        f"{len(span_schema['required_span_names'])} required names)"
+    )
+    print(
+        f"{argv[3]}: OK ({len(metrics_schema['required_metrics'])} required "
+        "metrics, labels audited)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

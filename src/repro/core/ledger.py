@@ -72,12 +72,29 @@ class CommLedger:
         assert top is self, "CommLedger stack corrupted"
 
     # -- logging -------------------------------------------------------------
+    @staticmethod
+    def _append(target: List[CommEntry], entry: CommEntry) -> None:
+        """Append, coalescing runs of identical ops: a loop that logs the same
+        (op, rounds, bytes) N times yields ONE entry with ``count=N`` instead
+        of N entries — ``count`` is the real repetition count, so ``by_op()``
+        reports true call counts and total costs, not log-entry counts."""
+        if target:
+            last = target[-1]
+            if (
+                last.op == entry.op
+                and last.rounds == entry.rounds
+                and last.bytes_per_party == entry.bytes_per_party
+            ):
+                last.count += entry.count
+                return
+        target.append(entry)
+
     def log(self, op: str, rounds: int, bytes_per_party: int) -> None:
         entry = CommEntry(op, rounds, bytes_per_party)
         if self._fuse_depth > 0:
-            self._fuse_buffer.append(entry)
+            self._append(self._fuse_buffer, entry)
         else:
-            self.entries.append(entry)
+            self._append(self.entries, entry)
 
     @contextlib.contextmanager
     def fused(self, op: str, rounds: int):
@@ -90,17 +107,17 @@ class CommLedger:
             self._fuse_depth -= 1
             sub = self._fuse_buffer[mark:]
             del self._fuse_buffer[mark:]
-            total_bytes = sum(e.bytes_per_party for e in sub)
+            total_bytes = sum(e.bytes_per_party * e.count for e in sub)
             entry = CommEntry(op, rounds, total_bytes)
             if self._fuse_depth > 0:
-                self._fuse_buffer.append(entry)
+                self._append(self._fuse_buffer, entry)
             else:
-                self.entries.append(entry)
+                self._append(self.entries, entry)
 
     # -- reporting -----------------------------------------------------------
     def tally(self) -> Dict[str, float]:
-        total_bytes = sum(e.bytes_per_party for e in self.entries)
-        total_rounds = sum(e.rounds for e in self.entries)
+        total_bytes = sum(e.bytes_per_party * e.count for e in self.entries)
+        total_rounds = sum(e.rounds * e.count for e in self.entries)
         return {"bytes_per_party": total_bytes, "rounds": total_rounds}
 
     def by_op(self) -> Dict[str, Dict[str, int]]:
@@ -108,8 +125,8 @@ class CommLedger:
             lambda: {"rounds": 0, "bytes_per_party": 0, "calls": 0}
         )
         for e in self.entries:
-            agg[e.op]["rounds"] += e.rounds
-            agg[e.op]["bytes_per_party"] += e.bytes_per_party
+            agg[e.op]["rounds"] += e.rounds * e.count
+            agg[e.op]["bytes_per_party"] += e.bytes_per_party * e.count
             agg[e.op]["calls"] += e.count
         return dict(agg)
 

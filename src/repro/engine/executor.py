@@ -37,6 +37,8 @@ import jax.numpy as jnp
 
 from ..core.ledger import CommLedger, batched_tally, log_comm
 from ..core.prf import PRFSetup, setup_prf
+from ..obs import redact
+from ..obs import trace as obs_trace
 from ..ops import SecretTable
 from ..plan.nodes import PlanNode
 from ..plan.registry import infer_schema, lookup, plan_batchable
@@ -107,16 +109,37 @@ class ExecutionReport:
         return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
 
     def summary(self) -> str:
+        def ins(s: NodeStats) -> str:
+            # all inputs, not just the first: a join reads "512x128"
+            return "x".join(str(n) for n in s.n_ins) if s.n_ins else "-"
+
+        def note(s: NodeStats) -> str:
+            if not s.extra:
+                return ""
+            pub = redact.public_view(s.extra)
+            if pub.get("skipped"):
+                return "trim skipped"
+            parts = []
+            if pub.get("s") is not None:
+                parts.append(f"S={pub['s']}")
+            sp = pub.get("s_padded")
+            if sp is not None and sp != pub.get("s"):
+                parts.append(f"pad->{sp}")
+            return " ".join(parts)
+
         lines = [
-            f"{'node':<42}{'n_in':>9}{'n_out':>9}{'sec':>9}{'MiB/party':>11}{'rounds':>8}"
+            f"{'node':<42}{'n_ins':>11}{'n_out':>9}{'sec':>9}"
+            f"{'MiB/party':>11}{'rounds':>8}  extra"
         ]
         for s in self.nodes:
             lines.append(
-                f"{s.node:<42}{s.n_in:>9}{s.n_out:>9}{s.seconds:>9.3f}"
-                f"{s.bytes_per_party / 2**20:>11.3f}{s.rounds:>8}"
+                (
+                    f"{s.node:<42}{ins(s):>11}{s.n_out:>9}{s.seconds:>9.3f}"
+                    f"{s.bytes_per_party / 2**20:>11.3f}{s.rounds:>8}  {note(s)}"
+                ).rstrip()
             )
         lines.append(
-            f"{'TOTAL':<42}{'':>9}{'':>9}{self.total_seconds:>9.3f}"
+            f"{'TOTAL':<42}{'':>11}{'':>9}{self.total_seconds:>9.3f}"
             f"{self.total_bytes / 2**20:>11.3f}{self.total_rounds:>8}"
         )
         return "\n".join(lines)
@@ -292,7 +315,8 @@ class Engine:
             infer_schema(plan, Catalog.from_tables(self.tables))
         report = ExecutionReport()
         self._last_resize_info = None  # never carry info across runs
-        out = self._run(plan, report)
+        with obs_trace.span("execute"):
+            out = self._run(plan, report)
         return out, report
 
     # ------------------------------------------------------------------
@@ -330,6 +354,20 @@ class Engine:
             rounds=int(tally["rounds"]),
             extra=extra,
         )
+        tr = obs_trace.active_tracer()
+        if tr is not None:
+            # `extra` passes the redaction boundary inside record(): the
+            # resizer's t/p/eta never reach the span, S and padding do.
+            tr.record(
+                f"node[{node.label}]",
+                seconds=dt,
+                op=node.describe(),
+                n_ins=n_ins,
+                n_out=stats.n_out,
+                bytes_per_party=stats.bytes_per_party,
+                rounds=stats.rounds,
+                **extra,
+            )
         return out, stats
 
     def _run(self, node: PlanNode, report: ExecutionReport) -> SecretTable:
@@ -454,7 +492,8 @@ class Engine:
             "physical_rounds": 0,
         }
         try:
-            out = self._run_batch(plans[0], ctx)
+            with obs_trace.span("execute", slots=k, batched=True):
+                out = self._run_batch(plans[0], ctx)
         finally:
             # The batch owns the counter range [base+1, base+k*R]; per-slot
             # execution rewinds within it non-monotonically. Skip past the
@@ -502,6 +541,19 @@ class Engine:
                     bytes_per_party=int(tally["bytes_per_party"]),
                     rounds=int(tally["rounds"]),
                 )
+            )
+        tr = obs_trace.active_tracer()
+        if tr is not None:
+            tr.record(
+                f"node[{node.label}]",
+                seconds=dt,
+                op=node.describe(),
+                n_ins=list(n_ins),
+                n_out=val.slot_n(0),
+                bytes_per_party=int(tally["bytes_per_party"]),
+                rounds=int(tally["rounds"]),
+                slots=ctx.k,
+                stacked=True,
             )
         # physical cost of the pass: bytes x K, synchronous rounds shared
         phys = batched_tally(tally, ctx.k)
@@ -587,6 +639,11 @@ class Engine:
                     seconds=0.0, bytes_per_party=0, rounds=0,
                 )
             )
+        obs_trace.record(
+            f"node[{node.label}]", op=node.describe(), n_ins=[],
+            n_out=table.n, bytes_per_party=0, rounds=0,
+            slots=ctx.k, stacked=True,
+        )
         return _BatchVal(k=ctx.k, stacked=_broadcast_table(table, ctx.k))
 
     def _batch_resize(

@@ -511,6 +511,23 @@ class PrivacyAccountant:
         st.observed += 1
 
     # -- reporting ------------------------------------------------------------
+    def budget_metrics(self) -> List[Dict]:
+        """Per-signature budget burn-down for the metrics registry. Unlike
+        :meth:`status` (the coordinator-side trusted API) this view is
+        export-safe: full fingerprints for the caller to hash into labels,
+        observed/budget/remaining counts — and no true cardinality T."""
+        return [
+            {
+                "fp": sig[0],
+                "strategy": sig[1],
+                "observed": st.observed,
+                "budget": st.budget,
+                "remaining": None if st.budget is None
+                else st.budget - st.observed - self._reserved(sig),
+            }
+            for sig, st in self._state.items()
+        ]
+
     def status(self) -> List[Dict]:
         return [
             {

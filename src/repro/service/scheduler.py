@@ -35,6 +35,7 @@ import time
 from collections import OrderedDict
 from typing import Dict, List, Tuple
 
+from ..obs import trace as obs_trace
 from ..plan.registry import plan_batchable
 from ..sql.compile import plan_fingerprint
 
@@ -82,16 +83,63 @@ class QueryScheduler:
         # admitted-but-not-yet-recorded query so same-signature queries cannot
         # jointly overdraw a budget (see PrivacyAccountant.admit)
         self._planned: Dict[Tuple[str, str], int] = {}
-        self.stats = {
-            "enqueued": 0,
-            "batches": 0,
-            "batched_queries": 0,
-            "serial_fallbacks": 0,
-            "full_flushes": 0,
-            "deadline_flushes": 0,
-            "forced_flushes": 0,
-            "max_batch_seen": 0,
+        # scheduler figures live in the service's metrics registry (the
+        # legacy `stats` dict below is a read-only view); a bare service
+        # without one gets a private registry so the scheduler is standalone
+        from ..obs import MetricsRegistry
+
+        m = getattr(service, "metrics", None) or MetricsRegistry()
+        self._m_enqueued = m.counter(
+            "reflex_scheduler_enqueued_total",
+            "Queries enqueued for batched execution",
+        )
+        self._m_batches = m.counter(
+            "reflex_scheduler_batches_total", "Stacked engine passes executed",
+        )
+        self._m_batched_queries = m.counter(
+            "reflex_scheduler_batched_queries_total",
+            "Queries served by stacked passes",
+        )
+        self._m_serial = m.counter(
+            "reflex_scheduler_serial_fallbacks_total",
+            "Non-batchable queries executed as a serial batch-of-1",
+        )
+        self._m_flush = m.counter(
+            "reflex_batch_flush_total", "Bucket flushes by trigger",
+            ("reason",),
+        )
+        self._m_occupancy = m.histogram(
+            "reflex_batch_occupancy", "Slots per stacked engine pass",
+            buckets=(1, 2, 4, 8, 16, 32, 64),
+        )
+        self._m_wait = m.histogram(
+            "reflex_schedule_wait_seconds",
+            "Enqueue -> flush latency of batched tickets",
+        )
+        self._m_queue_depth = m.gauge(
+            "reflex_scheduler_queue_depth",
+            "Pending queries across open buckets",
+        )
+        self._m_max_batch = m.gauge(
+            "reflex_batch_max_seen", "Largest stacked pass so far",
+        )
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        """Legacy counters dict as a view over the metrics registry."""
+        return {
+            "enqueued": int(self._m_enqueued.total()),
+            "batches": int(self._m_batches.total()),
+            "batched_queries": int(self._m_batched_queries.total()),
+            "serial_fallbacks": int(self._m_serial.total()),
+            "full_flushes": int(self._m_flush.value(reason="full")),
+            "deadline_flushes": int(self._m_flush.value(reason="deadline")),
+            "forced_flushes": int(self._m_flush.value(reason="forced")),
+            "max_batch_seen": int(self._m_max_batch.value()),
         }
+
+    def publish_gauges(self) -> None:
+        self._m_queue_depth.set(self.n_pending)
 
     # -- admission ------------------------------------------------------------
     def _bucket_key(self, aq) -> Tuple:
@@ -105,19 +153,23 @@ class QueryScheduler:
         """Compile, admission-check, and enqueue one query. Full buckets and
         deadline-expired buckets flush immediately (barrier-free)."""
         self.poll()  # deadline check on every submit, whatever path follows
-        aq = self.service._admit(tenant, sql, planned=self._planned)
-        tid = self._next_id
-        self._next_id += 1
-        self.stats["enqueued"] += 1
-        if not plan_batchable(aq.admitted):
-            ticket = QueryTicket(tid, tenant, sql, batched=False)
-            self.stats["serial_fallbacks"] += 1
-            self._done[tid] = self.service._execute_admitted(aq, self._planned)
-            return ticket
-        ticket = QueryTicket(tid, tenant, sql, batched=True)
-        key = self._bucket_key(aq)
-        bucket = self._buckets.setdefault(key, [])
-        bucket.append(_Pending(ticket, aq, self.clock()))
+        with obs_trace.span("query", tenant=tenant, sql=sql):
+            aq = self.service._admit(tenant, sql, planned=self._planned)
+            tid = self._next_id
+            self._next_id += 1
+            self._m_enqueued.inc()
+            if not plan_batchable(aq.admitted):
+                ticket = QueryTicket(tid, tenant, sql, batched=False)
+                self._m_serial.inc()
+                self._done[tid] = self.service._execute_admitted(
+                    aq, self._planned
+                )
+                return ticket
+            ticket = QueryTicket(tid, tenant, sql, batched=True)
+            key = self._bucket_key(aq)
+            bucket = self._buckets.setdefault(key, [])
+            bucket.append(_Pending(ticket, aq, self.clock()))
+        self._m_queue_depth.set(self.n_pending)
         if len(bucket) >= self.max_batch:
             self._flush(key, "full_flushes")
         return ticket
@@ -133,37 +185,52 @@ class QueryScheduler:
         entries = self._buckets.pop(key)
         k = len(entries)
         acct = self.service.accountant
-        try:
-            results = self.service.engine.execute_batch(
-                [e.aq.admitted for e in entries]
-            )
-        except Exception:
-            # the pass may have died after per-slot Resizes already revealed
-            # sizes: charge every slot rather than leak a free observation
+        why = reason.replace("_flushes", "")  # full | deadline | forced
+        with obs_trace.span("batch.flush", slots=k, reason=why):
+            now = self.clock()
             for e in entries:
-                acct.charge_failed(e.aq.admitted)
-                acct.release_planned(e.aq.admitted, self._planned)
-            raise
-        self.stats["batches"] += 1
-        self.stats["batched_queries"] += k
-        self.stats[reason] += 1
-        self.stats["max_batch_seen"] = max(self.stats["max_batch_seen"], k)
-        first_err: Exception | None = None
-        for e, (out, report) in zip(entries, results):
-            try:
-                self._done[e.ticket.id] = self.service._finalize(
-                    e.aq, out, report, batch_slots=k
+                wait = max(now - e.enqueued_at, 0.0)
+                self._m_wait.observe(wait)
+                obs_trace.record(
+                    "schedule.wait", seconds=wait,
+                    tenant=e.ticket.tenant, ticket=e.ticket.id,
                 )
-            except Exception as err:  # demux/record failure for THIS slot only
-                if not e.aq.recorded:  # post-record reveal failures: charged
+            try:
+                results = self.service.engine.execute_batch(
+                    [e.aq.admitted for e in entries]
+                )
+            except Exception:
+                # the pass may have died after per-slot Resizes already
+                # revealed sizes: charge every slot rather than leak a free
+                # observation
+                for e in entries:
                     acct.charge_failed(e.aq.admitted)
-                if first_err is None:
-                    first_err = err
+                    acct.release_planned(e.aq.admitted, self._planned)
+                raise
             finally:
-                acct.release_planned(e.aq.admitted, self._planned)
-        if first_err is not None:
-            # sibling slots' results were still delivered above
-            raise first_err
+                self._m_queue_depth.set(self.n_pending)
+            self._m_batches.inc()
+            self._m_batched_queries.inc(k)
+            self._m_flush.inc(reason=why)
+            self._m_occupancy.observe(k)
+            if k > self._m_max_batch.value():
+                self._m_max_batch.set(k)
+            first_err: Exception | None = None
+            for e, (out, report) in zip(entries, results):
+                try:
+                    self._done[e.ticket.id] = self.service._finalize(
+                        e.aq, out, report, batch_slots=k
+                    )
+                except Exception as err:  # demux/record failure: slot-local
+                    if not e.aq.recorded:  # post-record failures: charged
+                        acct.charge_failed(e.aq.admitted)
+                    if first_err is None:
+                        first_err = err
+                finally:
+                    acct.release_planned(e.aq.admitted, self._planned)
+            if first_err is not None:
+                # sibling slots' results were still delivered above
+                raise first_err
 
     def poll(self) -> int:
         """Flush buckets whose oldest entry aged past the deadline; returns

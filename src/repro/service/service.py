@@ -55,6 +55,8 @@ import numpy as np
 
 from ..core.noise import NoiseStrategy, shrinkwrap_default
 from ..engine.executor import Engine, ExecutionReport
+from ..obs import MetricsRegistry, explain_text, redact
+from ..obs import trace as obs_trace
 from ..ops.table import SecretTable
 from ..plan.nodes import PlanNode
 from ..sql.catalog import Catalog
@@ -150,6 +152,42 @@ class AnalyticsService:
         self.accountant = accountant or PrivacyAccountant()
         self.reveal_results = reveal_results
         self.reorder_joins = reorder_joins
+        # metrics registry: the single source of truth for service counters —
+        # the legacy `stats` dict is a read-only view over it (DESIGN.md §14.2)
+        self.metrics = MetricsRegistry()
+        m = self.metrics
+        self._m_queries = m.counter(
+            "reflex_queries_total",
+            "Completed queries (recorded and revealed)", ("tenant",),
+        )
+        self._m_refusals = m.counter(
+            "reflex_refusals_total",
+            "Queries refused at admission (CRT budget exhausted)",
+        )
+        self._m_plan_cache = m.counter(
+            "reflex_plan_cache_lookups_total",
+            "Prepared-statement cache lookups by outcome "
+            "(a rebind also counts as a hit)", ("status",),
+        )
+        self._m_jit = m.gauge(
+            "reflex_jit_cache_logical",
+            "Process-wide Engine jit cache counters (logical hits: a K-slot "
+            "batched pass counts K)", ("status",),
+        )
+        self._m_budget_total = m.gauge(
+            "reflex_privacy_budget_total",
+            "floor(crt_rounds) per observation signature", ("sig", "strategy"),
+        )
+        self._m_budget_remaining = m.gauge(
+            "reflex_privacy_budget_remaining",
+            "CRT observations still spendable per signature "
+            "(budget - observed - foreign reserved)", ("sig", "strategy"),
+        )
+        self._m_budget_observed = m.gauge(
+            "reflex_privacy_budget_observed",
+            "Noisy-size observations already disclosed per signature",
+            ("sig", "strategy"),
+        )
         self.engine = Engine(
             tables, key=key if key is not None else jax.random.PRNGKey(0),
             jit_ops=jit_ops,
@@ -162,10 +200,16 @@ class AnalyticsService:
 
             if not self.accountant.durable:
                 self.accountant.attach_store(
-                    JournalStore(state_dir, "ledger", fsync=wal_fsync)
+                    JournalStore(
+                        state_dir, "ledger", fsync=wal_fsync,
+                        metrics=self.metrics,
+                    )
                 )
             self.calibration = CalibrationStore(
-                JournalStore(state_dir, "calibration", fsync=wal_fsync)
+                JournalStore(
+                    state_dir, "calibration", fsync=wal_fsync,
+                    metrics=self.metrics,
+                )
             )
             self.engine.reveal_hook = self._observe_reveal
         self._plan_cache: "OrderedDict" = OrderedDict()
@@ -175,18 +219,29 @@ class AnalyticsService:
         self.scheduler = QueryScheduler(
             self, max_batch=batch_max, max_wait_s=batch_wait_s
         )
-        self.stats = {
-            "queries": 0,
-            "plan_cache_hits": 0,
-            "plan_cache_misses": 0,
-            "plan_cache_rebinds": 0,  # template hits with fresh literals
-            "refusals": 0,
-            "per_tenant": {},
+
+    @property
+    def stats(self) -> Dict:
+        """Legacy counters dict, assembled as a read-only view over the
+        metrics registry — the dict and the registry cannot drift because
+        there is only one underlying counter per figure (e.g. `per_tenant`
+        IS `reflex_queries_total` broken out by its tenant label)."""
+        return {
+            "queries": int(self._m_queries.total()),
+            "plan_cache_hits": int(self._m_plan_cache.value(status="hit")),
+            "plan_cache_misses": int(self._m_plan_cache.value(status="miss")),
+            "plan_cache_rebinds": int(
+                self._m_plan_cache.value(status="rebind")
+            ),
+            "refusals": int(self._m_refusals.total()),
+            "per_tenant": {
+                key[0]: int(v) for key, v in self._m_queries.samples()
+            },
         }
 
     # -- sessions -------------------------------------------------------------
     def session(self, tenant: str) -> TenantSession:
-        self.stats["per_tenant"].setdefault(tenant, 0)
+        self._m_queries.touch(tenant=tenant)
         return TenantSession(self, tenant)
 
     # -- compile + cache ------------------------------------------------------
@@ -217,17 +272,19 @@ class AnalyticsService:
         )
         entry = self._plan_cache.get(cache_key)
         hit = entry is not None
+        rebind = False
         if hit:
             self._plan_cache.move_to_end(cache_key)
-            self.stats["plan_cache_hits"] += 1
+            self._m_plan_cache.inc(status="hit")
             cached_params, cached_plan = entry
             if params == cached_params:
                 plan = cached_plan  # identical query: shared plan object
             else:
-                self.stats["plan_cache_rebinds"] += 1
+                rebind = True
+                self._m_plan_cache.inc(status="rebind")
                 plan = bind_params(cached_plan, params)
         else:
-            self.stats["plan_cache_misses"] += 1
+            self._m_plan_cache.inc(status="miss")
             if self.placement == "none":
                 plan = logical
             else:
@@ -239,7 +296,9 @@ class AnalyticsService:
             self._plan_cache[cache_key] = (params, plan)
             while len(self._plan_cache) > self._plan_cache_max:
                 self._plan_cache.popitem(last=False)
-        return plan, hit, time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        obs_trace.record("compile", seconds=dt, cache_hit=hit, rebind=rebind)
+        return plan, hit, dt
 
     # -- the query path -------------------------------------------------------
     def _admit(self, tenant: str, sql: str, planned=None) -> AdmittedQuery:
@@ -251,8 +310,16 @@ class AnalyticsService:
         try:
             admitted, escalations = self.accountant.admit(plan, planned)
         except QueryRefused:
-            self.stats["refusals"] += 1
+            self._m_refusals.inc()
+            obs_trace.record(
+                "admit", seconds=time.perf_counter() - ta,
+                tenant=tenant, refused=True,
+            )
             raise
+        obs_trace.record(
+            "admit", seconds=time.perf_counter() - ta,
+            tenant=tenant, refused=False, escalations=len(escalations),
+        )
         return AdmittedQuery(
             tenant=tenant,
             sql=sql,
@@ -274,23 +341,24 @@ class AnalyticsService:
         """Record the executed query's observations, update counters, and
         reveal — identical for serial and batched (demuxed) executions."""
         ta = time.perf_counter()
-        self.accountant.record(aq.admitted, report)
-        aq.recorded = True  # failure past this point must not charge_failed
-        if self.calibration is not None:
-            # one journal transaction for all of this query's revealed sizes
-            # (buffered during execution, off the engine's critical path)
-            self.calibration.flush()
+        with obs_trace.span("record", tenant=aq.tenant):
+            self.accountant.record(aq.admitted, report)
+            aq.recorded = True  # failure past this point must not charge_failed
+            if self.calibration is not None:
+                # one journal transaction for all of this query's revealed
+                # sizes (buffered during execution, off the engine's critical
+                # path)
+                self.calibration.flush()
         acct_s = aq.accountant_seconds + (time.perf_counter() - ta)
 
-        self.stats["queries"] += 1
-        self.stats["per_tenant"][aq.tenant] = (
-            self.stats["per_tenant"].get(aq.tenant, 0) + 1
-        )
-        rows = out.reveal_true_rows() if self.reveal_results else None
-        post = lookup(type(aq.admitted)).post_reveal
-        if rows is not None and post is not None:
-            # operator-defined client-side derivation (e.g. AVG = sum // cnt)
-            rows = post(aq.admitted, rows)
+        self._m_queries.inc(tenant=aq.tenant)
+        self._publish_budget_gauges()
+        with obs_trace.span("reveal", tenant=aq.tenant):
+            rows = out.reveal_true_rows() if self.reveal_results else None
+            post = lookup(type(aq.admitted)).post_reveal
+            if rows is not None and post is not None:
+                # operator-defined client-side derivation (AVG = sum // cnt)
+                rows = post(aq.admitted, rows)
         return QueryResult(
             tenant=aq.tenant,
             sql=aq.sql,
@@ -331,9 +399,10 @@ class AnalyticsService:
         the middle of an open batching window is charged against the queued
         (admitted-but-unrecorded) observations too."""
         self.scheduler.poll()  # sync traffic must not starve queued buckets
-        planned = self.scheduler._planned
-        aq = self._admit(tenant, sql, planned=planned)
-        return self._execute_admitted(aq, planned)
+        with obs_trace.span("query", tenant=tenant, sql=sql):
+            planned = self.scheduler._planned
+            aq = self._admit(tenant, sql, planned=planned)
+            return self._execute_admitted(aq, planned)
 
     # -- batched admission (DESIGN.md §11) ------------------------------------
     def enqueue(self, tenant: str, sql: str):
@@ -376,6 +445,64 @@ class AnalyticsService:
         self.calibration.maybe_compact(-1)
 
     # -- reporting ------------------------------------------------------------
+    def _publish_budget_gauges(self) -> None:
+        """Mirror the accountant's per-signature burn-down into gauges.
+        Labels carry the fingerprint *hash* and the strategy key — both
+        public (the signature identifies the subplan, not its data)."""
+        for e in self.accountant.budget_metrics():
+            labels = {
+                "sig": redact.fingerprint_hash(e["fp"]),
+                "strategy": e["strategy"],
+            }
+            self._m_budget_observed.set(e["observed"], **labels)
+            if e["budget"] is not None:
+                self._m_budget_total.set(e["budget"], **labels)
+                self._m_budget_remaining.set(e["remaining"], **labels)
+
+    def _refresh_gauges(self) -> None:
+        """Bring point-in-time gauges current before any export."""
+        js = Engine.jit_cache_stats()
+        for k in ("hits", "misses", "size"):
+            self._m_jit.set(js[k], status=k)
+        self.scheduler.publish_gauges()
+        self._publish_budget_gauges()
+
+    def render_metrics(self) -> str:
+        """Prometheus text exposition of every service metric."""
+        self._refresh_gauges()
+        return self.metrics.render_prometheus()
+
+    def metrics_snapshot(self) -> Dict:
+        """JSON-safe dump of the registry (the machine-readable twin of
+        :meth:`render_metrics`; validated in CI against a checked-in schema)."""
+        self._refresh_gauges()
+        return self.metrics.snapshot()
+
+    # -- EXPLAIN / EXPLAIN ANALYZE (DESIGN.md §14.4) --------------------------
+    def explain(self, sql: str) -> str:
+        """Compile (through the plan cache) and render the placed physical
+        plan with the cost model's estimates — no execution, no admission,
+        nothing disclosed."""
+        plan, _hit, _s = self.compile(sql)
+        cm = default_cost_model(
+            self.catalog, noise=self.noise, calibration=self.calibration
+        )
+        return explain_text(plan, cost_model=cm, title=f"EXPLAIN {sql}")
+
+    def explain_analyze(self, tenant: str, sql: str):
+        """Execute ``sql`` through the full admission pipeline and render the
+        plan with estimated-vs-actual columns. Costs one real query (the
+        accountant charges it like any other). Returns ``(text, result)``."""
+        res = self.submit(tenant, sql)
+        cm = default_cost_model(
+            self.catalog, noise=self.noise, calibration=self.calibration
+        )
+        text = explain_text(
+            res.plan, cost_model=cm, report=res.report,
+            title=f"EXPLAIN ANALYZE {sql}",
+        )
+        return text, res
+
     def cache_stats(self) -> Dict[str, float]:
         h, m = self.stats["plan_cache_hits"], self.stats["plan_cache_misses"]
         return {

@@ -1,7 +1,16 @@
 """CLI: parse/compile SQL against the HealthLnK catalog.
 
-    python -m repro.sql --check          # goldens + dialect execution smoke
-    python -m repro.sql "SELECT ..."     # pretty-print the compiled plan
+    python -m repro.sql --check            # goldens + dialect execution smoke
+    python -m repro.sql "SELECT ..."       # pretty-print the compiled plan
+    python -m repro.sql --explain ["SQL"]  # plan tree + cost estimates
+    python -m repro.sql --explain-analyze ["SQL"]
+                                           # execute on synthetic HealthLnK
+                                           # data: estimates vs actuals per
+                                           # node (+ resizer trim outcomes)
+
+``--explain`` / ``--explain-analyze`` with no SQL run every golden query in
+``data/queries.py`` (DESIGN.md §14.4 documents the output format; every
+printed value passes the repro.obs.redact disclosure audit).
 
 ``--check`` is the CI smoke step, in two phases:
 
@@ -170,12 +179,45 @@ def _walk_nodes(plan):
         yield from _walk_nodes(c)
 
 
+def explain(argv, analyze: bool) -> int:
+    """EXPLAIN [ANALYZE] the given SQL — or every golden query when no SQL is
+    given — against a small synthetic HealthLnK dataset (the same generator
+    the CI smoke uses, so the CLI needs no external state)."""
+    import jax
+
+    from ..data.healthlnk import generate_healthlnk
+    from ..data.queries import all_query_sql
+    from ..service import AnalyticsService
+
+    tables, _ = generate_healthlnk(n=16, seed=3, aspirin_frac=0.5)
+    svc = AnalyticsService(tables, key=jax.random.PRNGKey(2))
+    queries = (
+        {"query": " ".join(argv)} if argv else all_query_sql()
+    )
+    failures = 0
+    for name, sql_text in queries.items():
+        try:
+            if analyze:
+                text, _res = svc.explain_analyze("explain-cli", sql_text)
+            else:
+                text = svc.explain(sql_text)
+        except Exception as e:  # noqa: BLE001 — report and keep going
+            print(f"FAIL {name}: {type(e).__name__}: {e}")
+            failures += 1
+            continue
+        print(text)
+        print()
+    return 1 if failures else 0
+
+
 def main(argv) -> int:
     if not argv or argv[0] in ("-h", "--help"):
         print(__doc__)
         return 0
     if argv[0] == "--check":
         return check()
+    if argv[0] in ("--explain", "--explain-analyze"):
+        return explain(argv[1:], analyze=argv[0] == "--explain-analyze")
     from .compile import compile_query
 
     plan = compile_query(" ".join(argv))

@@ -23,6 +23,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import time
 import uuid
 from contextlib import contextmanager
 from typing import Dict, Iterator, List, Optional
@@ -59,6 +60,7 @@ class JournalStore:
         name: str,
         session: Optional[str] = None,
         fsync: bool = True,
+        metrics=None,  # repro.obs.MetricsRegistry for WAL latency histograms
     ):
         os.makedirs(directory, exist_ok=True)
         self.directory = directory
@@ -66,8 +68,26 @@ class JournalStore:
         # unique per store object: two replicas in one process are two sessions
         self.session = session or uuid.uuid4().hex[:12]
         self.lease = FileLease(directory, name)
+        self._m_append = self._m_fsync = self._m_compact = None
+        observer = None
+        if metrics is not None:
+            self._m_append = metrics.histogram(
+                "reflex_wal_append_seconds",
+                "Durable WAL append latency (write + flush + fsync)",
+                ("journal",),
+            )
+            self._m_fsync = metrics.histogram(
+                "reflex_wal_fsync_seconds",
+                "fsync share of WAL append latency", ("journal",),
+            )
+            self._m_compact = metrics.histogram(
+                "reflex_journal_compaction_seconds",
+                "Snapshot + WAL-truncate compaction latency", ("journal",),
+            )
+            observer = self._observe_wal
         self.wal = WriteAheadLog(
-            os.path.join(directory, f"{name}.wal.jsonl"), fsync=fsync
+            os.path.join(directory, f"{name}.wal.jsonl"), fsync=fsync,
+            observer=observer,
         )
         self.snapshot_path = os.path.join(directory, f"{name}.snapshot.json")
         self.gen_path = os.path.join(directory, f"{name}.gen")
@@ -76,6 +96,11 @@ class JournalStore:
         self._max_token = 0  # newest fencing token observed in records
         self._generation: Optional[int] = None  # None => first txn reloads
         self.stats = {"appends": 0, "syncs": 0, "reloads": 0, "compactions": 0}
+
+    def _observe_wal(self, phase: str, seconds: float) -> None:
+        m = self._m_append if phase == "append" else self._m_fsync
+        if m is not None:
+            m.observe(seconds, journal=self.name)
 
     # -- generation / snapshot -------------------------------------------------
     def _read_generation(self) -> int:
@@ -166,6 +191,7 @@ class JournalStore:
         so ``state_blob`` reflects every record about to be truncated."""
         if not self.lease.held:
             raise RuntimeError("compact outside a JournalStore.transaction")
+        t0 = time.perf_counter()
         gen = self._read_generation() + 1
         snapshot = {
             "generation": gen,
@@ -180,6 +206,10 @@ class JournalStore:
         self._generation = gen
         self._offset = 0
         self.stats["compactions"] += 1
+        if self._m_compact is not None:
+            self._m_compact.observe(
+                time.perf_counter() - t0, journal=self.name
+            )
 
     # -- introspection ---------------------------------------------------------
     @property

@@ -14,7 +14,8 @@ from __future__ import annotations
 
 import json
 import os
-from typing import Dict, List, Tuple
+import time
+from typing import Callable, Dict, List, Optional, Tuple
 
 __all__ = ["WriteAheadLog"]
 
@@ -25,11 +26,22 @@ class WriteAheadLog:
     ``fsync=False`` trades crash durability for latency (the persistence
     benchmark measures both); correctness under *process* crash still holds
     (the OS page cache survives), only power loss can then lose a tail.
+
+    ``observer(phase, seconds)`` — optional latency callback fired after each
+    ``append`` (phase ``"append"`` covers the whole call, ``"fsync"`` just
+    the fsync) so the owning store can feed latency histograms without this
+    module importing any metrics machinery.
     """
 
-    def __init__(self, path: str, fsync: bool = True):
+    def __init__(
+        self,
+        path: str,
+        fsync: bool = True,
+        observer: Optional[Callable[[str, float], None]] = None,
+    ):
         self.path = path
         self.fsync = fsync
+        self.observer = observer
 
     # -- writing ---------------------------------------------------------------
     def append(self, rec: Dict, good_offset: int | None = None) -> int:
@@ -38,6 +50,7 @@ class WriteAheadLog:
         crashed writer), the torn bytes are truncated first — callers must
         hold the state lease, so no complete record is ever dropped."""
         line = (json.dumps(rec, sort_keys=True, separators=(",", ":")) + "\n").encode()
+        t0 = time.perf_counter()
         with open(self.path, "ab") as f:
             if good_offset is not None and f.tell() > good_offset:
                 f.truncate(good_offset)
@@ -45,8 +58,14 @@ class WriteAheadLog:
             f.write(line)
             f.flush()
             if self.fsync:
+                ts = time.perf_counter()
                 os.fsync(f.fileno())
-            return f.tell()
+                if self.observer is not None:
+                    self.observer("fsync", time.perf_counter() - ts)
+            end = f.tell()
+        if self.observer is not None:
+            self.observer("append", time.perf_counter() - t0)
+        return end
 
     def truncate(self, offset: int = 0) -> None:
         if os.path.exists(self.path):

@@ -1,0 +1,254 @@
+"""EXPLAIN / EXPLAIN ANALYZE, the disclosure audit across every telemetry
+surface, traced-vs-untraced parity, and the stats-view drift guard (ISSUE 7)."""
+import jax
+import pytest
+
+from repro.core.noise import ConstantNoise, NoTrim
+from repro.data import generate_healthlnk
+from repro.data.queries import all_query_sql
+from repro.obs import Tracer, explain_text, redact
+from repro.obs.explain import _trim_note
+from repro.plan.nodes import Resize
+from repro.service import AnalyticsService, PrivacyAccountant
+from repro.sql.compile import default_cost_model
+
+
+@pytest.fixture(scope="module")
+def data():
+    return generate_healthlnk(n=8, seed=3, aspirin_frac=0.5)
+
+
+def make_service(tables, **kw):
+    kw.setdefault("noise", ConstantNoise(4))
+    kw.setdefault("addition", "sequential")
+    kw.setdefault("placement", "after_joins")
+    kw.setdefault("accountant", PrivacyAccountant())
+    kw.setdefault("key", jax.random.PRNGKey(9))
+    return AnalyticsService(tables, **kw)
+
+
+# -----------------------------------------------------------------------------
+# EXPLAIN / EXPLAIN ANALYZE
+# -----------------------------------------------------------------------------
+
+def _node_count(plan):
+    return 1 + sum(_node_count(c) for c in plan.children())
+
+
+def test_explain_renders_estimates_without_execution(data):
+    tables, _ = data
+    svc = make_service(tables)
+    sql = "SELECT COUNT(*) AS c FROM diagnoses WHERE icd9 < 300"
+    text = svc.explain(sql)
+    lines = text.splitlines()
+    assert lines[0] == f"EXPLAIN {sql}"
+    assert "est.rows" in lines[1] and "act.rows" in lines[1]
+    # no execution: actual columns are placeholders, nothing was disclosed
+    assert all("-" in ln for ln in lines[2:])
+    assert svc.stats["queries"] == 0
+    assert svc.accountant.status() == []
+
+
+def test_explain_analyze_every_golden_query(data):
+    """Acceptance: EXPLAIN ANALYZE renders estimated-vs-actual for every
+    node of every golden query, with one line per plan node plus TOTAL."""
+    tables, _ = data
+    svc = make_service(tables)
+    for name, sql in all_query_sql().items():
+        text, res = svc.explain_analyze("goldens", sql)
+        lines = text.splitlines()
+        n_nodes = _node_count(res.plan)
+        # title + header + one line per node + TOTAL
+        assert len(lines) == n_nodes + 3, f"{name}: wrong line count"
+        assert lines[0] == f"EXPLAIN ANALYZE {sql}"
+        body = lines[2:-1]
+        assert len(body) == len(res.report.nodes)
+        for ln in body:
+            cols = ln.split()
+            assert len(cols) >= 5, f"{name}: missing columns in {ln!r}"
+        # actual seconds/rounds totals match the report
+        total = lines[-1]
+        assert total.startswith("TOTAL")
+        assert f"{res.report.total_rounds}" in total
+
+
+def test_explain_analyze_shows_trim_outcome(data):
+    tables, _ = data
+    svc = make_service(tables)
+    sql = (
+        "SELECT DISTINCT d.pid FROM diagnoses d, medications m "
+        "WHERE d.pid = m.pid AND m.med = 1"
+    )
+    text, res = svc.explain_analyze("alice", sql)
+    rz_stats = [s for s in res.report.nodes if s.node.startswith("Resize")]
+    assert rz_stats, "placement should have inserted a Resize after the join"
+    s_val = rz_stats[0].extra["s"]
+    (rz_line,) = [ln for ln in text.splitlines() if "Resize" in ln]
+    assert f"S={s_val}" in rz_line
+
+
+def test_explain_analyze_rejects_foreign_report(data):
+    tables, _ = data
+    svc = make_service(tables)
+    _, res = svc.explain_analyze("alice", "SELECT COUNT(*) FROM diagnoses")
+    cm = default_cost_model(svc.catalog)
+    other, _, _ = svc.compile(
+        "SELECT COUNT(*) FROM diagnoses WHERE icd9 < 300"
+    )
+    with pytest.raises(ValueError, match="not this plan's report"):
+        explain_text(other, cost_model=cm, report=res.report)
+
+
+def test_cli_explain_verbs_run():
+    from repro.sql.__main__ import main
+
+    assert main(["--explain", "SELECT COUNT(*) FROM diagnoses"]) == 0
+    assert main(
+        ["--explain-analyze", "SELECT COUNT(*) FROM diagnoses WHERE icd9 < 300"]
+    ) == 0
+
+
+# -----------------------------------------------------------------------------
+# Disclosure audit: no secret reaches any span, metric, or EXPLAIN line
+# -----------------------------------------------------------------------------
+
+def _walk_attr_keys(obj):
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            yield k
+            yield from _walk_attr_keys(v)
+    elif isinstance(obj, (list, tuple)):
+        for v in obj:
+            yield from _walk_attr_keys(v)
+
+
+def test_no_secret_reaches_spans_metrics_or_explain(data):
+    """ConstantNoise(4) pins S = T + 4, so T is trivially recoverable from
+    S — which is exactly why T itself must never appear: the audit asserts
+    every emitted key is in the PUBLIC allow-list, on every surface."""
+    tables, _ = data
+    svc = make_service(tables)
+    sql = (
+        "SELECT DISTINCT d.pid FROM diagnoses d, medications m "
+        "WHERE d.pid = m.pid AND m.med = 1"
+    )
+    with Tracer() as tr:
+        text, res = svc.explain_analyze("alice", sql)
+
+    # ground truth: the engine-side resize info DOES hold the secrets
+    rz = [s for s in res.report.nodes if s.node.startswith("Resize")][0]
+    assert "t" in rz.extra and ("eta" in rz.extra or "p" in rz.extra)
+    with pytest.raises(redact.RedactionError):
+        redact.assert_emittable(rz.extra)
+
+    # 1. spans: only allow-listed keys, and the dropped secrets were counted
+    for sp in tr.spans:
+        for key in _walk_attr_keys(sp.attrs):
+            assert key in redact.PUBLIC_KEYS, f"span {sp.name} leaked {key!r}"
+    assert set(tr.redactions) & redact.SECRET_KEYS
+
+    # 2. metrics: every label name on every metric is allow-listed
+    snap = svc.metrics_snapshot()
+    for name, metric in snap.items():
+        for ln in metric["labelnames"]:
+            assert ln in redact.PUBLIC_KEYS, f"metric {name} leaked {ln!r}"
+    # and no sample label VALUE carries the raw fingerprint's subplan text
+    for s in snap["reflex_privacy_budget_remaining"]["samples"]:
+        assert len(s["labels"]["sig"]) == 12  # hash, not the fingerprint
+
+    # 3. EXPLAIN ANALYZE: the resize column shows the revealed S only
+    t_true = int(rz.extra["t"])
+    s_public = int(rz.extra["s"])
+    (rz_line,) = [ln for ln in text.splitlines() if "Resize" in ln]
+    assert f"S={s_public}" in rz_line
+    assert f"S={t_true}" not in rz_line
+    assert "eta" not in text and " t=" not in text
+
+
+def test_trim_note_redacts_adversarial_extra():
+    # a hostile extra dict stuffed with secrets renders only the public part
+    fake = Resize.__new__(Resize)
+    txt = _trim_note(fake, {"t": 7, "eta": 3, "p": 0.5, "s": 10, "s_padded": 16})
+    assert txt == "S=10 pad->16"
+    txt2 = _trim_note(fake, {"t": 7, "skipped": True, "s": 64})
+    assert "skipped" in txt2 and "7" not in txt2
+
+
+def test_notrim_discloses_nothing_in_explain(data):
+    tables, _ = data
+    svc = make_service(tables, noise=NoTrim())
+    sql = (
+        "SELECT DISTINCT d.pid FROM diagnoses d, medications m "
+        "WHERE d.pid = m.pid AND m.med = 1"
+    )
+    text, _res = svc.explain_analyze("alice", sql)
+    (rz_line,) = [ln for ln in text.splitlines() if "Resize" in ln]
+    assert "trim skipped" in rz_line and "S=" not in rz_line
+
+
+# -----------------------------------------------------------------------------
+# Tracing is free: traced == untraced, field by field
+# -----------------------------------------------------------------------------
+
+def test_traced_batched_run_has_exact_ledger_parity(data):
+    """Acceptance: tracing must not perturb execution — per-node ledger
+    tallies of a traced batched service pass equal an untraced run of the
+    identical service bit for bit (spans only *observe* the ledger)."""
+    tables, _ = data
+    sql = "SELECT major_icd9, COUNT(*) AS c FROM diagnoses GROUP BY major_icd9"
+
+    def run(traced: bool):
+        svc = make_service(
+            tables, noise=NoTrim(), placement="none", batch_wait_s=60.0
+        )
+        for t in ("a", "b", "c"):
+            svc.enqueue(t, sql)
+        if traced:
+            with Tracer() as tr:
+                res = svc.drain()
+            assert tr.find("batch.flush") and tr.find("execute")
+        else:
+            res = svc.drain()
+        return [
+            [
+                (s.node, s.n_ins, s.n_out, s.bytes_per_party, s.rounds)
+                for s in r.report.nodes
+            ]
+            for r in res
+        ], [r.rows for r in res]
+
+    plain_nodes, plain_rows = run(traced=False)
+    traced_nodes, traced_rows = run(traced=True)
+    assert traced_nodes == plain_nodes
+    for a, b in zip(plain_rows, traced_rows):
+        assert set(a) == set(b)
+        for k in a:
+            assert a[k].tolist() == b[k].tolist()
+
+
+# -----------------------------------------------------------------------------
+# Legacy stats dict == metrics registry (no drift possible)
+# -----------------------------------------------------------------------------
+
+def test_stats_dict_is_view_over_registry(data):
+    tables, _ = data
+    svc = make_service(tables)
+    alice, bob = svc.session("alice"), svc.session("bob")
+    sql = "SELECT COUNT(*) AS c FROM diagnoses WHERE icd9 < 300"
+    alice.submit(sql)
+    alice.submit(sql)
+    bob.submit("SELECT COUNT(*) AS c FROM diagnoses WHERE icd9 < 500")
+    assert svc.stats["per_tenant"] == {"alice": 2, "bob": 1}
+    assert svc.stats["queries"] == 3
+    assert svc.stats["plan_cache_hits"] == 2
+    assert svc.stats["plan_cache_misses"] == 1
+    assert svc.stats["plan_cache_rebinds"] == 1  # fresh literal on a hit
+    # the registry IS the backing store: counters agree exactly
+    q = svc.metrics.get("reflex_queries_total")
+    assert q.value(tenant="alice") == 2 and q.value(tenant="bob") == 1
+    pc = svc.metrics.get("reflex_plan_cache_lookups_total")
+    assert pc.value(status="hit") == 2
+    assert pc.value(status="rebind") == 1
+    # and the exposition carries the same figures
+    text = svc.render_metrics()
+    assert 'reflex_queries_total{tenant="alice"} 2.0' in text

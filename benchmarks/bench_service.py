@@ -3,8 +3,10 @@ prepared-statement literal sweep), accountant overhead, the escalation path,
 the query-admission batching sweep (queries/sec serial vs batched at
 batch sizes 1/4/16 — DESIGN.md §11), and the durable-state persistence sweep
 (WAL-on vs WAL-off admit->execute latency + snapshot compaction time —
-DESIGN.md §12), and the tracing-overhead sweep (traced vs untraced batched
-drain + exact ledger parity — DESIGN.md §14), over the HealthLnK queries
+DESIGN.md §12), the tracing-overhead sweep (traced vs untraced batched
+drain + exact ledger parity — DESIGN.md §14), and the offline-randomness
+sweep (pool-warm vs on-demand submit latency, hit rate, bit-exact parity —
+DESIGN.md §15), over the HealthLnK queries
 submitted as SQL through :class:`AnalyticsService` by several tenants.
 
 Emits ``BENCH_service.json`` at the repo root with machine-readable per-node
@@ -244,6 +246,99 @@ def _bench_telemetry(tables, rows: list, artifact: dict, quick: bool) -> None:
         raise SystemExit("telemetry bench: traced ledger tallies diverged")
 
 
+def _bench_offline(tables, rows: list, artifact: dict, quick: bool) -> None:
+    """Offline/online phase split (DESIGN.md §15): submit latency for the
+    resizer-carrying join query with the correlated-randomness pool cold
+    (``offline="off"``: everything derived on the critical path) vs hot
+    (``offline="on"`` after a provisioner refill), plus the pool hit rate
+    and a hard bit-exactness check — pooled material is a content-addressed
+    cache, so revealed rows AND per-node ledger tallies must match the
+    on-demand run exactly, submission by submission."""
+    repeats = 4 if quick else 8
+    sql = QUERY_SQL["dosage_study"]
+
+    def mk(offline):
+        return AnalyticsService(
+            tables,
+            noise=TruncatedLaplace(eps=0.5, sensitivity=4),
+            placement="after_joins",
+            accountant=PrivacyAccountant(policy="escalate"),
+            key=jax.random.PRNGKey(5),
+            offline=offline,
+            offline_window=repeats + 1,
+        )
+
+    def timed(svc, n):
+        ts, res = [], []
+        for _ in range(n):
+            t0 = time.perf_counter()
+            res.append(svc.submit("alice", sql))
+            ts.append(time.perf_counter() - t0)
+        return ts, res
+
+    def pct(ts, q):
+        s = sorted(ts)
+        return s[min(len(s) - 1, int(q * len(s)))]
+
+    svc_cold = mk("off")
+    _, warm_cold = timed(svc_cold, 1)  # plan compile + jit warm, untimed
+    cold_ts, cold_res = timed(svc_cold, repeats)
+
+    svc_hot = mk("on")
+    _, warm_hot = timed(svc_hot, 1)  # cold recording pass: fills the recipe
+    refill = svc_hot.provisioner.refill(trigger="bench")
+    hot_ts, hot_res = timed(svc_hot, repeats)
+
+    # bit-exactness, ordinal by ordinal (same key => same noise counters)
+    def tallies(results):
+        return [
+            [(s.node, s.bytes_per_party, s.rounds) for s in r.report.nodes]
+            for r in results
+        ]
+
+    def revealed(results):
+        return [
+            {k: v.tolist() for k, v in sorted(r.rows.items())} for r in results
+        ]
+
+    parity = (
+        tallies(warm_cold + cold_res) == tallies(warm_hot + hot_res)
+        and revealed(warm_cold + cold_res) == revealed(warm_hot + hot_res)
+    )
+    if not parity:
+        raise SystemExit("offline bench: pooled run diverged from on-demand")
+
+    ps = svc_hot.pool.stats()
+    hit_rate = ps["hits"] / max(1, ps["hits"] + ps["misses"])
+    cold_p50, hot_p50 = pct(cold_ts, 0.5), pct(hot_ts, 0.5)
+    artifact["offline"] = {
+        "sql": sql,
+        "repeats": repeats,
+        "cold_us_p50": cold_p50 * 1e6,
+        "cold_us_p99": pct(cold_ts, 0.99) * 1e6,
+        "hot_us_p50": hot_p50 * 1e6,
+        "hot_us_p99": pct(hot_ts, 0.99) * 1e6,
+        "speedup_p50": cold_p50 / hot_p50,
+        "hit_rate": hit_rate,
+        "pool": ps,
+        "refill": refill,
+        "parity": parity,
+    }
+    rows.append((
+        "service_offline_hot_us_p50", hot_p50 * 1e6,
+        f"pool-warm submit, {cold_p50 / hot_p50:.2f}x vs cold, parity OK",
+    ))
+    rows.append((
+        "service_offline_cold_us_p50", cold_p50 * 1e6,
+        "on-demand randomness (offline=off)",
+    ))
+    rows.append((
+        "service_offline_pool_hit_rate", hit_rate * 100,
+        f"{ps['hits']}/{ps['hits'] + ps['misses']} fetches; residual misses "
+        "are post-Resize shapes (DESIGN.md §15.3)",
+    ))
+
+
 def run(quick: bool = False) -> list:
     n_rows = 12 if quick else N_ROWS
     rows: list[Row] = []
@@ -334,6 +429,9 @@ def run(quick: bool = False) -> list:
 
     # -- observability: tracing overhead + ledger parity (DESIGN.md §14) ------
     _bench_telemetry(tables, rows, artifact, quick)
+
+    # -- offline randomness pool: hot vs cold + hit rate (DESIGN.md §15) ------
+    _bench_offline(tables, rows, artifact, quick)
 
     artifact["plan_cache"] = cache
     artifact["accountant"] = {

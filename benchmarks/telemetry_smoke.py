@@ -64,11 +64,17 @@ def run() -> int:
             # node[Resize] span is the one whose raw info holds secrets —
             # exactly what the validator's redaction check targets
             svc.submit("alice", JOIN_SQL)
-            # batched path: schedule.wait records + one batch.flush span
+            # batched path: schedule.wait records + one batch.flush span;
+            # the empty-queue drain also hints the offline provisioner
+            # (inline refill — DESIGN.md §15)
             for tenant in ("alice", "bob", "carol"):
                 svc.enqueue(tenant, GROUP_SQL)
             svc.drain()
+            # pool-warm repeat: the reflex_offline_* metrics must carry
+            # real hit/refill traffic through the disclosure audit
+            svc.submit("alice", JOIN_SQL)
         svc.compact_state()  # exercise the compaction histogram
+        pool_stats = svc.pool.stats()
         tr.write(SPANS_PATH)
         with open(METRICS_PATH, "w") as f:
             json.dump(svc.metrics_snapshot(), f, indent=2, sort_keys=True)
@@ -78,7 +84,8 @@ def run() -> int:
         shutil.rmtree(state_dir, ignore_errors=True)
     print(
         f"wrote {os.path.normpath(SPANS_PATH)}: {len(tr.spans)} spans, "
-        f"{len(tr.redactions)} secret attrs redacted"
+        f"{len(tr.redactions)} secret attrs redacted, "
+        f"offline pool {pool_stats['hits']} hits / {pool_stats['misses']} misses"
     )
     print(f"wrote {os.path.normpath(METRICS_PATH)} and "
           f"{os.path.normpath(PROM_PATH)}")

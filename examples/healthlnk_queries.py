@@ -63,6 +63,10 @@ def check(qname, result, oracle):
     if qname == "med_dosage_sum":
         shown = {int(k): int(v) for k, v in zip(rows["med"], rows["total"])}
         return shown, shown == oracle
+    if qname == "repeat_diagnoses":
+        shown = {int(k): int(v)
+                 for k, v in zip(rows["major_icd9"], rows["cnt"])}
+        return shown, shown == oracle
     if qname == "med_dosage_avg":
         # the service's post_reveal already folded (sum, cnt) -> mean
         shown = {int(k): int(v) for k, v in zip(rows["med"], rows["mean"])}

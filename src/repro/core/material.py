@@ -1,0 +1,105 @@
+"""Ambient correlated-randomness material source (offline/online split).
+
+Every piece of correlated randomness this codebase consumes is a *pure
+function* of (pair-key content, derivation op, static args): PRF folds,
+replicated draws, zero-sharings, and shuffle-hop permutations are all
+deterministic derivations from a :class:`~repro.core.prf.PRFSetup`. A
+material source is therefore a **cache in front of the derivation
+primitives**: ``fetch(op, pair_keys, args, compute)`` either serves a
+precomputed value (offline pool hit) or falls through to ``compute()`` —
+the exact on-demand derivation — so pooled and on-demand streams are
+bit-identical by construction. There is no second randomness path to
+keep in sync.
+
+The active source is ambient (thread-local), installed by
+:func:`material_scope` around an engine execution; call sites in
+``core/prf.py`` and ``core/shuffle.py`` consult it via
+:func:`active_if_concrete`, which steps aside whenever any input is a
+jax Tracer: under a jit trace the derivation is baked into the compiled
+program (and replayed by XLA, not Python), so there is nothing to
+intercept — the pool accelerates the *eager* dispatch path, which is
+where stateful operators (Resize) and jit_ops=False engines pay for
+their randomness. Under an eager ``vmap`` the closed-over pair keys are
+concrete, so batched executions consult the pool normally.
+
+Content addressing: a fetch key is ``(op, pair_keys.tobytes(), args)``.
+Keying on key *content* (rather than on how the keys were derived) makes
+serving a stale or mismatched entry structurally impossible — a pool
+entry can only ever be found by the exact derivation that produced it.
+See ``repro/offline`` for the pool, planner, and provisioner built on
+this hook, and DESIGN.md §15 for the ownership/fallback rules.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = [
+    "MaterialSource",
+    "active_source",
+    "active_if_concrete",
+    "material_scope",
+    "content_key",
+]
+
+_STATE = threading.local()
+
+
+class MaterialSource:
+    """Interface a correlated-randomness cache implements.
+
+    ``fetch`` must return a value bit-identical to ``compute()`` — the
+    only freedom an implementation has is *when* that value was computed
+    (offline vs on the critical path). Implementations also expose
+    monotone ``hits`` / ``misses`` counters so the engine can attribute
+    hot-vs-cold per plan node.
+    """
+
+    hits: int = 0
+    misses: int = 0
+
+    def fetch(
+        self,
+        op: str,
+        pair_keys: jax.Array,
+        args: Tuple[Any, ...],
+        compute: Callable[[], jax.Array],
+    ) -> jax.Array:
+        raise NotImplementedError
+
+
+def active_source() -> Optional[MaterialSource]:
+    """The source installed by the innermost :func:`material_scope`, or None."""
+    return getattr(_STATE, "source", None)
+
+
+def active_if_concrete(*arrays) -> Optional[MaterialSource]:
+    """The active source, unless any input is a jax Tracer (jit/grad trace):
+    traced derivations compile into the program and must not be intercepted."""
+    src = getattr(_STATE, "source", None)
+    if src is None:
+        return None
+    for a in arrays:
+        if isinstance(a, jax.core.Tracer):
+            return None
+    return src
+
+
+@contextlib.contextmanager
+def material_scope(source: Optional[MaterialSource]):
+    """Install ``source`` as the ambient material source for this thread."""
+    prev = getattr(_STATE, "source", None)
+    _STATE.source = source
+    try:
+        yield source
+    finally:
+        _STATE.source = prev
+
+
+def content_key(op: str, pair_keys, args: Tuple[Any, ...]) -> tuple:
+    """Canonical content-addressed key for one derivation event."""
+    return (op, np.asarray(pair_keys).tobytes(), args)

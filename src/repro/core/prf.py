@@ -24,6 +24,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from . import material
 from .ring import Ring, default_ring
 
 __all__ = ["PRFSetup", "setup_prf", "zero_share_add", "zero_share_xor", "rand_replicated"]
@@ -81,15 +82,41 @@ class PRFSetup:
 
     def fold(self, tag: jnp.ndarray | int) -> "PRFSetup":
         """Derive fresh per-use keys (the PRF counter)."""
-        return PRFSetup(_fold_keys(self.pair_keys, tag))
+        src = material.active_if_concrete(self.pair_keys, tag)
+        if src is None:
+            return PRFSetup(_fold_keys(self.pair_keys, tag))
+        return PRFSetup(
+            src.fetch(
+                "fold",
+                self.pair_keys,
+                (int(tag),),
+                lambda: _fold_keys(self.pair_keys, tag),
+            )
+        )
 
     def draw(self, shape: Tuple[int, ...], ring: Ring) -> jnp.ndarray:
         """F(k_i, .) for each pair key -> (3, *shape) ring elements."""
-        return _draw_bits(self.pair_keys, tuple(shape), ring.dtype)
+        src = material.active_if_concrete(self.pair_keys)
+        if src is None:
+            return _draw_bits(self.pair_keys, tuple(shape), ring.dtype)
+        return src.fetch(
+            "draw",
+            self.pair_keys,
+            (tuple(int(s) for s in shape), jnp.dtype(ring.dtype).name),
+            lambda: _draw_bits(self.pair_keys, tuple(shape), ring.dtype),
+        )
 
     def draw_uniform(self, shape: Tuple[int, ...]) -> jnp.ndarray:
         """Per-pair-key uniform [0,1) floats -> (3, *shape) float32."""
-        return _draw_uniform(self.pair_keys, tuple(shape))
+        src = material.active_if_concrete(self.pair_keys)
+        if src is None:
+            return _draw_uniform(self.pair_keys, tuple(shape))
+        return src.fetch(
+            "uniform",
+            self.pair_keys,
+            (tuple(int(s) for s in shape),),
+            lambda: _draw_uniform(self.pair_keys, tuple(shape)),
+        )
 
 
 def setup_prf(key: jax.Array) -> PRFSetup:
@@ -98,16 +125,26 @@ def setup_prf(key: jax.Array) -> PRFSetup:
     return PRFSetup(jax.vmap(jax.random.key_data)(keys))
 
 
+def _zero_share_hooked(prf: PRFSetup, shape, ring: Ring, xor: bool) -> jnp.ndarray:
+    src = material.active_if_concrete(prf.pair_keys)
+    if src is None:
+        return _zero_share(prf.pair_keys, tuple(shape), ring.dtype, xor=xor)
+    return src.fetch(
+        "zero_xor" if xor else "zero_add",
+        prf.pair_keys,
+        (tuple(int(s) for s in shape), jnp.dtype(ring.dtype).name),
+        lambda: _zero_share(prf.pair_keys, tuple(shape), ring.dtype, xor=xor),
+    )
+
+
 def zero_share_add(prf: PRFSetup, shape, ring: Ring | None = None) -> jnp.ndarray:
     """(3, *shape) additive sharing of zero: alpha_i = F(k_i) - F(k_{i-1})."""
-    ring = ring or default_ring()
-    return _zero_share(prf.pair_keys, tuple(shape), ring.dtype, xor=False)
+    return _zero_share_hooked(prf, shape, ring or default_ring(), xor=False)
 
 
 def zero_share_xor(prf: PRFSetup, shape, ring: Ring | None = None) -> jnp.ndarray:
     """(3, *shape) XOR sharing of zero: alpha_i = F(k_i) ^ F(k_{i-1})."""
-    ring = ring or default_ring()
-    return _zero_share(prf.pair_keys, tuple(shape), ring.dtype, xor=True)
+    return _zero_share_hooked(prf, shape, ring or default_ring(), xor=True)
 
 
 def rand_replicated(prf: PRFSetup, shape, ring: Ring | None = None) -> jnp.ndarray:

@@ -24,6 +24,7 @@ from typing import Dict, Union
 import jax
 import jax.numpy as jnp
 
+from . import material
 from .ledger import fused_scope, log_comm
 from .prf import PRFSetup, zero_share_add, zero_share_xor
 from .sharing import AShare, BShare
@@ -44,8 +45,16 @@ Share = Union[AShare, BShare]
 def _hop_perm(prf: PRFSetup, hop: int, n: int) -> jnp.ndarray:
     """Permutation for hop ``hop`` — derived from pair key ``hop``, i.e. known
     to parties hop and hop+1 only."""
-    key = jax.random.wrap_key_data(prf.fold(1000 + hop).pair_keys[hop])
-    return jax.random.permutation(key, n)
+    sub = prf.fold(1000 + hop)
+
+    def compute():
+        key = jax.random.wrap_key_data(sub.pair_keys[hop])
+        return jax.random.permutation(key, n)
+
+    src = material.active_if_concrete(sub.pair_keys)
+    if src is None:
+        return compute()
+    return src.fetch("perm", sub.pair_keys, (int(hop), int(n)), compute)
 
 
 def composed_permutation(prf: PRFSetup, n: int) -> jnp.ndarray:

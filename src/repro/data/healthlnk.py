@@ -175,4 +175,7 @@ def plaintext_oracle(query: str, plain: Dict[str, Dict[str, np.ndarray]]):
             return sums
         return {k: {"sum": sums[k], "cnt": cnts[k], "avg": sums[k] // cnts[k]}
                 for k in sums}
+    if query == "repeat_diagnoses":
+        vals, counts = np.unique(d["major_icd9"], return_counts=True)
+        return {int(v): int(c) for v, c in zip(vals, counts) if c >= 2}
     raise ValueError(query)

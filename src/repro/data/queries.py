@@ -18,6 +18,7 @@ from ..plan.nodes import (
     GroupByAvg,
     GroupByCount,
     GroupBySum,
+    Having,
     Join,
     Max,
     Min,
@@ -49,6 +50,7 @@ __all__ = [
     "diag_breakdown_plan",
     "med_dosage_sum_plan",
     "med_dosage_avg_plan",
+    "repeat_diagnoses_plan",
     "all_query_plans",
     "all_query_sql",
     "QUERY_SQL",
@@ -173,6 +175,17 @@ def med_dosage_avg_plan() -> PlanNode:
     return GroupByAvg(Scan("medications"), "med", "dosage", name="mean")
 
 
+def repeat_diagnoses_plan() -> PlanNode:
+    """SELECT major_icd9, COUNT(*) AS cnt FROM diagnoses GROUP BY major_icd9
+    HAVING COUNT(*) >= 2 — the post-aggregation oblivious filter (HAVING):
+    the count column stays secret, only validity bits flip, and the integer
+    domain turns >= 2 into cnt > 1 at compile time."""
+    return Having(
+        GroupByCount(Scan("diagnoses"), "major_icd9"),
+        [Predicate("cnt", "gt", 1)],
+    )
+
+
 def all_query_plans():
     return {
         "comorbidity": comorbidity_plan(),
@@ -188,6 +201,7 @@ def all_query_plans():
         "diag_breakdown": diag_breakdown_plan(),
         "med_dosage_sum": med_dosage_sum_plan(),
         "med_dosage_avg": med_dosage_avg_plan(),
+        "repeat_diagnoses": repeat_diagnoses_plan(),
     }
 
 
@@ -253,6 +267,10 @@ QUERY_SQL = {
     "med_dosage_avg": (
         "SELECT med, AVG(dosage) AS mean FROM medications GROUP BY med"
     ),
+    "repeat_diagnoses": (
+        "SELECT major_icd9, COUNT(*) AS cnt FROM diagnoses "
+        "GROUP BY major_icd9 HAVING COUNT(*) >= 2"
+    ),
 }
 
 # The dialect-feature subset (used by the `python -m repro.sql --check`
@@ -267,6 +285,7 @@ DIALECT_QUERIES = (
     "diag_breakdown",
     "med_dosage_sum",
     "med_dosage_avg",
+    "repeat_diagnoses",
 )
 
 

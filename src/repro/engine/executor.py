@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.ledger import CommLedger, batched_tally, log_comm
+from ..core import material
 from ..core.prf import PRFSetup, setup_prf
 from ..obs import redact
 from ..obs import trace as obs_trace
@@ -331,6 +332,8 @@ class Engine:
         Consumes the resize info `_apply` may have produced; clearing it
         keeps a later Resize (or a later run) from reporting stale info."""
         led = CommLedger()
+        src = material.active_source()
+        h0, m0 = (src.hits, src.misses) if src is not None else (0, 0)
         t0 = time.perf_counter()
         with led:
             out = self._apply(node, children)
@@ -339,11 +342,16 @@ class Engine:
         tally = led.tally()
         n_ins = [t.n for t in children]
         extra = {}
+        if src is not None and (src.hits - h0 or src.misses - m0):
+            # hot/cold attribution for EXPLAIN ANALYZE: how much of this
+            # node's correlated randomness came from the offline pool
+            extra["offline"] = {"hits": src.hits - h0, "misses": src.misses - m0}
         if lookup(type(node)).provides_resize_info:
-            extra = self._last_resize_info or {}
+            info = self._last_resize_info or {}
             self._last_resize_info = None
-            if self.reveal_hook is not None and extra and not extra.get("skipped"):
-                self.reveal_hook(node, extra)
+            if self.reveal_hook is not None and info and not info.get("skipped"):
+                self.reveal_hook(node, info)
+            extra = {**info, **extra}
         stats = NodeStats(
             node=node.describe(),
             n_in=n_ins[0] if n_ins else 0,
@@ -522,6 +530,8 @@ class Engine:
         serial run — while the physical tally charges bytes K times and the
         shared rounds once."""
         led = CommLedger()
+        src = material.active_source()
+        h0, m0 = (src.hits, src.misses) if src is not None else (0, 0)
         t0 = time.perf_counter()
         with led:
             out = self._apply_batched(node, [c.stacked for c in children], ctx.k)
@@ -530,6 +540,11 @@ class Engine:
         tally = led.tally()
         val = _BatchVal(k=ctx.k, stacked=out)
         n_ins = [c.slot_n(0) for c in children]
+        extra = {}
+        if src is not None and (src.hits - h0 or src.misses - m0):
+            # one vmapped launch serves all K slots: pool traffic is shared,
+            # so the whole-pass delta is reported identically into each slot
+            extra["offline"] = {"hits": src.hits - h0, "misses": src.misses - m0}
         for report in ctx.reports:
             report.nodes.append(
                 NodeStats(
@@ -540,6 +555,7 @@ class Engine:
                     seconds=dt / ctx.k,  # amortized wall share
                     bytes_per_party=int(tally["bytes_per_party"]),
                     rounds=int(tally["rounds"]),
+                    extra=dict(extra),
                 )
             )
         tr = obs_trace.active_tracer()
@@ -554,6 +570,7 @@ class Engine:
                 rounds=int(tally["rounds"]),
                 slots=ctx.k,
                 stacked=True,
+                **extra,
             )
         # physical cost of the pass: bytes x K, synchronous rounds shared
         phys = batched_tally(tally, ctx.k)

@@ -32,6 +32,7 @@ _COLS = (
     ("sec", 9),
     ("MiB/party", 11),
     ("rounds", 8),
+    ("offline", 9),
 )
 
 
@@ -70,6 +71,24 @@ def _estimates(plan: PlanNode, cost_model) -> Dict[int, Dict]:
 
     walk(plan)
     return out
+
+
+def _offline_note(extra: Optional[Dict]) -> str:
+    """Hot-vs-cold correlated-randomness column: how many of this node's
+    pool fetches were served precomputed (hits) vs derived on demand
+    (misses). Counts are cache bookkeeping over template-keyed material —
+    see obs/redact.py for the disclosure argument."""
+    if not extra:
+        return "-"
+    off = redact.public_view(extra).get("offline")
+    if not off:
+        return "-"
+    h, m = int(off.get("hits", 0)), int(off.get("misses", 0))
+    if m == 0:
+        return f"hot {h}"
+    if h == 0:
+        return f"cold {m}"
+    return f"{h}h/{m}c"
 
 
 def _trim_note(node: PlanNode, extra: Optional[Dict]) -> str:
@@ -129,10 +148,11 @@ def explain_text(
             f"~{e['own_bytes'] / 2**20:.3f}" if e else "-"
         )
         rounds = f"{a.rounds}" if a else "-"
+        offline = _offline_note(a.extra if a else None)
         note = _trim_note(node, a.extra if a else None)
         lines.append(
             f"{label:<{name_w}}{est_rows:>9}{act_rows:>9}{sec:>9}"
-            f"{mib:>11}{rounds:>8}  {note}".rstrip()
+            f"{mib:>11}{rounds:>8}{offline:>9}  {note}".rstrip()
         )
     if report is not None:
         lines.append(

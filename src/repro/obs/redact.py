@@ -92,6 +92,13 @@ PUBLIC_KEYS = frozenset({
     "appends", "fsync",
     # misc identity
     "name", "kind", "status", "ok", "count", "version",
+    # offline randomness pool (DESIGN.md §15): hit/miss counts are cache
+    # bookkeeping over *template-derived* material — the pool key is the
+    # template fingerprint plus pow2 shape buckets, both already public plan
+    # structure; depths/refill stats are coordinator-side memory accounting
+    "offline", "hits", "misses", "depth", "depth_bytes", "entries",
+    "refills", "trigger", "watermark", "evictions", "gc_dropped",
+    "static_entries", "counter_entries", "recipes", "bundles",
 })
 
 

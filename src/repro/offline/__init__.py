@@ -1,0 +1,36 @@
+"""Offline/online phase split: correlated-randomness provisioning (DESIGN.md §15).
+
+The online phase of every query pays for its correlated randomness — PRF
+folds, zero-sharings, shuffle-hop permutations, conversion material — on
+the critical path. This package moves that work into a background offline
+phase, keyed by the plan cache's template fingerprints:
+
+* :class:`~repro.offline.manifest.RandomnessPlanner` walks a compiled plan
+  template and derives its randomness **manifest** (per node: PRF folds,
+  shuffle control sets, a2b/bit2a conversion material, Resizer
+  noise-counter reservations, as a function of pow2-bucketed shapes).
+* :class:`~repro.offline.pool.RandomnessPool` stores precomputed material
+  keyed by (template fingerprint, shape bucket) with bounded memory and
+  explicit counter-range ownership; its :class:`~repro.offline.pool.PoolSource`
+  plugs into the ambient hook in :mod:`repro.core.material`.
+* :class:`~repro.offline.provisioner.Provisioner` sizes pool targets from
+  observed admission rates and refills during idle windows (scheduler
+  drain) or from a background thread.
+
+Pooled and on-demand draws are bit-identical by construction: the pool is
+a content-addressed cache in front of the same pure derivation functions
+the online path calls on a miss.
+"""
+from .manifest import NodeManifest, RandomnessManifest, RandomnessPlanner
+from .pool import PoolSource, RandomnessPool, Recipe
+from .provisioner import Provisioner
+
+__all__ = [
+    "NodeManifest",
+    "RandomnessManifest",
+    "RandomnessPlanner",
+    "PoolSource",
+    "RandomnessPool",
+    "Recipe",
+    "Provisioner",
+]

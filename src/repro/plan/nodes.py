@@ -24,6 +24,7 @@ __all__ = [
     "PlanNode",
     "Scan",
     "Filter",
+    "Having",
     "Project",
     "Join",
     "JoinSortMerge",
@@ -114,6 +115,25 @@ class Filter(PlanNode):
 
     def describe(self) -> str:
         return f"Filter({render_pred(self.pred)})"
+
+
+@dataclasses.dataclass
+class Having(PlanNode):
+    """Post-aggregation filter (SQL HAVING): the same oblivious-filter
+    protocol as WHERE, applied to a GROUP BY output. Predicate columns name
+    the aggregate output schema (group keys plus the aggregate column, e.g.
+    the COUNT(*) name), so ``HAVING COUNT(*) >= 2`` compiles to a predicate
+    over the count column — the aggregate values stay secret; only validity
+    bits flip, sizes never change."""
+
+    child: PlanNode
+    pred: Pred
+
+    def __post_init__(self):
+        self.pred = normalize_pred(self.pred)
+
+    def describe(self) -> str:
+        return f"Having({render_pred(self.pred)})"
 
 
 @dataclasses.dataclass

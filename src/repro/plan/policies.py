@@ -138,9 +138,24 @@ def select_join_algorithms(
         if cost_model is None:
             return node
         own = lambda est, kids: est["bytes"] - sum(k["bytes"] for k in kids)
+        # child estimates arrive calibration-refined: CostModel.estimate
+        # applies the CalibrationStore's observed (already-disclosed)
+        # post-trim sizes, so the product-vs-sortmerge byte comparison below
+        # tracks learned cardinalities instead of static selectivity
+        # defaults — the product join's cost falls quadratically with
+        # observed input sizes, the sort-merge cost only log-linearly, so
+        # observations genuinely flip this choice (see
+        # tests/test_service.py::test_calibration_steers_join_algorithm)
         kids = [cost_model.estimate(c) for c in node.children()]
         d_prod = lookup(Join).estimate(node, kids, cost_model)
         d_sm = lookup(JoinSortMerge).estimate(sm, kids, cost_model)
+        if getattr(cost_model, "calibration", None) is not None:
+            # refine the candidates' own output estimates too, so an
+            # observed join output size reaches the decision record
+            d_prod = cost_model.calibration.refine(
+                node, d_prod, cost_model.noise
+            )
+            d_sm = cost_model.calibration.refine(sm, d_sm, cost_model.noise)
         return sm if own(d_sm, kids) < own(d_prod, kids) else node
 
     return rewrite(plan)

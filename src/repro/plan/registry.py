@@ -84,6 +84,7 @@ from .nodes import (
     GroupByAvg,
     GroupByCount,
     GroupBySum,
+    Having,
     Join,
     JoinSortMerge,
     Max,
@@ -173,8 +174,9 @@ class OperatorDef:
     render_rel: Optional[Callable] = None
     render_head: Optional[Callable] = None
     render_order: Optional[Callable] = None
+    render_having: Optional[Callable] = None
     post_reveal: Optional[Callable] = None
-    sql_shape: str = "none"  # leaf | relational | head | order | none
+    sql_shape: str = "none"  # leaf | relational | head | order | having | none
     resizer: str = "skip"  # internal | skip
     balloons: bool = False  # output is larger than inputs (join product)
     singleton: bool = False
@@ -642,6 +644,42 @@ register(OperatorDef(
     sql_shape="head",
     resizer="internal",
     batchable=False,
+))
+
+
+def _having_schema(node: Having, children, catalog) -> PlanSchema:
+    children[0].require_pred(node.pred, node)
+    return children[0]
+
+
+def _render_having(r, node: Having, head_node, schema) -> str:
+    """HAVING clause text. The predicate names the aggregate *output* schema
+    (group keys + the aggregate column), so the aggregate column renders back
+    to its SQL expression and group keys re-qualify against the input."""
+    agg = {}
+    if isinstance(head_node, GroupByCount):
+        agg[head_node.count_name] = "COUNT(*)"
+    elif isinstance(head_node, GroupBySum):
+        agg[head_node.name] = f"SUM({r.qual(schema, head_node.col)})"
+    else:
+        raise ValueError(
+            "HAVING renders only over GROUP BY COUNT(*)/SUM heads"
+        )
+    qual = lambda col: agg.get(col) or r.qual(schema, col)
+    return "HAVING " + " AND ".join(sql_conjuncts(node.pred, qual))
+
+
+# the protocol is exactly the WHERE filter: comparisons over the aggregate
+# column go through bshare_col's a->b conversion, validity bits flip, the
+# (oblivious) size is unchanged — HAVING discloses nothing WHERE doesn't
+register(OperatorDef(
+    node_type=Having,
+    schema=_having_schema,
+    estimate=_filter_estimate,
+    protocol=lambda node: lambda prf, t: oblivious_filter(t, node.pred, prf),
+    render_having=_render_having,
+    sql_shape="having",
+    resizer="internal",
 ))
 
 

@@ -196,9 +196,15 @@ class QueryScheduler:
                     tenant=e.ticket.tenant, ticket=e.ticket.id,
                 )
             try:
-                results = self.service.engine.execute_batch(
-                    [e.aq.admitted for e in entries]
-                )
+                # one bucket = one template = one pool bundle: the stacked
+                # pass draws its correlated randomness through the same
+                # offline scope a serial submit would
+                with self.service._offline_scope(
+                    getattr(entries[0].aq, "bundle_key", None)
+                ):
+                    results = self.service.engine.execute_batch(
+                        [e.aq.admitted for e in entries]
+                    )
             except Exception:
                 # the pass may have died after per-slot Resizes already
                 # revealed sizes: charge every slot rather than leak a free
@@ -260,6 +266,12 @@ class QueryScheduler:
             # quiet point: every slot's intent has its record journaled, so
             # folding the durable WALs into snapshots loses nothing
             self.service._maybe_compact()
+            # ...and the engine is idle: let the offline provisioner refill
+            # the randomness pool for the next window (inline in "on" mode,
+            # a thread wake-up in "background" mode)
+            prov = getattr(self.service, "provisioner", None)
+            if prov is not None:
+                prov.hint()
         return out
 
     # -- introspection --------------------------------------------------------

@@ -45,6 +45,7 @@ plan draw i.i.d. noise — exactly the attacker model CRT prices.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from collections import OrderedDict
@@ -53,10 +54,12 @@ from typing import Dict, List, Optional
 import jax
 import numpy as np
 
+from ..core.material import material_scope
 from ..core.noise import NoiseStrategy, shrinkwrap_default
 from ..engine.executor import Engine, ExecutionReport
 from ..obs import MetricsRegistry, explain_text, redact
 from ..obs import trace as obs_trace
+from ..offline import Provisioner, RandomnessPool
 from ..ops.table import SecretTable
 from ..plan.nodes import PlanNode
 from ..sql.catalog import Catalog
@@ -68,7 +71,7 @@ from ..sql.compile import (
     plan_params,
     template_fingerprint,
 )
-from ..plan.policies import insert_resizers
+from ..plan.policies import insert_resizers, select_join_algorithms
 from ..core.resizer import ResizerConfig
 from .accountant import PrivacyAccountant, QueryRefused, strategy_key
 
@@ -108,6 +111,10 @@ class AdmittedQuery:
     accountant_seconds: float
     escalations: List[Dict]
     recorded: bool = False  # set once accountant.record committed
+    # offline-pool identity: (template fingerprint hash, pow2 shape key) —
+    # the same public identity the plan cache uses, never a data-dependent
+    # value (see DESIGN.md §15)
+    bundle_key: Optional[tuple] = None
 
 
 class TenantSession:
@@ -143,7 +150,16 @@ class AnalyticsService:
         state_dir: Optional[str] = None,  # durable shared state (DESIGN §12)
         wal_fsync: bool = True,
         compact_wal_bytes: int = 1 << 16,  # auto-compaction threshold
+        offline: str = "on",  # correlated-randomness pool (DESIGN §15):
+        # "off" = derive everything on demand; "on" = pool + inline refills
+        # at idle windows; "background" = pool + provisioner daemon thread
+        offline_pool_bytes: int = 64 << 20,
+        offline_window: int = 8,  # upcoming counters provisioned per template
     ):
+        if offline not in ("off", "on", "background"):
+            raise ValueError(
+                f"offline={offline!r} (expected off|on|background)"
+            )
         self.tables = tables
         self.catalog = catalog or Catalog.from_tables(tables)
         self.noise = noise if noise is not None else shrinkwrap_default()
@@ -188,10 +204,52 @@ class AnalyticsService:
             "Noisy-size observations already disclosed per signature",
             ("sig", "strategy"),
         )
+        # offline pool traffic, labeled by template fingerprint hash — the
+        # pool key IS the plan-cache identity, never a true size (§15)
+        self._m_off_hits = m.counter(
+            "reflex_offline_hits_total",
+            "Correlated-randomness fetches served from the offline pool",
+            ("template",),
+        )
+        self._m_off_misses = m.counter(
+            "reflex_offline_misses_total",
+            "Correlated-randomness fetches derived on demand (cold)",
+            ("template",),
+        )
+        self._m_off_demand = m.counter(
+            "reflex_offline_demand_total",
+            "Engine passes executed under each template's pool bundle "
+            "(feeds provisioner target sizing)",
+            ("template",),
+        )
+        self._m_off_depth = m.gauge(
+            "reflex_offline_pool_depth_bytes",
+            "Bytes of precomputed randomness currently pooled",
+        )
+        self._m_off_entries = m.gauge(
+            "reflex_offline_pool_entries",
+            "Pooled entries by material class", ("kind",),
+        )
         self.engine = Engine(
             tables, key=key if key is not None else jax.random.PRNGKey(0),
             jit_ops=jit_ops,
         )
+        self.offline_mode = offline
+        self.pool: Optional[RandomnessPool] = None
+        self.provisioner: Optional[Provisioner] = None
+        self._offline_demand_counts: Dict[tuple, float] = {}
+        if offline != "off":
+            self.pool = RandomnessPool(max_bytes=offline_pool_bytes)
+            self.provisioner = Provisioner(
+                self.pool,
+                self.engine.prf,
+                ctr_fn=lambda: self.engine._resize_ctr,
+                demand_fn=lambda: dict(self._offline_demand_counts),
+                window=offline_window,
+                metrics=self.metrics,
+            )
+            if offline == "background":
+                self.provisioner.start()
         self.state_dir = state_dir
         self.compact_wal_bytes = compact_wal_bytes
         self.calibration = None
@@ -214,6 +272,7 @@ class AnalyticsService:
             self.engine.reveal_hook = self._observe_reveal
         self._plan_cache: "OrderedDict" = OrderedDict()
         self._plan_cache_max = plan_cache_size
+        self._last_bundle_key: Optional[tuple] = None
         from .scheduler import QueryScheduler
 
         self.scheduler = QueryScheduler(
@@ -273,6 +332,11 @@ class AnalyticsService:
         entry = self._plan_cache.get(cache_key)
         hit = entry is not None
         rebind = False
+        # the offline pool's bundle identity: same public template identity
+        # as the plan cache, hashed so it can double as a metric label
+        self._last_bundle_key = (
+            redact.fingerprint_hash(cache_key[0]), cache_key[3],
+        )
         if hit:
             self._plan_cache.move_to_end(cache_key)
             self._m_plan_cache.inc(status="hit")
@@ -285,12 +349,20 @@ class AnalyticsService:
                 plan = bind_params(cached_plan, params)
         else:
             self._m_plan_cache.inc(status="miss")
+            # physical join selection BEFORE resizer placement, against the
+            # calibration-refined cost model: observed (already-disclosed)
+            # intermediate sizes steer the product-vs-sortmerge choice with
+            # zero extra disclosure. Catalogs without declared multiplicity
+            # bounds never rewrite (sort-merge inapplicable).
+            physical = select_join_algorithms(
+                logical, cost_model=cm, catalog=self.catalog
+            )
             if self.placement == "none":
-                plan = logical
+                plan = physical
             else:
                 cfg = ResizerConfig(noise=self.noise, addition=self.addition)
                 plan = insert_resizers(
-                    logical, lambda _n: cfg, placement=self.placement,
+                    physical, lambda _n: cfg, placement=self.placement,
                     cost_model=cm,
                 )
             self._plan_cache[cache_key] = (params, plan)
@@ -306,6 +378,7 @@ class AnalyticsService:
         path and the scheduler). ``planned`` threads the accountant's
         cross-query admission group through a batching window."""
         plan, hit, compile_s = self.compile(sql)
+        bundle_key = self._last_bundle_key
         ta = time.perf_counter()
         try:
             admitted, escalations = self.accountant.admit(plan, planned)
@@ -329,6 +402,7 @@ class AnalyticsService:
             compile_seconds=compile_s,
             accountant_seconds=time.perf_counter() - ta,
             escalations=escalations,
+            bundle_key=bundle_key,
         )
 
     def _finalize(
@@ -373,12 +447,47 @@ class AnalyticsService:
             batch_slots=batch_slots,
         )
 
+    @contextlib.contextmanager
+    def _offline_scope(self, bundle_key: Optional[tuple]):
+        """Install the offline randomness pool around one engine pass.
+
+        A no-op when the pool is off. Otherwise every eager correlated-
+        randomness derivation inside consults the pool first (hot) and falls
+        back to on-demand derivation (cold) — bit-identical either way, the
+        pool is a content-addressed cache in front of the same pure
+        functions. The first pass per bundle records the derivation recipe
+        the provisioner replays offline."""
+        if self.pool is None or bundle_key is None:
+            yield None
+            return
+        template = bundle_key[0]
+        self._offline_demand_counts[bundle_key] = (
+            self._offline_demand_counts.get(bundle_key, 0.0) + 1.0
+        )
+        self._m_off_demand.inc(template=template)
+        src = self.pool.source(bundle_key, self.engine.prf.pair_keys)
+        try:
+            with obs_trace.span("offline", template=template):
+                with material_scope(src):
+                    yield src
+        finally:
+            src.finish()
+            if src.hits:
+                self._m_off_hits.inc(src.hits, template=template)
+            if src.misses:
+                self._m_off_misses.inc(src.misses, template=template)
+            obs_trace.record(
+                "offline.pass", template=template,
+                hits=src.hits, misses=src.misses,
+            )
+
     def _execute_admitted(self, aq: AdmittedQuery, planned) -> QueryResult:
         """Serial batch-of-1: execute + finalize with the failure-accounting
         protocol (the one shared code path for sync submits and the
         scheduler's non-batchable fallback — privacy-critical, keep single)."""
         try:
-            out, report = self.engine.execute(aq.admitted)
+            with self._offline_scope(aq.bundle_key):
+                out, report = self.engine.execute(aq.admitted)
             return self._finalize(aq, out, report)
         except Exception:
             # execution may have revealed noisy sizes that record() never
@@ -444,6 +553,11 @@ class AnalyticsService:
         self.accountant.maybe_compact(-1)
         self.calibration.maybe_compact(-1)
 
+    def close(self) -> None:
+        """Stop background work (the offline provisioner thread, if any)."""
+        if self.provisioner is not None:
+            self.provisioner.stop()
+
     # -- reporting ------------------------------------------------------------
     def _publish_budget_gauges(self) -> None:
         """Mirror the accountant's per-signature burn-down into gauges.
@@ -464,6 +578,11 @@ class AnalyticsService:
         js = Engine.jit_cache_stats()
         for k in ("hits", "misses", "size"):
             self._m_jit.set(js[k], status=k)
+        if self.pool is not None:
+            ps = self.pool.stats()
+            self._m_off_depth.set(ps["depth_bytes"])
+            self._m_off_entries.set(ps["static_entries"], kind="static")
+            self._m_off_entries.set(ps["counter_entries"], kind="counter")
         self.scheduler.publish_gauges()
         self._publish_budget_gauges()
 
@@ -520,6 +639,11 @@ class AnalyticsService:
             # these counters span all services in the process
             "jit_cache": {**Engine.jit_cache_stats(), "scope": "process"},
             "scheduler": self.scheduler.stats,
+            "offline": None if self.pool is None else {
+                "mode": self.offline_mode,
+                **self.pool.stats(),
+                "provisioner": self.provisioner.stats(),
+            },
             "accountant": self.accountant.status(),
             "state": None if self.state_dir is None else {
                 "dir": self.state_dir,

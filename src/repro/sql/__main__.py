@@ -104,6 +104,12 @@ def _check_dialect_execution() -> int:
                     )
                 }
                 ok = got == oracle
+            elif name == "repeat_diagnoses":
+                got = {
+                    int(k): int(v)
+                    for k, v in zip(rows["major_icd9"], rows["cnt"])
+                }
+                ok = got == oracle
             else:  # diag_breakdown
                 got = {
                     (int(a), int(b)): int(c)

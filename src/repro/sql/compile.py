@@ -52,6 +52,7 @@ from ..plan.nodes import (
     GroupByAvg,
     GroupByCount,
     GroupBySum,
+    Having,
     Join,
     Max,
     Min,
@@ -75,6 +76,7 @@ from .parser import (
     CountStar,
     MaxItem,
     MinItem,
+    OrExpr,
     SelectStmt,
     SumItem,
     parse,
@@ -405,6 +407,55 @@ def _reorder_pool(
 # Terminal operators
 # -----------------------------------------------------------------------------
 
+def _having_operand(operand, node, keys, phys, sql, pos):
+    """HAVING operand -> a ColumnRef over the aggregate *output* schema.
+    Aggregate expressions (COUNT(*)/SUM(col)) and bare alias references
+    rewrite to the aggregate's output column; anything else must be a
+    grouping column."""
+    if isinstance(operand, CountStar):
+        if not isinstance(node, GroupByCount):
+            raise SqlError(
+                "HAVING COUNT(*) requires a COUNT(*) aggregate", sql, pos
+            )
+        return ColumnRef(None, node.count_name)
+    if isinstance(operand, SumItem):
+        if not isinstance(node, GroupBySum) or phys(operand.col) != node.col:
+            raise SqlError(
+                "HAVING SUM(col) must name the selected SUM aggregate",
+                sql, pos,
+            )
+        return ColumnRef(None, node.name)
+    if isinstance(operand, (AvgItem, MinItem, MaxItem, CountDistinctItem)):
+        raise SqlError(
+            "HAVING supports COUNT(*)/SUM(col) aggregates only", sql, pos
+        )
+    agg_name = (
+        node.count_name if isinstance(node, GroupByCount) else node.name
+    )
+    if operand.alias is None and operand.name == agg_name:
+        return ColumnRef(None, agg_name)  # bare aggregate alias
+    p = phys(operand)
+    if p not in keys:
+        raise SqlError(
+            f"HAVING column {operand} is not in the GROUP BY output",
+            sql, operand.pos,
+        )
+    return ColumnRef(None, p)
+
+
+def _having_expr(expr: BoolExpr, conv) -> BoolExpr:
+    """Rewrite every operand of a HAVING boolean tree via ``conv``."""
+    if isinstance(expr, Condition):
+        left = conv(expr.left, expr.pos)
+        right = (
+            expr.right if isinstance(expr.right, int)
+            else conv(expr.right, expr.pos)
+        )
+        return Condition(left, expr.op, right, expr.pos)
+    terms = tuple(_having_expr(t, conv) for t in expr.terms)
+    return AndExpr(terms) if isinstance(expr, AndExpr) else OrExpr(terms)
+
+
 def _apply_terminals(
     stmt: SelectStmt, sub: _SubPlan, res: _Resolver, sql: str
 ) -> PlanNode:
@@ -473,6 +524,19 @@ def _apply_terminals(
                 cols.append(p)
         node = Project(node, tuple(cols))
 
+    if stmt.having is not None:
+        if not stmt.group_by:
+            raise SqlError("HAVING requires GROUP BY", sql)
+        if isinstance(node, GroupByAvg):
+            raise SqlError(
+                "HAVING over AVG(col) is unsupported (the average exists "
+                "only post-reveal; filter on SUM or COUNT instead)", sql,
+            )
+        conv = lambda op, pos: _having_operand(op, node, keys, phys, sql, pos)
+        mapped = _having_expr(stmt.having, conv)
+        # the Having predicate names the aggregate output schema directly
+        node = Having(node, _pred_tree(mapped, lambda col: col.name))
+
     if stmt.order_by is not None:
         if lookup(type(node)).singleton:
             raise SqlError(
@@ -490,7 +554,7 @@ def _apply_terminals(
             order_col = count_name
         else:
             order_col = phys(stmt.order_by)
-            if count_name is not None and order_col not in node.keys:
+            if count_name is not None and order_col not in keys:
                 # the GroupByCount output carries only the keys and the count
                 raise SqlError(
                     f"ORDER BY {stmt.order_by} is not in the GROUP BY output "

@@ -28,6 +28,7 @@ KEYWORDS = {
     "and",
     "or",
     "group",
+    "having",
     "order",
     "by",
     "asc",

@@ -5,6 +5,7 @@ Grammar (keywords case-insensitive, integer literals only):
     query      := SELECT select_list FROM from_clause
                   [WHERE bool_expr]
                   [GROUP BY column (',' column)*]
+                  [HAVING bool_expr]              -- operands may be aggregates
                   [ORDER BY order_key [ASC|DESC]]
                   [LIMIT int] [';']
     select_list:= '*' | DISTINCT column | item (',' item)*
@@ -22,6 +23,9 @@ Grammar (keywords case-insensitive, integer literals only):
     bool_prim  := '(' bool_expr ')' | cond
     cond       := operand op operand      op := = | < | <= | > | >= | <>
     operand    := column | int
+                | COUNT '(' '*' ')' | SUM '(' column ')'   -- HAVING only
+                | AVG '(' column ')' | MIN '(' column ')'
+                | MAX '(' column ')'
     column     := ident | ident '.' ident
     order_key  := column | COUNT '(' '*' ')'
 
@@ -71,11 +75,14 @@ class ColumnRef:
 @dataclasses.dataclass(frozen=True)
 class Condition:
     """left OP right; right is a ColumnRef or an int literal. Normalized so a
-    literal (if any) is on the right and op is one of eq|lt|le|gt|ge|ne."""
+    literal (if any) is on the right and op is one of eq|lt|le|gt|ge|ne.
 
-    left: ColumnRef
+    Inside HAVING, either side may also be an aggregate item (CountStar,
+    SumItem, ...) referencing the GROUP BY output."""
+
+    left: Union[ColumnRef, "CountStar", "SumItem", "AvgItem", "MinItem", "MaxItem"]
     op: str
-    right: Union[ColumnRef, int]
+    right: Union[ColumnRef, int, "CountStar", "SumItem", "AvgItem", "MinItem", "MaxItem"]
     pos: int = dataclasses.field(default=0, compare=False)
 
     @property
@@ -168,6 +175,7 @@ class SelectStmt:
     order_by: Optional[Union[ColumnRef, CountStar]]
     order_desc: bool
     limit: Optional[int]
+    having: Optional[BoolExpr] = None  # post-aggregation filter, None when absent
 
 
 _OPS = {"EQ": "eq", "LT": "lt", "LE": "le", "GT": "gt", "GE": "ge", "NE": "ne"}
@@ -181,6 +189,8 @@ class _Parser:
         self.sql = sql
         self.toks = tokenize(sql)
         self.i = 0
+        # inside HAVING, comparison operands may be aggregate expressions
+        self._agg_operands = False
 
     # -- token plumbing -------------------------------------------------------
     @property
@@ -224,6 +234,16 @@ class _Parser:
             while self.accept("COMMA"):
                 keys.append(self._column())
             group_by = tuple(keys)
+        having: Optional[BoolExpr] = None
+        if self.cur.kind == "HAVING":
+            if not group_by:
+                raise self.error("HAVING requires GROUP BY")
+            self.advance()
+            self._agg_operands = True
+            try:
+                having = self._bool_expr()
+            finally:
+                self._agg_operands = False
         order_by, order_desc = None, False
         if self.accept("ORDER"):
             self.expect("BY", "BY after ORDER")
@@ -254,6 +274,7 @@ class _Parser:
             order_by=order_by,
             order_desc=order_desc,
             limit=limit,
+            having=having,
         )
 
     def _select_list(self) -> Tuple[SelectItem, ...]:
@@ -379,6 +400,16 @@ class _Parser:
     def _operand(self) -> Union[ColumnRef, int]:
         if self.cur.kind == "INT":
             return int(self.advance().value)
+        if self._agg_operands and self.cur.kind in _AGG_ITEMS:
+            kind = self.advance().kind
+            self.expect("LPAREN", f"'(' after {kind}")
+            if kind == "COUNT":
+                self.expect("STAR", "'*' inside COUNT (HAVING supports COUNT(*) only)")
+                self.expect("RPAREN", "')'")
+                return CountStar()
+            col = self._column()
+            self.expect("RPAREN", "')'")
+            return _AGG_ITEMS[kind](col)
         return self._column()
 
 

@@ -4,7 +4,8 @@ Supports the plan shapes the compiler itself emits: left-deep ``Join`` trees
 over ``Filter(Scan)`` / ``Scan`` leaves (with predicate trees rendered back
 to AND/OR/parenthesized conditions), an optional terminal head node
 (GroupByCount / Distinct / CountValid / CountDistinct / Sum / Avg / Project)
-and an OrderBy, so ``compile_logical(render_sql(plan)) == plan`` for those
+with an optional ``Having`` above it, and an OrderBy, so
+``compile_logical(render_sql(plan)) == plan`` for those
 shapes — the hypothesis round-trip property in tests/test_sql_properties.py.
 
 The renderer is a *driver* over the operator registry
@@ -61,15 +62,23 @@ class _Renderer:
 
 def render_sql(plan: PlanNode, catalog: Catalog = HEALTHLNK_CATALOG) -> str:
     """Render a compiler-shaped plan back to SQL text (see module docstring)."""
-    # Peel the terminal chain (outermost first): [OrderBy] [head] relational*
+    # Peel the terminal chain (outermost first):
+    # [OrderBy] [Having] [head] relational*
     order_by = None
     if lookup(type(plan)).sql_shape == "order":
         order_by, plan = plan, plan.child
+
+    having_node = None
+    having_def = lookup(type(plan))
+    if having_def.sql_shape == "having":
+        having_node, plan = plan, plan.child
 
     head_node = None
     head_def = lookup(type(plan))
     if head_def.sql_shape == "head":
         head_node, plan = plan, plan.child
+    if having_node is not None and head_node is None:
+        raise ValueError("HAVING requires a GROUP BY head beneath it")
 
     r = _Renderer(catalog)
     schema = r.walk(plan)
@@ -86,6 +95,10 @@ def render_sql(plan: PlanNode, catalog: Catalog = HEALTHLNK_CATALOG) -> str:
         parts.append("WHERE " + " AND ".join(r.filters))
     if group_clause is not None:
         parts.append(group_clause)
+    if having_node is not None:
+        parts.append(
+            having_def.render_having(r, having_node, head_node, schema)
+        )
     if order_by is not None:
         key = lookup(type(order_by)).render_order(r, order_by, head_node, schema)
         parts.append(f"ORDER BY {key} {'DESC' if order_by.descending else 'ASC'}")

@@ -173,3 +173,32 @@ def test_multi_table_or_becomes_post_join_filter(data):
         and (d["icd9"][i] == 414 or m["med"][j] == 1)
     )
     assert int(out.reveal_true_rows()["cnt"][0]) == expect
+
+
+@pytest.mark.parametrize("placement", ["none", "all_internal"])
+def test_having_matches_oracle_across_placements(data, placement):
+    """HAVING golden (DESIGN.md §10): the post-aggregation filter matches the
+    plaintext oracle with and without resizers — only validity bits flip, so
+    trimming after the Having keeps exactly the surviving groups."""
+    tables, plain = data
+    out, report = _execute(tables, "repeat_diagnoses", placement)
+    rows = out.reveal_true_rows()
+    got = dict(zip(rows["major_icd9"].tolist(), rows["cnt"].tolist()))
+    assert got == plaintext_oracle("repeat_diagnoses", plain)
+
+
+def test_having_rejects_non_grouping_column(data):
+    from repro.sql.lexer import SqlError
+
+    with pytest.raises(SqlError, match="not in the GROUP BY output"):
+        compile_logical(
+            "SELECT major_icd9, COUNT(*) AS cnt FROM diagnoses "
+            "GROUP BY major_icd9 HAVING time > 3"
+        )
+    with pytest.raises(SqlError, match="HAVING requires GROUP BY"):
+        compile_logical("SELECT COUNT(*) FROM diagnoses HAVING COUNT(*) > 1")
+    with pytest.raises(SqlError, match="AVG"):
+        compile_logical(
+            "SELECT med, AVG(dosage) AS mean FROM medications "
+            "GROUP BY med HAVING mean > 5"
+        )

@@ -22,6 +22,7 @@ from repro.plan import (
     GroupByAvg,
     GroupByCount,
     GroupBySum,
+    Having,
     Join,
     JoinSortMerge,
     Max,
@@ -63,6 +64,9 @@ SAMPLES = {
     GroupByCount: lambda: GroupByCount(_dx(), ("major_icd9", "diag")),
     GroupBySum: lambda: GroupBySum(Scan("medications"), "med", "dosage"),
     GroupByAvg: lambda: GroupByAvg(Scan("medications"), "med", "dosage"),
+    Having: lambda: Having(
+        GroupByCount(_dx(), "major_icd9"), [Predicate("cnt", "gt", 1)]
+    ),
     OrderBy: lambda: OrderBy(_dx(), "time", descending=True, limit=4),
     Distinct: lambda: Distinct(_dx(), "pid"),
     CountValid: lambda: CountValid(_dx()),
@@ -87,7 +91,9 @@ def test_operator_def_conformance(node_type):
     d = lookup(node_type)
     assert d.node_type is node_type
     assert d.protocol is not None or d.engine_apply is not None
-    assert d.sql_shape in ("leaf", "relational", "head", "order", "none")
+    assert d.sql_shape in (
+        "leaf", "relational", "head", "order", "having", "none"
+    )
     assert d.resizer in ("internal", "skip")
     if d.sql_shape in ("leaf", "relational"):
         assert d.render_rel is not None
@@ -95,6 +101,8 @@ def test_operator_def_conformance(node_type):
         assert d.render_head is not None
     if d.sql_shape == "order":
         assert d.render_order is not None
+    if d.sql_shape == "having":
+        assert d.render_having is not None
 
 
 @pytest.mark.parametrize("node_type", list(SAMPLES), ids=lambda t: t.__name__)

@@ -39,7 +39,9 @@ def make_service(tables, noise, placement="after_joins", **kw):
 
 def assert_result_parity(serial, batched):
     """Bit-exact result + per-node ledger parity (seconds excluded: wall
-    time is the one thing batching is supposed to change)."""
+    time is the one thing batching is supposed to change; the offline
+    hit/miss attribution is excluded too — pool temperature varies with
+    execution grouping while the material itself stays bit-identical)."""
     assert len(serial) == len(batched)
     for rs, rb in zip(serial, batched):
         assert set(rs.rows) == set(rb.rows)
@@ -55,8 +57,10 @@ def assert_result_parity(serial, batched):
         assert len(ds["nodes"]) == len(db["nodes"])
         for ns, nb in zip(ds["nodes"], db["nodes"]):
             for field in ("node", "n_in", "n_ins", "n_out", "bytes_per_party",
-                          "rounds", "extra"):
+                          "rounds"):
                 assert ns[field] == nb[field], (field, ns, nb)
+            strip = lambda e: {k: v for k, v in e.items() if k != "offline"}
+            assert strip(ns["extra"]) == strip(nb["extra"]), (ns, nb)
         assert ds["total_bytes"] == db["total_bytes"]
         assert ds["total_rounds"] == db["total_rounds"]
 

@@ -324,3 +324,72 @@ def test_accountant_separates_signatures(data):
     s.submit(QUERY_SQL["aspirin_count"])
     sigs = svc.accountant.status()
     assert len(sigs) == 2 and all(x["observed"] == 1 for x in sigs)
+
+
+def test_calibration_steers_join_algorithm(tmp_path):
+    """Satellite regression (DESIGN.md §12.4 + §13): observed intermediate
+    sizes reach select_join_algorithms through the service compile path. At
+    n=1024 the static estimates make the product join look quadratic-
+    expensive, so a cold service picks sort-merge; once calibration has seen
+    the filters' (already-disclosed) tiny revealed sizes, the refined child
+    estimates shrink the product cost quadratically and a fresh service on
+    the same durable state flips the physical choice back to the lazy
+    product join — same fingerprint, zero extra disclosure."""
+    from repro.core.noise import BetaNoise
+    from repro.plan.nodes import Join, JoinSortMerge
+    from repro.sql.catalog import Catalog
+
+    tables, _ = generate_healthlnk(n=1024, seed=3)
+    catalog = Catalog.from_tables(
+        tables,
+        multiplicity={"medications": {"pid": 2}, "diagnoses": {"pid": 2}},
+    )
+
+    def mk():
+        return AnalyticsService(
+            tables,
+            catalog=catalog,
+            noise=BetaNoise(2, 6),
+            placement="all_internal",
+            accountant=PrivacyAccountant(policy="escalate"),
+            key=jax.random.PRNGKey(9),
+            state_dir=str(tmp_path),
+        )
+
+    def join_types(plan):
+        out = []
+
+        def walk(n):
+            for c in n.children():
+                walk(c)
+            if isinstance(n, Join):
+                out.append(type(n))
+
+        walk(plan)
+        return out
+
+    svc = mk()
+    cold_plan, _, _ = svc.compile(DOSAGE)
+    assert join_types(cold_plan) == [JoinSortMerge]
+
+    # feed the store what the engine's reveal hook would record: the two
+    # pushed-down filters revealed tiny post-trim sizes (calibration_key
+    # strips Resize wrappers, so observing the logical subtree is identical)
+    from repro.sql import compile_logical
+
+    logical = compile_logical(DOSAGE, catalog)
+
+    def observe_filters(node):
+        for c in node.children():
+            observe_filters(c)
+        if type(node).__name__ == "Filter":
+            svc.calibration.observe_plan(node, n=1024, s=6)
+
+    observe_filters(logical)
+    svc.calibration.flush()
+
+    # fresh replica on the same durable state (empty plan cache): the
+    # calibration-refined compile now prefers the product join
+    svc2 = mk()
+    hot_plan, _, _ = svc2.compile(DOSAGE)
+    assert join_types(hot_plan) == [Join]

@@ -1,6 +1,7 @@
 """HealthLnK workloads end-to-end, SQL edition: the paper's four queries
-(Table 2) submitted as SQL strings through the multi-tenant
-:class:`AnalyticsService` — parse -> optimize -> Resizer placement -> execute,
+(Table 2) submitted as SQL strings through the unified
+:class:`~repro.runtime.ReflexClient` facade (over the multi-tenant
+AnalyticsService) — parse -> optimize -> Resizer placement -> execute,
 with plan-cache and CRT-budget telemetry, result validation against the
 plaintext oracle, and a runtime + communication comparison across
 fully-oblivious / Reflex / revealed placements (the Fig. 8 experiment,
@@ -18,7 +19,8 @@ import jax
 from repro.core.noise import NoTrim, RevealNoise, TruncatedLaplace
 from repro.data import generate_healthlnk, plaintext_oracle
 from repro.data.queries import QUERY_SQL
-from repro.service import AnalyticsService, PrivacyAccountant
+from repro.runtime import ReflexClient
+from repro.service import PrivacyAccountant
 
 
 def check(qname, result, oracle):
@@ -105,7 +107,7 @@ def main():
         f"{'cache':>7}  result"
     )
     for mode, cfg in modes.items():
-        svc = AnalyticsService(
+        svc = ReflexClient.in_process(
             tables,
             accountant=PrivacyAccountant(policy="escalate"),
             key=jax.random.PRNGKey(5),
@@ -129,11 +131,11 @@ def main():
         print(
             f"  [{mode}] plan-cache hit rate {stats['hit_rate']:.0%} "
             f"({stats['hits']}/{stats['hits'] + stats['misses']}), "
-            f"escalations {svc.accountant.escalation_count}"
+            f"escalations {svc.service.accountant.escalation_count}"
         )
     # a fresh service under a tight budget: watch the escalation ladder fire
     print("\nescalation-ladder demo (fresh tight-budget service):")
-    svc = AnalyticsService(
+    svc = ReflexClient.in_process(
         tables,
         noise=TruncatedLaplace(eps=2.0, sensitivity=1),
         addition="sequential",
@@ -150,7 +152,7 @@ def main():
             else "ok"
         )
         print(f"  submit {i + 1}: {note}")
-    for st in svc.accountant.status():
+    for st in svc.service.accountant.status():
         print(
             f"  {st['strategy'].split('|')[0]:<60} observed {st['observed']}"
             f"/{st['budget']}"
@@ -161,7 +163,7 @@ def main():
     print("\nbatched-admission demo (8 tenants, one engine pass):")
     sql = "SELECT major_icd9, COUNT(*) AS c FROM diagnoses GROUP BY major_icd9"
     tenants = [f"clinic_{i}" for i in range(8)]
-    mk = lambda seed: AnalyticsService(
+    mk = lambda seed: ReflexClient.in_process(
         tables, noise=NoTrim(), placement="none", jit_ops=True,
         key=jax.random.PRNGKey(seed), batch_wait_s=60.0,
     )
@@ -184,7 +186,7 @@ def main():
         all((rs.rows[c] == rb.rows[c]).all() for c in rs.rows)
         for rs, rb in zip(serial, results)
     )
-    bs = svc_batch.engine.last_batch_stats
+    bs = svc_batch.service.engine.last_batch_stats
     print(
         f"  serial {len(tenants)/t_serial:7.1f} q/s   "
         f"batched {len(results)/t_batch:7.1f} q/s   "
@@ -195,7 +197,7 @@ def main():
         f"ops, {bs['physical_rounds']} rounds total vs "
         f"{sum(r.report.total_rounds for r in results)} if run serially"
     )
-    print(f"  scheduler: {svc_batch.scheduler.stats}")
+    print(f"  scheduler: {svc_batch.service.scheduler.stats}")
 
 
 if __name__ == "__main__":

@@ -3,6 +3,9 @@
 Three data owners upload secret-shared rows; the engine runs an oblivious
 Filter -> Join, inserts a Resizer after the join (Beta(2,6) noise, parallel
 addition), and reveals only the final result + the noisy intermediate size.
+The finale re-asks the same question through :class:`repro.runtime.
+ReflexClient` — first in-process, then against a real 3-party mesh — and
+shows both answers (and their communication ledgers) are identical.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -16,6 +19,7 @@ from repro.engine import Engine
 from repro.ops import Predicate, SecretTable
 from repro.plan import insert_resizers
 from repro.plan.nodes import Distinct, Filter, Join, Scan
+from repro.runtime import ReflexClient
 
 
 def main():
@@ -68,6 +72,33 @@ def main():
                 f"CRT: attacker needs ~{crt_rounds(noise, 'parallel', e['n'], e['t']):.0f} "
                 "equivalent repetitions to pin T within +-1"
             )
+
+    # --- the same study through the unified client, both topologies ---------
+    # ReflexClient speaks SQL and hides the execution topology: in_process
+    # runs the single-process oracle; networked ships shares to three party
+    # processes (here: an in-process loopback mesh) and every comm-ledger
+    # sync point becomes a real, verified wire exchange.
+    sql = (
+        "SELECT DISTINCT d.pid FROM diagnoses d, medications m "
+        "WHERE d.pid = m.pid2 AND d.icd9 = 414 AND m.med = 1"
+    )
+    local = ReflexClient.in_process(tables)
+    res_local = local.submit("quickstart", sql)
+    with ReflexClient.networked(tables, key_seed=0) as networked:
+        res_net = networked.submit("quickstart", sql)
+        audit = networked.service.engine.last_wire_audit
+    same = all(
+        np.array_equal(res_local.rows[c], res_net.rows[c])
+        for c in res_local.rows
+    )
+    print(
+        f"\nReflexClient: in-process and 3-party answers identical: {same}"
+    )
+    for a in audit:
+        print(
+            f"  party {a['party']}: {a['exchanges']} exchanges, "
+            f"{a['wire_bytes']} wire bytes == {a['ledger_bytes']} ledger bytes"
+        )
 
 
 if __name__ == "__main__":

@@ -1,0 +1,148 @@
+"""RuntimeConfig: one frozen dataclass for every engine execution knob.
+
+The flags that select execution strategy — Pallas kernels on/off, circuit
+fusion, the join valid-computation tile, the physical join algorithm — used
+to be scattered across module-level ``os.environ`` reads in
+``repro.kernels``, ``repro.ops.join``, and ``repro.plan.policies``, plus
+assorted constructor kwargs. This module is now the **only** place the
+``REPRO_*`` environment variables are parsed; everything else consumes a
+:class:`RuntimeConfig`.
+
+Resolution order, from strongest to weakest:
+
+1. block-scoped thread-local overrides (``repro.kernels.override_kernels`` /
+   ``override_fusion`` — kept for tests and benchmarks that flip one switch
+   around one call);
+2. an explicit ``RuntimeConfig`` passed to :class:`~repro.engine.Engine`,
+   :func:`~repro.sql.compile.compile_query`, or
+   :class:`~repro.service.AnalyticsService`, applied via :func:`use_config`
+   for the duration of an execution (and shipped to party processes by the
+   networked runtime, so the whole mesh executes under one config);
+3. the environment fallback: :func:`current_config` parses the ``REPRO_*``
+   variables (cached; re-parsed only when the raw values change, so
+   ``monkeypatch.setenv`` in tests keeps working).
+
+Env fallbacks (all optional):
+
+* ``REPRO_USE_PALLAS=1``     -> ``use_pallas=True``
+* ``REPRO_FUSE_CIRCUITS=0``  -> ``fuse_circuits=False``
+* ``REPRO_JOIN_TILE=<int>``  -> ``join_tile`` (product-grid rows per tile)
+* ``REPRO_JOIN_ALGO=<mode>`` -> ``join_algo`` (``auto|product|sortmerge``)
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+import threading
+from typing import Iterator, Mapping, Optional, Tuple
+
+__all__ = ["RuntimeConfig", "current_config", "use_config", "DEFAULT_JOIN_TILE"]
+
+DEFAULT_JOIN_TILE = 1 << 16
+
+_ENV_VARS = (
+    "REPRO_USE_PALLAS",
+    "REPRO_FUSE_CIRCUITS",
+    "REPRO_JOIN_TILE",
+    "REPRO_JOIN_ALGO",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    """Execution-strategy knobs for one engine (or one whole party mesh).
+
+    Frozen: a config is an identity (it participates in jit-cache keys via
+    the flags it toggles), so it must never mutate under a running engine.
+    Use :func:`dataclasses.replace` to derive variants.
+    """
+
+    use_pallas: bool = False  # route gates/circuits through Pallas kernels
+    fuse_circuits: bool = True  # single-launch fused circuit kernels
+    join_tile: int = DEFAULT_JOIN_TILE  # product-grid rows per valid tile
+    join_algo: str = "auto"  # physical join selection: auto|product|sortmerge
+
+    def __post_init__(self):
+        if self.join_algo not in ("auto", "product", "sortmerge"):
+            raise ValueError(
+                f"join algo mode {self.join_algo!r} "
+                "(expected auto|product|sortmerge)"
+            )
+        if self.join_tile < 1:
+            raise ValueError(
+                f"REPRO_JOIN_TILE must be >= 1, got {self.join_tile}"
+            )
+
+    @classmethod
+    def from_env(cls, env: Optional[Mapping[str, str]] = None) -> "RuntimeConfig":
+        """Parse the ``REPRO_*`` fallback variables — the single env parse
+        site for the whole codebase."""
+        env = os.environ if env is None else env
+        raw_tile = env.get("REPRO_JOIN_TILE", "")
+        if raw_tile:
+            try:
+                tile = int(raw_tile)
+            except ValueError as e:
+                raise ValueError(
+                    f"REPRO_JOIN_TILE must be an integer, got {raw_tile!r}"
+                ) from e
+        else:
+            tile = DEFAULT_JOIN_TILE
+        return cls(
+            use_pallas=env.get("REPRO_USE_PALLAS", "0") == "1",
+            fuse_circuits=env.get("REPRO_FUSE_CIRCUITS", "1") == "1",
+            join_tile=tile,
+            join_algo=env.get("REPRO_JOIN_ALGO") or "auto",
+        )
+
+    # -- wire form (the coordinator ships its config to every party) ----------
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "RuntimeConfig":
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+
+_cache: Tuple[Optional[Tuple], Optional[RuntimeConfig]] = (None, None)
+_STATE = threading.local()
+
+
+def current_config() -> RuntimeConfig:
+    """The config in effect on this thread: an explicit :func:`use_config`
+    override when one is active (the Engine installs its own config for the
+    duration of an execution; a party server installs the mesh-wide config
+    the coordinator shipped), else the env fallback. The fallback parse is
+    cached and redone only when one of the ``REPRO_*`` raw values changes
+    (cheap enough for per-gate callers, and test monkeypatching is picked up
+    immediately)."""
+    global _cache
+    stack = getattr(_STATE, "stack", None)
+    if stack:
+        return stack[-1]
+    raw = tuple(os.environ.get(v) for v in _ENV_VARS)
+    cached_raw, cached_cfg = _cache
+    if raw != cached_raw or cached_cfg is None:
+        cached_cfg = RuntimeConfig.from_env()
+        _cache = (raw, cached_cfg)
+    return cached_cfg
+
+
+@contextlib.contextmanager
+def use_config(cfg: Optional[RuntimeConfig]) -> Iterator[None]:
+    """Thread-locally pin :func:`current_config` to ``cfg`` for the duration
+    of the block. ``None`` is a no-op (callers without an explicit config
+    stay on the env fallback without branching)."""
+    if cfg is None:
+        yield
+        return
+    stack = getattr(_STATE, "stack", None)
+    if stack is None:
+        stack = _STATE.stack = []
+    stack.append(cfg)
+    try:
+        yield
+    finally:
+        stack.pop()

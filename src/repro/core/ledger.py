@@ -19,6 +19,19 @@ When no ledger is active, logging is a no-op, so jitted hot paths pay nothing.
 ``fused(rounds=r)`` coalesces the entries logged inside it into a single entry
 with ``r`` rounds (used by circuits whose constituent ANDs run in parallel
 within a round — e.g. the 5-level equality tree logs 5 rounds, not 5×#words).
+
+Exchange boundaries (networked mode)
+------------------------------------
+In the multi-party runtime (DESIGN.md §16) every ledger entry that lands in
+``CommLedger.entries`` IS a real message exchange: a party process installs an
+*exchange driver* (:func:`exchange_scope`) and the ledger calls it exactly
+once per top-level entry — per :meth:`CommLedger.log` call outside ``fused()``
+and once per merged ``fused()`` block — with that entry's op, rounds, byte
+count, and (when the protocol layer provided one via ``payload=``) the share
+array being exchanged. Wire bytes == ledger bytes per op by construction,
+because the driver sends exactly ``bytes_per_party`` bytes per entry. When no
+driver is installed (single-process mode, the default and the test oracle),
+logging stays a pure tally and jitted hot paths pay nothing.
 """
 from __future__ import annotations
 
@@ -35,6 +48,8 @@ __all__ = [
     "fused_scope",
     "measure_comm",
     "batched_tally",
+    "exchange_scope",
+    "active_exchange",
 ]
 
 _STATE = threading.local()
@@ -44,6 +59,28 @@ def _stack() -> List["CommLedger"]:
     if not hasattr(_STATE, "stack"):
         _STATE.stack = []
     return _STATE.stack
+
+
+def active_exchange():
+    """The exchange driver installed on this thread, or None (single-process
+    mode). The driver is any object with an
+    ``exchange(op, rounds, nbytes, payload)`` method."""
+    return getattr(_STATE, "exchange", None)
+
+
+@contextlib.contextmanager
+def exchange_scope(driver):
+    """Install ``driver`` as this thread's exchange boundary for the duration
+    of the block. Every top-level ledger entry logged inside becomes one
+    ``driver.exchange(...)`` call. Must wrap eager execution only — jit
+    re-executions skip the Python body and would skip exchanges with it
+    (the networked runtime pins ``jit_ops=False`` for exactly this reason)."""
+    prev = getattr(_STATE, "exchange", None)
+    _STATE.exchange = driver
+    try:
+        yield driver
+    finally:
+        _STATE.exchange = prev
 
 
 @dataclasses.dataclass
@@ -89,11 +126,18 @@ class CommLedger:
                 return
         target.append(entry)
 
-    def log(self, op: str, rounds: int, bytes_per_party: int) -> None:
+    def log(
+        self, op: str, rounds: int, bytes_per_party: int, payload=None
+    ) -> None:
         entry = CommEntry(op, rounds, bytes_per_party)
         if self._fuse_depth > 0:
+            # inside a fused round block the constituent messages ride one
+            # exchange, fired (payload-less) when the merged entry lands
             self._append(self._fuse_buffer, entry)
         else:
+            drv = active_exchange()
+            if drv is not None:
+                drv.exchange(op, rounds, bytes_per_party, payload)
             self._append(self.entries, entry)
 
     @contextlib.contextmanager
@@ -112,6 +156,9 @@ class CommLedger:
             if self._fuse_depth > 0:
                 self._append(self._fuse_buffer, entry)
             else:
+                drv = active_exchange()
+                if drv is not None:
+                    drv.exchange(op, rounds, total_bytes, None)
                 self._append(self.entries, entry)
 
     # -- reporting -----------------------------------------------------------
@@ -139,10 +186,14 @@ def active_ledger() -> Optional[CommLedger]:
     return stack[-1] if stack else None
 
 
-def log_comm(op: str, rounds: int, bytes_per_party: int) -> None:
+def log_comm(op: str, rounds: int, bytes_per_party: int, payload=None) -> None:
+    """Log one sync point. ``payload`` (optional) is the canonical 3-share
+    array being exchanged at this boundary — ignored by the tally, consumed
+    by a networked exchange driver to ship (and cross-verify) the real share
+    slice instead of deterministic filler."""
     led = active_ledger()
     if led is not None:
-        led.log(op, rounds, bytes_per_party)
+        led.log(op, rounds, bytes_per_party, payload)
 
 
 def fused_scope(op: str, rounds: int):

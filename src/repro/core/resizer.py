@@ -237,7 +237,7 @@ class Resizer:
         k_open = np.asarray(
             (k_col.shares[0] ^ k_col.shares[1] ^ k_col.shares[2]) & 1
         )
-        log_comm("reveal_k", 1, n * k_col.ring.bytes)
+        log_comm("reveal_k", 1, n * k_col.ring.bytes, payload=k_col.shares)
         s = int(k_open.sum())
         keep = np.nonzero(k_open)[0]
 

@@ -274,12 +274,12 @@ def share_b(x, key: jax.Array, ring: Ring | None = None) -> BShare:
 
 def reveal_a(x: AShare) -> jnp.ndarray:
     """Open an arithmetic sharing (1 round; each party sends one share)."""
-    log_comm("reveal", 1, x.size * x.ring.bytes)
+    log_comm("reveal", 1, x.size * x.ring.bytes, payload=x.shares)
     return x.shares[0] + x.shares[1] + x.shares[2]
 
 
 def reveal_b(x: BShare) -> jnp.ndarray:
-    log_comm("reveal", 1, x.size * x.ring.bytes)
+    log_comm("reveal", 1, x.size * x.ring.bytes, payload=x.shares)
     return x.shares[0] ^ x.shares[1] ^ x.shares[2]
 
 
@@ -337,7 +337,7 @@ def mul(x: AShare, y: AShare, prf: PRFSetup) -> AShare:
         z = _kernel_gate(xs, ys, alpha, boolean=False)
     else:
         z = _gate_words(x.shares, y.shares, prf.pair_keys, False, ring.dtype)
-    log_comm("mul", 1, x.size * ring.bytes)
+    log_comm("mul", 1, x.size * ring.bytes, payload=z)
     return AShare(z)
 
 
@@ -350,7 +350,7 @@ def and_(x: BShare, y: BShare, prf: PRFSetup) -> BShare:
         z = _kernel_gate(xs, ys, alpha, boolean=True)
     else:
         z = _gate_words(x.shares, y.shares, prf.pair_keys, True, ring.dtype)
-    log_comm("and", 1, x.size * ring.bytes)
+    log_comm("and", 1, x.size * ring.bytes, payload=z)
     return BShare(z)
 
 

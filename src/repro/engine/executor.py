@@ -35,6 +35,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..config import RuntimeConfig, use_config
 from ..core.ledger import CommLedger, batched_tally, log_comm
 from ..core import material
 from ..core.prf import PRFSetup, setup_prf
@@ -108,6 +109,26 @@ class ExecutionReport:
 
     def to_json(self, indent: Optional[int] = None) -> str:
         return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "ExecutionReport":
+        """Rebuild a report from :meth:`to_dict` output — the wire form the
+        networked runtime's party servers return to the coordinator."""
+        return cls(
+            nodes=[
+                NodeStats(
+                    node=n["node"],
+                    n_in=int(n["n_in"]),
+                    n_ins=[int(x) for x in n.get("n_ins", [])],
+                    n_out=int(n["n_out"]),
+                    seconds=float(n["seconds"]),
+                    bytes_per_party=int(n["bytes_per_party"]),
+                    rounds=int(n["rounds"]),
+                    extra=dict(n.get("extra", {})),
+                )
+                for n in d.get("nodes", [])
+            ]
+        )
 
     def summary(self) -> str:
         def ins(s: NodeStats) -> str:
@@ -290,6 +311,8 @@ class Engine:
         # queries (serving); one-shot plans are faster eager (XLA-CPU compile
         # of a 4k-row sort network costs minutes) — see §Perf
         validate: bool = True,  # schema-check plans before any MPC work
+        config: Optional[RuntimeConfig] = None,  # execution-strategy knobs;
+        # None = the env fallback (repro.config.current_config)
     ):
         self.tables = tables
         key = key if key is not None else jax.random.PRNGKey(0)
@@ -298,6 +321,7 @@ class Engine:
         self.bucket_fn = bucket_fn
         self.jit_ops = jit_ops
         self.validate = validate
+        self.config = config
         self._resize_ctr = 0
         self._last_resize_info: Optional[Dict] = None
         self.last_batch_stats: Dict = {}
@@ -316,7 +340,7 @@ class Engine:
             infer_schema(plan, Catalog.from_tables(self.tables))
         report = ExecutionReport()
         self._last_resize_info = None  # never carry info across runs
-        with obs_trace.span("execute"):
+        with use_config(self.config), obs_trace.span("execute"):
             out = self._run(plan, report)
         return out, report
 
@@ -500,7 +524,9 @@ class Engine:
             "physical_rounds": 0,
         }
         try:
-            with obs_trace.span("execute", slots=k, batched=True):
+            with use_config(self.config), obs_trace.span(
+                "execute", slots=k, batched=True
+            ):
                 out = self._run_batch(plans[0], ctx)
         finally:
             # The batch owns the counter range [base+1, base+k*R]; per-slot

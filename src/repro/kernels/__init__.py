@@ -26,11 +26,14 @@ BlockSpecs are sized for TPU v5e VMEM (~16 MiB/core).
 
 Switches
 --------
-``REPRO_USE_PALLAS=1`` enables the kernel paths; ``REPRO_FUSE_CIRCUITS=0``
-keeps kernels on but forces the gate-by-gate circuit path (used by parity
-tests and the fused-vs-unfused benchmark). Both can be overridden per-thread
-with :func:`override_kernels` / :func:`override_fusion` so tests and benches
-work without mutating the environment.
+The defaults come from :func:`repro.config.current_config` (``use_pallas`` /
+``fuse_circuits``, with ``REPRO_USE_PALLAS`` / ``REPRO_FUSE_CIRCUITS`` as the
+env fallback parsed in :mod:`repro.config`). ``REPRO_FUSE_CIRCUITS=0`` keeps
+kernels on but forces the gate-by-gate circuit path (used by parity tests and
+the fused-vs-unfused benchmark). Both can be overridden per-thread with
+:func:`override_kernels` / :func:`override_fusion` so tests and benches work
+without mutating the environment — the Engine uses exactly these overrides to
+apply an explicit ``RuntimeConfig`` for the duration of an execution.
 
 Launch accounting
 -----------------
@@ -44,20 +47,18 @@ reduction.
 from __future__ import annotations
 
 import contextlib
-import os
 import threading
 from collections import Counter
 from typing import Dict, Iterator, Optional
 
-_USE_KERNELS = os.environ.get("REPRO_USE_PALLAS", "0") == "1"
-_FUSE_DEFAULT = os.environ.get("REPRO_FUSE_CIRCUITS", "1") == "1"
+from repro.config import current_config
 
 _STATE = threading.local()
 
 
 def kernels_enabled() -> bool:
     ov = getattr(_STATE, "kernels", None)
-    return _USE_KERNELS if ov is None else ov
+    return current_config().use_pallas if ov is None else ov
 
 
 def fusion_enabled() -> bool:
@@ -66,7 +67,7 @@ def fusion_enabled() -> bool:
     if not kernels_enabled():
         return False
     ov = getattr(_STATE, "fusion", None)
-    return _FUSE_DEFAULT if ov is None else ov
+    return current_config().fuse_circuits if ov is None else ov
 
 
 @contextlib.contextmanager

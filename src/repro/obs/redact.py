@@ -92,6 +92,10 @@ PUBLIC_KEYS = frozenset({
     "appends", "fsync",
     # misc identity
     "name", "kind", "status", "ok", "count", "version",
+    # multi-party runtime (DESIGN.md §16): the party id is execution
+    # topology, and wire-byte/exchange counts equal the ledger's
+    # protocol-determined costs by construction (audited in CI)
+    "party", "wire_bytes", "exchanges", "transport", "peer",
     # offline randomness pool (DESIGN.md §15): hit/miss counts are cache
     # bookkeeping over *template-derived* material — the pool key is the
     # template fingerprint plus pow2 shape buckets, both already public plan

@@ -73,9 +73,15 @@ class Span:
 
 
 class Tracer:
-    """Collects a tree of redacted spans for one traced region."""
+    """Collects a tree of redacted spans for one traced region.
 
-    def __init__(self) -> None:
+    ``party`` (optional) stamps every span with the RSS party id whose
+    process produced it — the multi-party runtime gives each party server
+    its own tracer, so exported span streams from a 3-process mesh can be
+    merged and still attribute latency per party."""
+
+    def __init__(self, party: Optional[int] = None) -> None:
+        self.party = party
         self.spans: List[Span] = []
         self.redactions: List[str] = []  # dropped attribute keys (audit trail)
         self._open: List[Span] = []
@@ -93,6 +99,8 @@ class Tracer:
     # -- span lifecycle -------------------------------------------------------
     def _new_span(self, name: str, attrs: Dict) -> Span:
         self._next_id += 1
+        if self.party is not None:
+            attrs = {**attrs, "party": self.party}
         sp = Span(
             name=name,
             span_id=self._next_id,

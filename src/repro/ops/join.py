@@ -29,11 +29,11 @@ baseline).
 """
 from __future__ import annotations
 
-import os
 from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
+from ..config import current_config
 from ..core.circuits import and_bit, eq, le
 from ..core.ledger import fused_scope
 from ..core.prf import PRFSetup
@@ -41,23 +41,6 @@ from ..core.sharing import BShare
 from .table import LazyGather, SecretTable
 
 __all__ = ["oblivious_join"]
-
-# Product-grid rows per valid-computation tile; bounds temporary memory at
-# O(tile) share words while the public index maps stay O(N1*N2).
-def _tile_from_env() -> int:
-    raw = os.environ.get("REPRO_JOIN_TILE", "")
-    if not raw:
-        return 1 << 16
-    try:
-        tile = int(raw)
-    except ValueError as e:
-        raise ValueError(f"REPRO_JOIN_TILE must be an integer, got {raw!r}") from e
-    if tile < 1:
-        raise ValueError(f"REPRO_JOIN_TILE must be >= 1, got {tile}")
-    return tile
-
-
-DEFAULT_TILE = _tile_from_env()
 
 
 def _disambiguate(cols: dict, name: str) -> str:
@@ -84,19 +67,23 @@ def oblivious_join(
     prf: PRFSetup,
     theta: Optional[Tuple[str, str, str]] = None,
     lazy: bool = True,
-    tile: int = DEFAULT_TILE,
+    tile: Optional[int] = None,
 ) -> SecretTable:
     """Equi-join ``left.on[0] == right.on[1]``; output size = n1 * n2.
 
     ``theta``: optional extra condition (left_col, op, right_col) with
     op in {"le", "eq"} evaluated obliviously on the product.
+
+    ``tile`` (product-grid rows per valid-computation tile) bounds temporary
+    memory at O(tile) share words while the public index maps stay O(N1*N2);
+    default is ``RuntimeConfig.join_tile``.
     """
     if not lazy:
         return _eager_join(left, right, on, prf, theta)
 
     n1, n2 = left.n, right.n
     total = n1 * n2
-    tile = max(1, tile)
+    tile = max(1, tile if tile is not None else current_config().join_tile)
     lk, rk = on
 
     # Public product layout: row r = (i * n2 + j).

@@ -13,9 +13,9 @@ Resize itself).
 """
 from __future__ import annotations
 
-import os
 from typing import Callable, Optional
 
+from ..config import current_config
 from ..core.resizer import ResizerConfig
 from .nodes import Filter, Join, JoinSortMerge, PlanNode, Project, Resize, Scan
 from .registry import lookup
@@ -97,7 +97,8 @@ def select_join_algorithms(
     at least one input's join key) and — in ``auto`` mode — cheaper per the
     cost model.
 
-    mode (default: ``$REPRO_JOIN_ALGO`` or ``auto``):
+    mode (default: ``RuntimeConfig.join_algo`` — ``auto`` unless the
+    ``REPRO_JOIN_ALGO`` env fallback says otherwise):
       * ``product``   — never rewrite (the lazy Cartesian join everywhere)
       * ``sortmerge`` — rewrite every applicable join (force the new path)
       * ``auto``      — rewrite when applicable AND the analytic byte cost of
@@ -108,7 +109,7 @@ def select_join_algorithms(
     are identical across the flip (DESIGN.md §13).
     """
     if mode is None:
-        mode = os.environ.get("REPRO_JOIN_ALGO") or "auto"
+        mode = current_config().join_algo
     if mode not in ("auto", "product", "sortmerge"):
         raise ValueError(
             f"join algo mode {mode!r} (expected auto|product|sortmerge)"

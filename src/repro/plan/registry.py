@@ -57,6 +57,7 @@ from typing import Callable, Dict, List, Optional, Type
 import jax
 
 from ..core.resizer import Resizer
+from ..errors import PlanSchemaError
 from ..ops import (
     avg_column,
     count_distinct,
@@ -113,8 +114,10 @@ __all__ = [
 # Schema propagation
 # -----------------------------------------------------------------------------
 
-class SchemaError(ValueError):
-    """A plan references a column its input does not produce."""
+# The schema error now lives in the typed taxonomy (repro.errors); the old
+# name stays importable here. PlanSchemaError subclasses ValueError, so
+# pre-taxonomy except clauses keep catching it.
+SchemaError = PlanSchemaError
 
 
 @dataclasses.dataclass
@@ -138,9 +141,12 @@ class PlanSchema:
 
     def require(self, col: str, node: PlanNode) -> None:
         if col not in self.cols:
-            raise SchemaError(
+            raise PlanSchemaError(
                 f"{node.describe()} references column {col!r}, but its input "
-                f"produces only {self.names}"
+                f"produces only {self.names}",
+                node=node.describe(),
+                column=col,
+                available=self.names,
             )
 
     def require_pred(self, pred, node: PlanNode) -> None:
@@ -301,7 +307,12 @@ def sql_conjuncts(pred, qual) -> List[str]:
 
 def _scan_schema(node: Scan, children, catalog) -> PlanSchema:
     if node.table not in catalog.tables:
-        raise SchemaError(f"Scan references unknown table {node.table!r}")
+        raise PlanSchemaError(
+            f"Scan references unknown table {node.table!r}",
+            node=node.describe(),
+            table=node.table,
+            available=sorted(catalog.tables),
+        )
     return PlanSchema.of(catalog.columns(node.table))
 
 

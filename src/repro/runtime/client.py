@@ -1,0 +1,162 @@
+"""ReflexClient: one client API over both execution topologies.
+
+The facade exposes the service verbs — ``submit`` / ``enqueue`` / ``drain``
+/ ``explain`` / ``explain_analyze`` / ``status`` — identically whether
+queries execute
+
+* **in-process** (:meth:`ReflexClient.in_process`): the classic
+  single-process oracle, an :class:`~repro.service.AnalyticsService` over a
+  local :class:`~repro.engine.Engine`; or
+* **networked** (:meth:`ReflexClient.networked`): the same service stack
+  (compiler, plan cache, accountant, scheduler, calibration) with a
+  :class:`~repro.runtime.coordinator.RemoteEngine` under it, dispatching
+  every engine pass to three party processes over a real transport.
+
+Callers cannot tell the difference by return types: both modes yield the
+same ``QueryResult`` / report / status objects, and the networked mode is
+bit-exact with the oracle by construction (verified per exchange and
+re-audited per query). The only behavioural deltas in networked mode are
+pinned constructor arguments: ``jit_ops=False`` (jit replay skips protocol
+bodies, hence exchange boundaries) and ``offline="off"`` (the randomness
+pool is engine-local; party processes derive material on demand so their
+ledgers stay in lockstep).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+
+from ..config import RuntimeConfig, current_config
+from ..ops.table import SecretTable
+from ..service.service import AnalyticsService, QueryResult, TenantSession
+from .coordinator import Coordinator, RemoteEngine, launch_loopback_mesh
+
+__all__ = ["ReflexClient"]
+
+
+class ReflexClient:
+    """Unified front door for Reflex analytics, any topology.
+
+    Construct via :meth:`in_process` or :meth:`networked`; the instance then
+    behaves the same way in both modes. The underlying service remains
+    reachable as ``client.service`` for advanced introspection
+    (``service.metrics``, ``service.accountant`` …)."""
+
+    def __init__(
+        self,
+        service: AnalyticsService,
+        *,
+        coordinator: Optional[Coordinator] = None,
+        _own_coordinator: bool = False,
+    ):
+        self.service = service
+        self.coordinator = coordinator
+        self._own_coordinator = _own_coordinator
+
+    # -- constructors ----------------------------------------------------------
+    @classmethod
+    def in_process(cls, tables: Dict[str, SecretTable], **service_kwargs):
+        """Single-process execution (the oracle the networked mode is
+        checked against). ``service_kwargs`` pass through to
+        :class:`AnalyticsService`."""
+        return cls(AnalyticsService(tables, **service_kwargs))
+
+    @classmethod
+    def networked(
+        cls,
+        tables: Dict[str, SecretTable],
+        *,
+        coordinator: Optional[Coordinator] = None,
+        key_seed: int = 0,
+        config: Optional[RuntimeConfig] = None,
+        **service_kwargs,
+    ):
+        """Three-party execution behind the same verbs.
+
+        With no ``coordinator``, an in-process loopback mesh is launched
+        (three party servers on threads — the single-host topology); pass a
+        :func:`~repro.runtime.coordinator.connect_tcp` coordinator to drive
+        external party processes instead. Either way the client ships the
+        share triples, the engine key seed, and the resolved
+        :class:`RuntimeConfig` to all parties so the three simulations are
+        identical."""
+        for banned, why in (
+            ("jit_ops", "networked execution requires eager protocol bodies"),
+            ("offline", "the randomness pool is engine-local"),
+            ("engine_factory", "the networked client installs RemoteEngine"),
+        ):
+            if service_kwargs.pop(banned, None):
+                raise ValueError(f"networked(): {banned} is pinned ({why})")
+        own = coordinator is None
+        if own:
+            coordinator, _servers, _threads = launch_loopback_mesh()
+        cfg = config if config is not None else current_config()
+        coordinator.load_tables(tables, key_seed=key_seed, config=cfg)
+
+        def factory(tbls, **kw):
+            kw["jit_ops"] = False
+            return RemoteEngine(tbls, coordinator, **kw)
+
+        svc = AnalyticsService(
+            tables,
+            key=jax.random.PRNGKey(int(key_seed)),
+            jit_ops=False,
+            offline="off",
+            config=cfg,
+            engine_factory=factory,
+            **service_kwargs,
+        )
+        return cls(svc, coordinator=coordinator, _own_coordinator=own)
+
+    # -- mode ------------------------------------------------------------------
+    @property
+    def mode(self) -> str:
+        return "in_process" if self.coordinator is None else "networked"
+
+    # -- the client verbs (identical across modes) -----------------------------
+    def submit(self, tenant: str, sql: str) -> QueryResult:
+        return self.service.submit(tenant, sql)
+
+    def enqueue(self, tenant: str, sql: str):
+        return self.service.enqueue(tenant, sql)
+
+    def drain(self, force: bool = True) -> List[QueryResult]:
+        return self.service.drain(force=force)
+
+    def explain(self, sql: str) -> str:
+        return self.service.explain(sql)
+
+    def explain_analyze(self, tenant: str, sql: str):
+        return self.service.explain_analyze(tenant, sql)
+
+    def status(self) -> Dict:
+        st = self.service.status()
+        st["runtime"] = {"mode": self.mode}
+        if self.coordinator is not None:
+            eng = self.service.engine
+            st["runtime"]["wire_audit"] = getattr(eng, "last_wire_audit", [])
+        return st
+
+    def session(self, tenant: str) -> TenantSession:
+        return self.service.session(tenant)
+
+    def cache_stats(self) -> Dict[str, float]:
+        return self.service.cache_stats()
+
+    # -- lifecycle -------------------------------------------------------------
+    def close(self) -> None:
+        """Stop background service work; in networked mode also shut the
+        party mesh down (owned loopback meshes are fully torn down; an
+        externally provided coordinator is shut down but its processes'
+        lifecycle belongs to whoever launched them)."""
+        self.service.close()
+        if self.coordinator is not None:
+            self.coordinator.shutdown()
+            self.coordinator.close()
+
+    def __enter__(self) -> "ReflexClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

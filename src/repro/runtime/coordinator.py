@@ -1,0 +1,313 @@
+"""Coordinator: drives three party servers and reassembles revealed results.
+
+The coordinator compiles and admits queries exactly like the single-process
+service (it IS the service — :class:`RemoteEngine` plugs in below
+``AnalyticsService`` via its ``engine_factory`` hook), but execution is
+remote: the pickled plan is broadcast to the three party processes, each
+runs it over the real data mesh, and the coordinator
+
+1. collects each party's **own share slice** of the output and restacks the
+   canonical triple ``(p0's s0, p1's s1, p2's s2)`` — bit-exact iff the
+   three processes computed identical triples (every DATA exchange already
+   cross-checked slices en route, so a divergence fails at the exact op,
+   not here);
+2. asserts the three execution reports agree field-for-field on the
+   protocol-determined columns (ledger bytes, rounds, oblivious sizes);
+3. audits **wire bytes == ledger bytes**: each party's transport counted
+   the DATA body bytes it actually sent; that figure must equal the
+   exchange log's sum and the report's ledger total.
+
+Any violation raises :class:`~repro.errors.TransportError`, which rides the
+service's existing failure path (``charge_failed``: the budget is charged
+conservatively for a query that died mid-execution).
+
+Topologies: :func:`launch_loopback_mesh` runs the three party servers on
+threads over an in-process :class:`LoopbackMesh` (the fast path for tests
+and single-host use); :func:`connect_tcp` dials party processes listening
+on TCP (see ``scripts/run_parties.py``).
+"""
+from __future__ import annotations
+
+import pickle
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..config import RuntimeConfig
+from ..engine.executor import Engine, ExecutionReport
+from ..errors import TransportError
+from ..ops.table import SecretTable
+from ..plan.nodes import PlanNode
+from ..plan.registry import lookup
+from .party import PartyServer, encode_table
+from .transport import (
+    COORD,
+    CTRL,
+    LoopbackMesh,
+    LoopbackTransport,
+    TcpTransport,
+    Transport,
+)
+
+__all__ = [
+    "Coordinator",
+    "RemoteEngine",
+    "launch_loopback_mesh",
+    "connect_tcp",
+]
+
+PARTIES = (0, 1, 2)
+
+
+class Coordinator:
+    """Control-plane client for a 3-party mesh (any transport)."""
+
+    def __init__(self, ctrl: Transport, *, request_timeout: float = 120.0):
+        self.ctrl = ctrl
+        self.request_timeout = request_timeout
+        self._lock = threading.Lock()
+
+    # -- control RPC ----------------------------------------------------------
+    def _request_all(self, msg: Dict) -> List[Dict]:
+        """Broadcast one control message and gather one reply per party."""
+        body = pickle.dumps(msg)
+        with self._lock:
+            for p in PARTIES:
+                self.ctrl.send(p, msg["type"], body, kind=CTRL)
+            replies = []
+            for p in PARTIES:
+                frame = self.ctrl.recv(p, timeout=self.request_timeout)
+                replies.append(pickle.loads(frame.body))
+        for p, r in zip(PARTIES, replies):
+            if r.get("type") == "error":
+                raise TransportError(
+                    f"party {p} failed: {r.get('error')}",
+                    party=p, reason=r.get("reason", "execution"),
+                )
+        return replies
+
+    def hello(self) -> None:
+        self._request_all({"type": "hello"})
+
+    def load_tables(
+        self,
+        tables: Dict[str, SecretTable],
+        key_seed: int,
+        config: Optional[RuntimeConfig] = None,
+    ) -> None:
+        msg = {
+            "type": "load_tables",
+            "tables": {n: encode_table(t) for n, t in tables.items()},
+            "key_seed": int(key_seed),
+            "config": config.to_dict() if config is not None else None,
+        }
+        self._request_all(msg)
+
+    def execute_plan(
+        self, plan: PlanNode, resize_ctr_base: int
+    ) -> List[Dict]:
+        return self._request_all({
+            "type": "execute",
+            "plan": pickle.dumps(plan),
+            "resize_ctr_base": int(resize_ctr_base),
+        })
+
+    def shutdown(self) -> None:
+        try:
+            self._request_all({"type": "shutdown"})
+        except TransportError:
+            pass  # a party that already died cannot say goodbye
+
+    def close(self) -> None:
+        self.ctrl.close()
+
+
+def _post_order(plan: PlanNode) -> List[PlanNode]:
+    out: List[PlanNode] = []
+
+    def walk(node: PlanNode) -> None:
+        for c in node.children():
+            walk(c)
+        out.append(node)
+
+    walk(plan)
+    return out
+
+
+class RemoteEngine(Engine):
+    """Engine whose ``execute`` dispatches to a 3-party mesh.
+
+    Everything above it — admission, plan cache, scheduler, calibration
+    hooks, metrics — is unchanged ``AnalyticsService`` machinery; everything
+    below the plan boundary happens in the party processes. Batched
+    execution falls back to serial remote passes (slot *i*'s noise counters
+    line up with a serial run by construction, so results stay bit-exact
+    with the single-process scheduler path)."""
+
+    def __init__(self, tables, coordinator: Coordinator, **kwargs):
+        kwargs.setdefault("jit_ops", False)
+        if kwargs.get("jit_ops"):
+            raise ValueError(
+                "networked execution requires jit_ops=False (jit replay "
+                "skips the Python protocol bodies and their exchange "
+                "boundaries)"
+            )
+        super().__init__(tables, **kwargs)
+        self.coordinator = coordinator
+        self.last_wire_audit: List[Dict] = []
+
+    # -- remote execution -----------------------------------------------------
+    def execute(self, plan: PlanNode) -> Tuple[SecretTable, ExecutionReport]:
+        if self.validate:
+            from ..sql.catalog import Catalog
+            from ..plan.registry import infer_schema
+
+            infer_schema(plan, Catalog.from_tables(self.tables))
+        results = self.coordinator.execute_plan(plan, self._resize_ctr)
+        self._audit(results)
+        report = ExecutionReport.from_dict(results[0]["report"])
+        out = self._reassemble(results)
+        ctr = results[0]["resize_ctr"]
+        self._resize_ctr = int(ctr)
+        self._last_resize_info = None
+        if self.reveal_hook is not None:
+            # replay revealed-size feedback from the report: report.nodes is
+            # the plan's post-order (the serial _run order), so entries map
+            # 1:1 onto plan nodes
+            for node, stats in zip(_post_order(plan), report.nodes):
+                if not lookup(type(node)).provides_resize_info:
+                    continue
+                info = {
+                    k: v for k, v in stats.extra.items() if k != "offline"
+                }
+                if info and not info.get("skipped"):
+                    self.reveal_hook(node, info)
+        return out, report
+
+    def execute_batch(
+        self, plans: Sequence[PlanNode]
+    ) -> List[Tuple[SecretTable, ExecutionReport]]:
+        plans = list(plans)
+        results = [self.execute(p) for p in plans]
+        self.last_batch_stats = {
+            "slots": len(plans),
+            "stacked_nodes": 0,
+            "split_nodes": 0,
+            "physical_bytes_per_party": sum(r.total_bytes for _, r in results),
+            "physical_rounds": sum(r.total_rounds for _, r in results),
+        }
+        return results
+
+    # -- verification ---------------------------------------------------------
+    def _audit(self, results: List[Dict]) -> None:
+        """Cross-party report equality + the wire-vs-ledger byte audit."""
+        def ledger_view(r):
+            return [
+                (
+                    n["node"], n["n_ins"], n["n_out"],
+                    n["bytes_per_party"], n["rounds"],
+                )
+                for n in r["report"]["nodes"]
+            ]
+
+        base = ledger_view(results[0])
+        for r in results[1:]:
+            if ledger_view(r) != base:
+                raise TransportError(
+                    f"party {r['party']} execution report diverges from "
+                    f"party 0's (per-node ledger tallies differ)",
+                    party=r["party"], reason="divergence",
+                )
+        if results[0]["exchange_log"] != results[1]["exchange_log"] or \
+                results[1]["exchange_log"] != results[2]["exchange_log"]:
+            raise TransportError(
+                "parties disagree on the exchange log",
+                reason="divergence",
+            )
+        self.last_wire_audit = []
+        for r in results:
+            ledger_bytes = sum(
+                n["bytes_per_party"] for n in r["report"]["nodes"]
+            )
+            log_bytes = sum(e["bytes"] for e in r["exchange_log"])
+            audit = {
+                "party": r["party"],
+                "ledger_bytes": ledger_bytes,
+                "exchange_bytes": log_bytes,
+                "wire_bytes": r["wire_bytes"],
+                "exchanges": len(r["exchange_log"]),
+            }
+            self.last_wire_audit.append(audit)
+            if not (ledger_bytes == log_bytes == r["wire_bytes"]):
+                raise TransportError(
+                    f"party {r['party']}: wire bytes {r['wire_bytes']} != "
+                    f"exchange-log bytes {log_bytes} != ledger bytes "
+                    f"{ledger_bytes}",
+                    party=r["party"], reason="divergence",
+                )
+
+    @staticmethod
+    def _reassemble(results: List[Dict]) -> SecretTable:
+        import jax.numpy as jnp
+        from ..core.sharing import AShare, BShare
+
+        names = list(results[0]["cols"])
+        cols = {}
+        for name in names:
+            kind = results[0]["cols"][name][0]
+            triple = jnp.asarray(
+                np.stack([r["cols"][name][1] for r in results])
+            )
+            cols[name] = AShare(triple) if kind == "a" else BShare(triple)
+        valid = BShare(
+            jnp.asarray(np.stack([r["valid"] for r in results]))
+        )
+        return SecretTable(cols, valid)
+
+
+# -----------------------------------------------------------------------------
+# Mesh launchers
+# -----------------------------------------------------------------------------
+
+def launch_loopback_mesh(
+    *,
+    fault_after: Optional[Dict[int, int]] = None,
+    exchange_timeout: float = 60.0,
+) -> Tuple[Coordinator, List[PartyServer], List[threading.Thread]]:
+    """Three party servers on daemon threads over an in-process loopback
+    mesh. ``fault_after`` maps party id -> exchange count at which that
+    party's driver simulates a crash."""
+    mesh = LoopbackMesh()
+    servers = []
+    threads = []
+    for p in PARTIES:
+        tr = LoopbackTransport(mesh, p)
+        srv = PartyServer(
+            p, tr, tr,
+            fault_after=(fault_after or {}).get(p),
+            exchange_timeout=exchange_timeout,
+        )
+        th = threading.Thread(target=srv.serve, daemon=True, name=f"party-{p}")
+        th.start()
+        servers.append(srv)
+        threads.append(th)
+    coord = Coordinator(LoopbackTransport(mesh, COORD))
+    coord.hello()
+    return coord, servers, threads
+
+
+def connect_tcp(
+    endpoints: Dict[int, Tuple[str, int]],
+    *,
+    request_timeout: float = 300.0,
+    connect_retries: int = 80,
+) -> Coordinator:
+    """Dial three party processes listening on TCP (run them with
+    ``scripts/run_parties.py``) and return a connected Coordinator."""
+    tr = TcpTransport(COORD, endpoints, connect_retries=connect_retries)
+    for p in PARTIES:
+        tr.dial(p)
+    coord = Coordinator(tr, request_timeout=request_timeout)
+    coord.hello()
+    return coord

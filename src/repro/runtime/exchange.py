@@ -1,0 +1,138 @@
+"""RingExchange: the bridge from ledger sync points to real wire traffic.
+
+Execution model (DESIGN.md §16.3): every party process runs the SAME
+deterministic simulation — same engine key, hence identical canonical share
+triples, identical noise draws, and an identical stream of ledger entries.
+What differs per party is what crosses the wire: at each top-level
+:class:`~repro.core.ledger.CommLedger` entry the installed
+:class:`RingExchange` sends exactly ``bytes_per_party`` bytes around the
+resharing ring (party ``p`` sends to ``(p+2) % 3`` — its predecessor, the
+direction of the mul/AND resharing hop — and receives from ``(p+1) % 3``)
+and blocks until the matching frame arrives, so the wire carries the
+ledger's byte count op-for-op and the parties advance in lockstep.
+
+Frame bodies are *verifiable*: when the protocol layer handed the ledger a
+``payload`` (the canonical 3-share array at that sync point — mul/AND
+reshares, reveal openings), the body is this party's own share slice and the
+receiver checks it bit-for-bit against the slice it derived locally — any
+cross-process divergence (different keys, different plan, nondeterminism)
+fails loudly as ``TransportError(reason="divergence")`` at the exact op.
+Entries without a payload (fused circuit rounds, jit-replay tallies) carry a
+deterministic PRF-style filler derived from (src, op, link seq) that the
+receiver reproduces and checks the same way.
+
+``fault_after`` (die after N exchanges) exists for the party-crash tests:
+the driver closes the transport mid-query, so peers observe a dropped link,
+not a tidy farewell.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import List, Optional
+
+import numpy as np
+
+from ..errors import TransportError
+from .transport import DATA, Transport
+
+__all__ = ["RingExchange"]
+
+
+def _filler(src: int, op: str, seq: int, nbytes: int) -> bytes:
+    """Deterministic pseudo-random body both link ends can derive: a SHA-256
+    counter stream keyed by the link-visible (src, op, seq) identity."""
+    out = bytearray()
+    ctr = 0
+    seed = f"{src}|{op}|{seq}".encode()
+    while len(out) < nbytes:
+        out += hashlib.sha256(seed + ctr.to_bytes(8, "big")).digest()
+        ctr += 1
+    return bytes(out[:nbytes])
+
+
+def _payload_body(payload, share_idx: int, nbytes: int, src: int, op: str,
+                  seq: int) -> bytes:
+    """One party's share slice of a canonical (3, ...) payload, normalized to
+    exactly ``nbytes`` (the ledger's logical byte count — padded with filler
+    when the in-memory dtype is wider than the ring's logical width,
+    truncated when narrower; both ends apply the same rule, so verification
+    is unaffected)."""
+    arr = np.asarray(payload)
+    raw = np.ascontiguousarray(arr[share_idx]).tobytes()
+    if len(raw) >= nbytes:
+        return raw[:nbytes]
+    return raw + _filler(src, op + "#pad", seq, nbytes - len(raw))
+
+
+class RingExchange:
+    """Exchange driver installed via :func:`repro.core.ledger.exchange_scope`
+    on a party's execution thread."""
+
+    def __init__(
+        self,
+        transport: Transport,
+        party: int,
+        *,
+        timeout: float = 60.0,
+        fault_after: Optional[int] = None,
+    ):
+        self.transport = transport
+        self.party = party
+        self.send_to = (party + 2) % 3  # the resharing hop's direction
+        self.recv_from = (party + 1) % 3
+        self.timeout = timeout
+        self.fault_after = fault_after
+        self.count = 0
+        # per-exchange (op, wire bytes, rounds) — the coordinator audits this
+        # against the execution report's ledger tallies op by op
+        self.log: List[dict] = []
+
+    def exchange(self, op: str, rounds: int, nbytes, payload=None) -> None:
+        nbytes = int(nbytes)
+        if self.fault_after is not None and self.count >= self.fault_after:
+            # simulate a party dying mid-protocol: drop every link, then
+            # fail the local execution
+            self.transport.close()
+            raise TransportError(
+                f"party {self.party}: injected crash after "
+                f"{self.count} exchanges",
+                party=self.party, op=op, reason="crashed",
+            )
+        seq = self.count
+        if payload is not None:
+            body = _payload_body(
+                payload, self.party, nbytes, self.party, op, seq
+            )
+            expect = _payload_body(
+                payload, self.recv_from, nbytes, self.recv_from, op, seq
+            )
+        else:
+            body = _filler(self.party, op, seq, nbytes)
+            expect = _filler(self.recv_from, op, seq, nbytes)
+        self.transport.send(self.send_to, op, body, kind=DATA)
+        got = self.transport.recv(self.recv_from, timeout=self.timeout)
+        if got.op != op:
+            raise TransportError(
+                f"party {self.party}: exchange {seq} expected op {op!r}, "
+                f"peer {self.recv_from} sent {got.op!r} — parties diverged",
+                party=self.party, peer=self.recv_from, seq=seq, op=op,
+                reason="divergence",
+            )
+        if len(got.body) != nbytes or got.body != expect:
+            raise TransportError(
+                f"party {self.party}: exchange {seq} ({op}) body mismatch "
+                f"({len(got.body)} bytes vs expected {nbytes}) — parties "
+                f"diverged",
+                party=self.party, peer=self.recv_from, seq=seq, op=op,
+                reason="divergence",
+            )
+        self.count += 1
+        self.log.append({"op": op, "bytes": nbytes, "rounds": int(rounds)})
+
+    def by_op(self) -> dict:
+        agg: dict = {}
+        for e in self.log:
+            a = agg.setdefault(e["op"], {"bytes": 0, "exchanges": 0})
+            a["bytes"] += e["bytes"]
+            a["exchanges"] += 1
+        return agg

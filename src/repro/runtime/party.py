@@ -1,0 +1,218 @@
+"""PartyServer: one RSS party's execution loop.
+
+A party server owns two transports:
+
+* a **control link** to the coordinator (CTRL frames carrying pickled
+  messages: hello / load_tables / execute / shutdown), and
+* a **data mesh** to the other two parties (DATA frames: one per ledger
+  sync point, driven by :class:`~repro.runtime.exchange.RingExchange`).
+
+On ``execute`` it runs its local :class:`~repro.engine.Engine` over the
+shipped plan — eager (``jit_ops=False``: jit re-executions skip the Python
+protocol bodies, and with them the exchange boundaries), under the
+mesh-wide :class:`~repro.config.RuntimeConfig` the coordinator shipped —
+with the ring exchange installed, so every ledger entry is a real framed
+wire exchange verified against the peer. It replies with its *own share
+slice* of the output columns (party ``p`` contributes canonical share
+``s_p``; the coordinator reassembles the triple from three distinct
+slices, which is bit-exact only if all three processes computed identical
+triples), the execution report, and the per-op exchange log for the
+wire-vs-ledger audit.
+
+The same class serves both process topologies: ``scripts/run_parties.py``
+runs it standalone over :class:`TcpTransport`; the in-process tests run it
+on a thread over :class:`LoopbackTransport`. Thread-local engine/ledger/
+tracer state means three party threads in one process stay fully isolated.
+"""
+from __future__ import annotations
+
+import pickle
+import traceback
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from ..config import RuntimeConfig
+from ..core.ledger import exchange_scope
+from ..core.sharing import AShare, BShare
+from ..engine.executor import Engine
+from ..errors import TransportError
+from ..obs import trace as obs_trace
+from ..ops.table import SecretTable
+from .exchange import RingExchange
+from .transport import COORD, CTRL, Transport
+
+__all__ = ["PartyServer", "encode_table", "decode_table"]
+
+
+def encode_table(table: SecretTable) -> Dict:
+    """SecretTable -> picklable dict of full canonical share triples (the
+    replicated-simulation contract: every party holds the whole triple;
+    see DESIGN.md §16.3)."""
+    cols = {}
+    for name in table.column_names():
+        c = table.col(name)  # materializes lazy views
+        cols[name] = (
+            "a" if isinstance(c, AShare) else "b",
+            np.asarray(c.shares),
+        )
+    return {"cols": cols, "valid": np.asarray(table.valid.shares)}
+
+
+def decode_table(d: Dict) -> SecretTable:
+    import jax.numpy as jnp
+
+    cols = {}
+    for name, (kind, arr) in d["cols"].items():
+        sh = jnp.asarray(arr)
+        cols[name] = AShare(sh) if kind == "a" else BShare(sh)
+    return SecretTable(cols, BShare(jnp.asarray(d["valid"])))
+
+
+class PartyServer:
+    def __init__(
+        self,
+        party: int,
+        ctrl: Transport,
+        data: Transport,
+        *,
+        fault_after: Optional[int] = None,
+        exchange_timeout: float = 60.0,
+    ):
+        self.party = party
+        self.ctrl = ctrl
+        self.data = data
+        self.fault_after = fault_after
+        self.exchange_timeout = exchange_timeout
+        self.engine: Optional[Engine] = None
+        self.tracer = obs_trace.Tracer(party=party)
+        self.queries = 0
+
+    # -- control-message helpers ---------------------------------------------
+    def _reply(self, msg: Dict) -> None:
+        self.ctrl.send(COORD, msg["type"], pickle.dumps(msg), kind=CTRL)
+
+    def _handle_load_tables(self, msg: Dict) -> Dict:
+        tables = {name: decode_table(d) for name, d in msg["tables"].items()}
+        cfg = (
+            RuntimeConfig.from_dict(msg["config"])
+            if msg.get("config") is not None
+            else None
+        )
+        self.engine = Engine(
+            tables,
+            key=jax.random.PRNGKey(int(msg["key_seed"])),
+            jit_ops=False,  # exchange boundaries require eager protocol bodies
+            config=cfg,
+        )
+        return {
+            "type": "load_ack",
+            "party": self.party,
+            "tables": sorted(tables),
+        }
+
+    def _handle_execute(self, msg: Dict) -> Dict:
+        if self.engine is None:
+            return {
+                "type": "error",
+                "party": self.party,
+                "error": "execute before load_tables",
+                "reason": "protocol",
+            }
+        plan = pickle.loads(msg["plan"])
+        base = msg.get("resize_ctr_base")
+        if base is not None and self.engine._resize_ctr != base:
+            # lockstep invariant: every party must fold the same noise
+            # counters, or Resize draws diverge silently
+            return {
+                "type": "error",
+                "party": self.party,
+                "error": (
+                    f"resize counter desync: party at "
+                    f"{self.engine._resize_ctr}, coordinator at {base}"
+                ),
+                "reason": "divergence",
+            }
+        drv = RingExchange(
+            self.data,
+            self.party,
+            timeout=self.exchange_timeout,
+            fault_after=self.fault_after,
+        )
+        wire_before = self.data.sent_bytes  # counters span queries; audit per
+        with self.tracer, exchange_scope(drv):
+            out, report = self.engine.execute(plan)
+        self.queries += 1
+        slices = {}
+        for name in out.column_names():
+            c = out.col(name)
+            slices[name] = (
+                "a" if isinstance(c, AShare) else "b",
+                np.asarray(c.shares[self.party]),
+            )
+        return {
+            "type": "result",
+            "party": self.party,
+            "cols": slices,
+            "valid": np.asarray(out.valid.shares[self.party]),
+            "report": report.to_dict(),
+            "exchange_log": drv.log,
+            "wire_bytes": self.data.sent_bytes - wire_before,
+            "resize_ctr": self.engine._resize_ctr,
+        }
+
+    # -- main loop ------------------------------------------------------------
+    def serve(self) -> None:
+        """Process control messages until shutdown (or a fatal transport
+        failure). Execution errors are reported to the coordinator and the
+        loop continues; an injected crash (``fault_after``) tears the whole
+        server down the way a dead process would."""
+        while True:
+            try:
+                frame = self.ctrl.recv(COORD, timeout=None)
+            except TransportError:
+                return  # coordinator is gone; nothing to serve
+            msg = pickle.loads(frame.body)
+            mtype = msg.get("type")
+            try:
+                if mtype == "hello":
+                    self._reply({"type": "hello_ack", "party": self.party})
+                elif mtype == "load_tables":
+                    self._reply(self._handle_load_tables(msg))
+                elif mtype == "execute":
+                    self._reply(self._handle_execute(msg))
+                elif mtype == "shutdown":
+                    self._reply({"type": "bye", "party": self.party})
+                    return
+                else:
+                    self._reply({
+                        "type": "error",
+                        "party": self.party,
+                        "error": f"unknown message type {mtype!r}",
+                        "reason": "protocol",
+                    })
+            except TransportError as e:
+                if e.reason == "crashed" and self.fault_after is not None:
+                    return  # injected crash: die silently, like a real one
+                try:
+                    self._reply({
+                        "type": "error",
+                        "party": self.party,
+                        "error": str(e),
+                        "reason": e.reason,
+                    })
+                except TransportError:
+                    return
+            except Exception as e:  # report, keep serving
+                self._reply({
+                    "type": "error",
+                    "party": self.party,
+                    "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc(),
+                    "reason": "execution",
+                })
+
+    def close(self) -> None:
+        self.ctrl.close()
+        self.data.close()

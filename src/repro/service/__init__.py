@@ -1,4 +1,5 @@
 """Multi-tenant analytics service: SQL sessions, plan cache, CRT budget."""
+from ..errors import BudgetRefused, ReflexError  # noqa: F401
 from .accountant import (  # noqa: F401
     PrivacyAccountant,
     QueryRefused,
@@ -16,8 +17,10 @@ from .service import (  # noqa: F401
 __all__ = [
     "AdmittedQuery",
     "AnalyticsService",
+    "BudgetRefused",
     "PrivacyAccountant",
     "QueryRefused",
+    "ReflexError",
     "QueryResult",
     "QueryScheduler",
     "QueryTicket",

@@ -55,6 +55,7 @@ import math
 from typing import Dict, List, Optional, Tuple
 
 from ..core.crt import crt_rounds
+from ..errors import BudgetRefused
 from ..core.noise import BetaNoise, NoiseStrategy, NoTrim, TruncatedLaplace
 from ..engine.executor import ExecutionReport
 from ..plan.nodes import PlanNode, Resize
@@ -62,20 +63,10 @@ from ..sql.compile import plan_fingerprint
 
 __all__ = ["PrivacyAccountant", "QueryRefused", "strategy_key", "escalate_strategy"]
 
-
-class QueryRefused(RuntimeError):
-    """Raised under ``policy='refuse'`` when a query would spend an
-    observation a signature's CRT budget no longer covers."""
-
-    def __init__(self, signature: Tuple[str, str], observed: int, budget: int):
-        self.signature = signature
-        self.observed = observed
-        self.budget = budget
-        super().__init__(
-            f"CRT budget exhausted for resize of:\n{signature[0]}\n"
-            f"strategy={signature[1]}: "
-            f"{observed}/{budget} observations already disclosed"
-        )
+# The refusal error now lives in the typed taxonomy (repro.errors); the old
+# name stays importable here. BudgetRefused subclasses RuntimeError, so
+# pre-taxonomy except clauses keep catching it.
+QueryRefused = BudgetRefused
 
 
 def strategy_key(noise: NoiseStrategy, addition: str) -> str:

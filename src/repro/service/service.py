@@ -54,6 +54,7 @@ from typing import Dict, List, Optional
 import jax
 import numpy as np
 
+from ..config import RuntimeConfig
 from ..core.material import material_scope
 from ..core.noise import NoiseStrategy, shrinkwrap_default
 from ..engine.executor import Engine, ExecutionReport
@@ -155,12 +156,18 @@ class AnalyticsService:
         # at idle windows; "background" = pool + provisioner daemon thread
         offline_pool_bytes: int = 64 << 20,
         offline_window: int = 8,  # upcoming counters provisioned per template
+        config: Optional[RuntimeConfig] = None,  # execution-strategy knobs;
+        # None = env fallback. Threaded into the Engine (kernels/fusion/tile)
+        # and the planner's physical join selection.
+        engine_factory=None,  # Engine-compatible constructor — the networked
+        # runtime passes one that builds a coordinator-backed RemoteEngine
     ):
         if offline not in ("off", "on", "background"):
             raise ValueError(
                 f"offline={offline!r} (expected off|on|background)"
             )
         self.tables = tables
+        self.config = config
         self.catalog = catalog or Catalog.from_tables(tables)
         self.noise = noise if noise is not None else shrinkwrap_default()
         self.addition = addition
@@ -230,9 +237,10 @@ class AnalyticsService:
             "reflex_offline_pool_entries",
             "Pooled entries by material class", ("kind",),
         )
-        self.engine = Engine(
+        make_engine = engine_factory if engine_factory is not None else Engine
+        self.engine = make_engine(
             tables, key=key if key is not None else jax.random.PRNGKey(0),
-            jit_ops=jit_ops,
+            jit_ops=jit_ops, config=config,
         )
         self.offline_mode = offline
         self.pool: Optional[RandomnessPool] = None
@@ -355,7 +363,8 @@ class AnalyticsService:
             # zero extra disclosure. Catalogs without declared multiplicity
             # bounds never rewrite (sort-merge inapplicable).
             physical = select_join_algorithms(
-                logical, cost_model=cm, catalog=self.catalog
+                logical, cost_model=cm, catalog=self.catalog,
+                mode=self.config.join_algo if self.config is not None else None,
             )
             if self.placement == "none":
                 plan = physical

@@ -7,6 +7,9 @@
                                            # execute on synthetic HealthLnK
                                            # data: estimates vs actuals per
                                            # node (+ resizer trim outcomes)
+    python -m repro.sql --explain-analyze --networked ["SQL"]
+                                           # same, but executed on a 3-party
+                                           # loopback mesh via ReflexClient
 
 ``--explain`` / ``--explain-analyze`` with no SQL run every golden query in
 ``data/queries.py`` (DESIGN.md §14.4 documents the output format; every
@@ -188,15 +191,22 @@ def _walk_nodes(plan):
 def explain(argv, analyze: bool) -> int:
     """EXPLAIN [ANALYZE] the given SQL — or every golden query when no SQL is
     given — against a small synthetic HealthLnK dataset (the same generator
-    the CI smoke uses, so the CLI needs no external state)."""
-    import jax
-
+    the CI smoke uses, so the CLI needs no external state). With
+    ``--networked``, EXPLAIN ANALYZE executes on a 3-party loopback mesh
+    through the same client facade (actuals come from real wire exchanges)."""
     from ..data.healthlnk import generate_healthlnk
     from ..data.queries import all_query_sql
-    from ..service import AnalyticsService
+    from ..runtime import ReflexClient
 
+    networked = "--networked" in argv
+    argv = [a for a in argv if a != "--networked"]
     tables, _ = generate_healthlnk(n=16, seed=3, aspirin_frac=0.5)
-    svc = AnalyticsService(tables, key=jax.random.PRNGKey(2))
+    if networked:
+        client = ReflexClient.networked(tables, key_seed=2)
+    else:
+        import jax
+
+        client = ReflexClient.in_process(tables, key=jax.random.PRNGKey(2))
     queries = (
         {"query": " ".join(argv)} if argv else all_query_sql()
     )
@@ -204,15 +214,16 @@ def explain(argv, analyze: bool) -> int:
     for name, sql_text in queries.items():
         try:
             if analyze:
-                text, _res = svc.explain_analyze("explain-cli", sql_text)
+                text, _res = client.explain_analyze("explain-cli", sql_text)
             else:
-                text = svc.explain(sql_text)
+                text = client.explain(sql_text)
         except Exception as e:  # noqa: BLE001 — report and keep going
             print(f"FAIL {name}: {type(e).__name__}: {e}")
             failures += 1
             continue
         print(text)
         print()
+    client.close()
     return 1 if failures else 0
 
 

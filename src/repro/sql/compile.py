@@ -37,6 +37,7 @@ import dataclasses
 import itertools
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from ..config import RuntimeConfig
 from ..core.resizer import ResizerConfig
 from ..ops.filter import And, Or, Pred, Predicate, normalize_pred
 # the executed join's own collision-renaming IS the compiler's schema rule:
@@ -673,6 +674,7 @@ def compile_query(
     cost_model: Optional[CostModel] = None,
     reorder_joins: bool = True,
     join_algo: Optional[str] = None,
+    config: Optional[RuntimeConfig] = None,
 ) -> PlanNode:
     """SQL -> fully Resizer-placed physical plan.
 
@@ -681,12 +683,15 @@ def compile_query(
     :func:`repro.plan.policies.insert_resizers`; ``cost_based`` placement uses
     ``cost_model`` (defaulting to one derived from the catalog sizes).
 
-    ``join_algo`` (default ``$REPRO_JOIN_ALGO`` or ``auto``) picks the
-    physical join algorithm per join node
-    (:func:`repro.plan.policies.select_join_algorithms`). The rewrite only
+    ``join_algo`` picks the physical join algorithm per join node
+    (:func:`repro.plan.policies.select_join_algorithms`); it defaults to
+    ``config.join_algo`` when an explicit :class:`RuntimeConfig` is given,
+    else to :func:`repro.config.current_config`'s value. The rewrite only
     fires for catalogs that declare key multiplicity bounds, so plans over
     the bare schema catalog are byte-stable.
     """
+    if join_algo is None and config is not None:
+        join_algo = config.join_algo
     plan = compile_logical(
         sql, catalog, cost_model=cost_model, reorder_joins=reorder_joins
     )

@@ -20,12 +20,14 @@ import fcntl
 import os
 from typing import Iterator, Optional
 
+from ..errors import LeaseFenced
+
 __all__ = ["FileLease", "StaleLeaseError"]
 
-
-class StaleLeaseError(RuntimeError):
-    """A writer presented a fencing token older than one already observed —
-    its lease was superseded while it was paused; the write must not land."""
+# The fencing error now lives in the typed taxonomy (repro.errors); the old
+# name stays importable here. LeaseFenced subclasses RuntimeError, so
+# pre-taxonomy except clauses keep catching it.
+StaleLeaseError = LeaseFenced
 
 
 class FileLease:

@@ -174,7 +174,9 @@ class JournalStore:
         if token < self._max_token:
             raise StaleLeaseError(
                 f"fencing token {token} is older than an observed write "
-                f"(token {self._max_token}) — this lease was superseded"
+                f"(token {self._max_token}) — this lease was superseded",
+                token=token,
+                seen=self._max_token,
             )
         self._seq += 1
         self._max_token = token

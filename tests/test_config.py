@@ -1,0 +1,181 @@
+"""RuntimeConfig: the single env parse site, the use_config resolution
+order, and its threading through Engine / compile_query / AnalyticsService."""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.config import (
+    DEFAULT_JOIN_TILE,
+    RuntimeConfig,
+    current_config,
+    use_config,
+)
+from repro.data import generate_healthlnk
+from repro.data.queries import QUERY_SQL
+from repro.engine import Engine
+from repro.kernels import fusion_enabled, kernels_enabled, override_fusion
+from repro.sql.compile import compile_query
+
+
+# -----------------------------------------------------------------------------
+# Parsing + validation
+# -----------------------------------------------------------------------------
+
+
+def test_defaults():
+    cfg = RuntimeConfig()
+    assert cfg == RuntimeConfig(
+        use_pallas=False, fuse_circuits=True,
+        join_tile=DEFAULT_JOIN_TILE, join_algo="auto",
+    )
+
+
+def test_from_env_parses_all_flags():
+    cfg = RuntimeConfig.from_env({
+        "REPRO_USE_PALLAS": "1",
+        "REPRO_FUSE_CIRCUITS": "0",
+        "REPRO_JOIN_TILE": "128",
+        "REPRO_JOIN_ALGO": "sortmerge",
+    })
+    assert cfg == RuntimeConfig(
+        use_pallas=True, fuse_circuits=False,
+        join_tile=128, join_algo="sortmerge",
+    )
+
+
+def test_from_env_empty_is_defaults():
+    assert RuntimeConfig.from_env({}) == RuntimeConfig()
+
+
+def test_from_env_rejects_non_integer_tile():
+    with pytest.raises(ValueError, match="REPRO_JOIN_TILE"):
+        RuntimeConfig.from_env({"REPRO_JOIN_TILE": "huge"})
+
+
+@pytest.mark.parametrize("bad", [
+    {"join_algo": "hash"},
+    {"join_tile": 0},
+    {"join_tile": -5},
+])
+def test_validation_rejects_bad_values(bad):
+    with pytest.raises(ValueError):
+        RuntimeConfig(**bad)
+
+
+def test_frozen():
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        RuntimeConfig().use_pallas = True
+
+
+def test_wire_round_trip_ignores_unknown_keys():
+    cfg = RuntimeConfig(join_algo="product", join_tile=64)
+    d = cfg.to_dict()
+    d["from_the_future"] = 1  # forward compatibility across mesh versions
+    assert RuntimeConfig.from_dict(d) == cfg
+
+
+# -----------------------------------------------------------------------------
+# Resolution order: override block > use_config > env fallback
+# -----------------------------------------------------------------------------
+
+
+def test_current_config_env_fallback_tracks_env(monkeypatch):
+    monkeypatch.delenv("REPRO_JOIN_ALGO", raising=False)
+    assert current_config().join_algo == "auto"
+    monkeypatch.setenv("REPRO_JOIN_ALGO", "product")
+    assert current_config().join_algo == "product"
+    monkeypatch.setenv("REPRO_JOIN_ALGO", "sortmerge")
+    assert current_config().join_algo == "sortmerge"
+
+
+def test_use_config_beats_env(monkeypatch):
+    monkeypatch.setenv("REPRO_JOIN_ALGO", "product")
+    with use_config(RuntimeConfig(join_algo="sortmerge")):
+        assert current_config().join_algo == "sortmerge"
+    assert current_config().join_algo == "product"
+
+
+def test_use_config_nests():
+    with use_config(RuntimeConfig(join_tile=4)):
+        with use_config(RuntimeConfig(join_tile=8)):
+            assert current_config().join_tile == 8
+        assert current_config().join_tile == 4
+
+
+def test_use_config_none_is_noop(monkeypatch):
+    monkeypatch.setenv("REPRO_JOIN_ALGO", "product")
+    with use_config(None):
+        assert current_config().join_algo == "product"
+
+
+def test_kernel_gates_consume_config(monkeypatch):
+    monkeypatch.delenv("REPRO_USE_PALLAS", raising=False)
+    with use_config(RuntimeConfig(use_pallas=True, fuse_circuits=False)):
+        assert kernels_enabled() is True
+        assert fusion_enabled() is False
+        # block-scoped override is still the strongest layer
+        with override_fusion(True):
+            assert fusion_enabled() is True
+
+
+# -----------------------------------------------------------------------------
+# Acceptance by Engine / compile_query
+# -----------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def data():
+    return generate_healthlnk(n=8, seed=3, aspirin_frac=0.5)
+
+
+def test_engine_accepts_config_and_applies_it_during_execute(data):
+    tables, _ = data
+    cfg = RuntimeConfig(join_algo="product", join_tile=2)
+    eng = Engine(tables, key=jax.random.PRNGKey(2), config=cfg)
+    assert eng.config is cfg
+    plan = compile_query(QUERY_SQL["dosage_study"])
+    out, report = eng.execute(plan)
+    assert out.n > 0 and report.nodes
+    # identical run under the default config: results must agree (the knobs
+    # select strategy, never semantics)
+    eng2 = Engine(tables, key=jax.random.PRNGKey(2))
+    out2, _ = eng2.execute(compile_query(QUERY_SQL["dosage_study"]))
+    assert out.reveal_true_rows()["pid"].tolist() == \
+        out2.reveal_true_rows()["pid"].tolist()
+
+
+def test_compile_query_uses_config_join_algo(data):
+    tables, plain = data
+    import numpy as np
+
+    from repro.plan.nodes import JoinSortMerge
+    from repro.sql.catalog import Catalog
+
+    mult = {
+        t: {"pid": int(np.bincount(cols["pid"]).max())}
+        for t, cols in plain.items()
+    }
+    catalog = Catalog.from_tables(tables, multiplicity=mult)
+
+    def walk(n):
+        yield n
+        for c in n.children():
+            yield from walk(c)
+
+    plan = compile_query(
+        QUERY_SQL["dosage_study"], catalog,
+        config=RuntimeConfig(join_algo="sortmerge"),
+    )
+    assert any(isinstance(n, JoinSortMerge) for n in walk(plan))
+    plan = compile_query(
+        QUERY_SQL["dosage_study"], catalog,
+        config=RuntimeConfig(join_algo="product"),
+    )
+    assert not any(isinstance(n, JoinSortMerge) for n in walk(plan))
+    # an explicit join_algo kwarg wins over the config
+    plan = compile_query(
+        QUERY_SQL["dosage_study"], catalog, join_algo="sortmerge",
+        config=RuntimeConfig(join_algo="product"),
+    )
+    assert any(isinstance(n, JoinSortMerge) for n in walk(plan))

@@ -1,0 +1,256 @@
+"""Framed transports: wire format, sequencing, failure taxonomy — over both
+the loopback mesh and real TCP sockets."""
+import socket
+import threading
+import time
+
+import pytest
+
+from repro.errors import ReflexError, TransportError
+from repro.runtime import (
+    COORD,
+    CTRL,
+    DATA,
+    Frame,
+    LoopbackMesh,
+    LoopbackTransport,
+    TcpTransport,
+    decode_frame,
+    encode_frame,
+)
+
+# -----------------------------------------------------------------------------
+# Frame codec
+# -----------------------------------------------------------------------------
+
+
+def test_frame_round_trip():
+    f = Frame(kind=DATA, src=0, dst=2, seq=7, op="mul", body=b"\x01" * 33)
+    g = decode_frame(encode_frame(f))
+    assert (g.kind, g.src, g.dst, g.seq, g.op, g.body) == (
+        DATA, 0, 2, 7, "mul", b"\x01" * 33,
+    )
+
+
+def test_frame_round_trip_empty_body_and_ctrl():
+    f = Frame(kind=CTRL, src=3, dst=1, seq=0, op="hello", body=b"")
+    g = decode_frame(encode_frame(f))
+    assert g.kind == CTRL and g.op == "hello" and g.body == b""
+
+
+def test_decode_rejects_bad_magic():
+    buf = bytearray(encode_frame(Frame(DATA, 0, 1, 0, "mul", b"xy")))
+    buf[:4] = b"NOPE"
+    with pytest.raises(TransportError) as ei:
+        decode_frame(bytes(buf))
+    assert ei.value.reason == "torn-frame"
+
+
+def test_decode_rejects_truncated_frame():
+    buf = encode_frame(Frame(DATA, 0, 1, 0, "mul", b"hello world"))
+    with pytest.raises(TransportError) as ei:
+        decode_frame(buf[:-3])
+    assert ei.value.reason == "torn-frame"
+
+
+def test_decode_rejects_corrupt_body_crc():
+    buf = bytearray(encode_frame(Frame(DATA, 0, 1, 0, "mul", b"hello")))
+    buf[-1] ^= 0xFF
+    with pytest.raises(TransportError) as ei:
+        decode_frame(bytes(buf))
+    assert ei.value.reason == "torn-frame"
+
+
+def test_decode_rejects_overlong_op():
+    with pytest.raises(ValueError):
+        encode_frame(Frame(DATA, 0, 1, 0, "x" * 300, b""))
+
+
+def test_transport_error_is_typed():
+    e = TransportError("boom", party=1, peer=2, seq=9, op="mul",
+                       reason="bad-seq")
+    assert isinstance(e, ReflexError) and isinstance(e, RuntimeError)
+    assert (e.party, e.peer, e.seq, e.op, e.reason) == (1, 2, 9, "mul",
+                                                        "bad-seq")
+
+
+# -----------------------------------------------------------------------------
+# Loopback semantics (shared validation path)
+# -----------------------------------------------------------------------------
+
+
+def make_pair():
+    mesh = LoopbackMesh()
+    return mesh, LoopbackTransport(mesh, 0), LoopbackTransport(mesh, 1)
+
+
+def test_loopback_send_recv_orders_frames():
+    _, a, b = make_pair()
+    for i in range(5):
+        a.send(1, "mul", bytes([i]) * 4)
+    for i in range(5):
+        f = b.recv(0, timeout=1.0)
+        assert f.seq == i and f.body == bytes([i]) * 4
+    assert a.sent_frames == 5 and a.sent_bytes == 20
+
+
+def test_loopback_sent_bytes_counts_data_only():
+    _, a, b = make_pair()
+    a.send(1, "hello", b"\x00" * 100, kind=CTRL)
+    a.send(1, "mul", b"\x00" * 7, kind=DATA)
+    b.recv(0, timeout=1.0)
+    b.recv(0, timeout=1.0)
+    assert a.sent_bytes == 7  # the wire-vs-ledger figure excludes control
+
+
+def test_loopback_recv_timeout():
+    _, _a, b = make_pair()
+    with pytest.raises(TransportError) as ei:
+        b.recv(0, timeout=0.05)
+    assert ei.value.reason == "timeout"
+
+
+def test_out_of_order_frame_rejected():
+    mesh, a, b = make_pair()
+    # skip seq 0: craft seq 1 directly onto the wire
+    mesh.inject(0, 1, encode_frame(Frame(DATA, 0, 1, 1, "mul", b"zz")))
+    with pytest.raises(TransportError) as ei:
+        b.recv(0, timeout=1.0)
+    assert ei.value.reason == "bad-seq" and ei.value.seq == 1
+
+
+def test_duplicated_frame_rejected():
+    mesh, a, b = make_pair()
+    buf = encode_frame(Frame(DATA, 0, 1, 0, "mul", b"zz"))
+    mesh.inject(0, 1, buf)
+    mesh.inject(0, 1, buf)  # replay
+    assert b.recv(0, timeout=1.0).seq == 0
+    with pytest.raises(TransportError) as ei:
+        b.recv(0, timeout=1.0)
+    assert ei.value.reason == "bad-seq"
+
+
+def test_torn_frame_rejected_on_recv():
+    mesh, _a, b = make_pair()
+    buf = encode_frame(Frame(DATA, 0, 1, 0, "mul", b"full frame body"))
+    mesh.inject(0, 1, buf[: len(buf) - 4])
+    with pytest.raises(TransportError) as ei:
+        b.recv(0, timeout=1.0)
+    assert ei.value.reason == "torn-frame"
+
+
+def test_misrouted_frame_rejected():
+    mesh, _a, b = make_pair()
+    # frame stamped src=2 arriving on the 0->1 link
+    mesh.inject(0, 1, encode_frame(Frame(DATA, 2, 1, 0, "mul", b"zz")))
+    with pytest.raises(TransportError) as ei:
+        b.recv(0, timeout=1.0)
+    assert ei.value.reason == "bad-seq"
+
+
+def test_closed_loopback_peer_raises_crashed_and_sticks():
+    _, a, b = make_pair()
+    a.send(1, "mul", b"ok")
+    assert b.recv(0, timeout=1.0).op == "mul"
+    a.close()
+    for _ in range(2):  # sticky: every later recv fails the same way
+        with pytest.raises(TransportError) as ei:
+            b.recv(0, timeout=1.0)
+        assert ei.value.reason == "crashed"
+    with pytest.raises(TransportError) as ei:
+        a.send(1, "mul", b"more")
+    assert ei.value.reason == "closed"
+
+
+# -----------------------------------------------------------------------------
+# TCP
+# -----------------------------------------------------------------------------
+
+
+def tcp_pair(base_port):
+    eps = {0: ("127.0.0.1", base_port), 1: ("127.0.0.1", base_port + 1)}
+    a = TcpTransport(0, eps)
+    eps[0] = a.listen()  # resolve the OS-assigned port before b copies eps
+    b = TcpTransport(1, eps)
+    b.dial(0)
+    a.wait_for(1, timeout=10.0)
+    return a, b
+
+
+def test_tcp_round_trip_both_directions():
+    a, b = tcp_pair(0)  # port 0: OS-assigned, collision-free
+    try:
+        for i in range(10):
+            b.send(0, "mul", bytes([i]) * 16)
+        for i in range(10):
+            f = a.recv(1, timeout=10.0)
+            assert f.seq == i and f.body == bytes([i]) * 16
+        a.send(1, "reveal", b"result", kind=DATA)
+        assert b.recv(0, timeout=10.0).op == "reveal"
+    finally:
+        a.close()
+        b.close()
+
+
+def test_tcp_large_frame_survives_segmentation():
+    a, b = tcp_pair(0)
+    try:
+        body = bytes(range(256)) * 4096  # 1 MiB >> socket buffers
+        b.send(0, "mul", body)
+        assert a.recv(1, timeout=30.0).body == body
+    finally:
+        a.close()
+        b.close()
+
+
+def test_tcp_dial_retries_until_listener_appears():
+    # reserve a free port, then bring the listener up only after the dialer
+    # has already burned a few refused attempts
+    probe = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    probe.bind(("127.0.0.1", 0))
+    port = probe.getsockname()[1]
+    probe.close()
+    eps = {0: ("127.0.0.1", port), 1: ("127.0.0.1", 0)}
+    a = TcpTransport(0, eps)
+    b = TcpTransport(1, eps, connect_retries=300, backoff_s=0.02)
+
+    def listen_late():
+        time.sleep(0.25)
+        a.listen()
+
+    t = threading.Thread(target=listen_late)
+    t.start()
+    b.dial(0)  # backoff loop must ride out the listener-less window
+    t.join()
+    a.wait_for(1, timeout=10.0)
+    try:
+        b.send(0, "mul", b"late but delivered")
+        assert a.recv(1, timeout=10.0).body == b"late but delivered"
+    finally:
+        a.close()
+        b.close()
+
+
+def test_tcp_dial_gives_up_with_connect_reason():
+    # a bound-then-closed port: nothing will ever accept
+    probe = TcpTransport(0, {0: ("127.0.0.1", 0)})
+    addr = probe.listen()
+    probe.close()
+    t = TcpTransport(1, {0: addr, 1: ("127.0.0.1", 0)},
+                     connect_retries=3, backoff_s=0.01)
+    with pytest.raises(TransportError) as ei:
+        t.dial(0)
+    assert ei.value.reason == "connect" and ei.value.peer == 0
+
+
+def test_tcp_peer_crash_surfaces_as_crashed_link():
+    a, b = tcp_pair(0)
+    try:
+        b.send(0, "mul", b"last words")
+        assert a.recv(1, timeout=10.0).body == b"last words"
+        b.close()  # peer process dies
+        with pytest.raises(TransportError) as ei:
+            a.recv(1, timeout=10.0)
+        assert ei.value.reason in ("crashed", "closed")
+    finally:
+        a.close()

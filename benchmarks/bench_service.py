@@ -246,6 +246,88 @@ def _bench_telemetry(tables, rows: list, artifact: dict, quick: bool) -> None:
         raise SystemExit("telemetry bench: traced ledger tallies diverged")
 
 
+def _bench_distributed(tables, rows: list, artifact: dict, quick: bool) -> None:
+    """Distributed-tracing overhead on the networked path (DESIGN.md §17):
+    median submit wall time over a 3-party loopback mesh with no tracer vs
+    under a coordinator tracer (per-query party tracers + span shipping +
+    the coordinator-side merge), plus hard parity checks — an untraced
+    party runs with no tracer at all, so revealed rows AND per-node ledger
+    tallies must be bit-identical between the two runs. The acceptance bar
+    is <=5% overhead, reported here and asserted only on parity so CI
+    timing noise cannot flake the job."""
+    import numpy as np
+
+    from repro.runtime import ReflexClient
+
+    repeats = 3 if quick else 7
+    mk = lambda: ReflexClient.networked(
+        tables, key_seed=2, noise=NoTrim(), placement="none",
+    )
+
+    def tallies(res):
+        return [
+            (s.node, s.n_ins, s.n_out, s.bytes_per_party, s.rounds)
+            for s in res.report.nodes
+        ]
+
+    cl_plain, cl_traced = mk(), mk()
+    res_plain = cl_plain.submit("alice", BATCH_SQL)  # warm both meshes
+    warm_tr = Tracer()
+    with warm_tr:
+        res_traced = cl_traced.submit("alice", BATCH_SQL)
+    parity = (
+        tallies(res_plain) == tallies(res_traced)
+        and set(res_plain.rows) == set(res_traced.rows)
+        and all(
+            np.array_equal(res_plain.rows[k], res_traced.rows[k])
+            for k in res_plain.rows
+        )
+    )
+    parties = sorted(
+        {s.attrs["party"] for s in warm_tr.spans if "party" in s.attrs}
+    )
+    for _ in range(2):  # settle both meshes before timing
+        cl_plain.submit("alice", BATCH_SQL)
+        with Tracer():
+            cl_traced.submit("alice", BATCH_SQL)
+
+    plain_ts, traced_ts = [], []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        cl_plain.submit("alice", BATCH_SQL)
+        plain_ts.append(time.perf_counter() - t0)
+        tr = Tracer()
+        t0 = time.perf_counter()
+        with tr:
+            cl_traced.submit("alice", BATCH_SQL)
+        traced_ts.append(time.perf_counter() - t0)
+    cl_plain.close()
+    cl_traced.close()
+    plain_s = sorted(plain_ts)[repeats // 2]
+    traced_s = sorted(traced_ts)[repeats // 2]
+    overhead_pct = (traced_s - plain_s) / plain_s * 100
+
+    artifact["distributed"] = {
+        "sql": BATCH_SQL,
+        "repeats": repeats,
+        "untraced_us": plain_s * 1e6,
+        "traced_us": traced_s * 1e6,
+        "overhead_pct": overhead_pct,
+        "spans_per_query": len(tr.spans),
+        "parties_in_trace": len(parties),
+        "ledger_parity": parity,
+    }
+    rows.append((
+        "service_distributed_tracing_overhead_pct", overhead_pct,
+        f"3-party loopback, {len(tr.spans)} spans/query, "
+        f"{len(parties)} parties, parity {'OK' if parity else 'BROKEN'}",
+    ))
+    if not parity or len(parties) != 3:
+        raise SystemExit(
+            "distributed bench: traced networked run diverged from untraced"
+        )
+
+
 def _bench_offline(tables, rows: list, artifact: dict, quick: bool) -> None:
     """Offline/online phase split (DESIGN.md §15): submit latency for the
     resizer-carrying join query with the correlated-randomness pool cold
@@ -432,6 +514,9 @@ def run(quick: bool = False) -> list:
 
     # -- offline randomness pool: hot vs cold + hit rate (DESIGN.md §15) ------
     _bench_offline(tables, rows, artifact, quick)
+
+    # -- distributed tracing over the 3-party mesh (DESIGN.md §17) ------------
+    _bench_distributed(tables, rows, artifact, quick)
 
     artifact["plan_cache"] = cache
     artifact["accountant"] = {

@@ -2,7 +2,7 @@
 
 Runs a small HealthLnK service with the full observability surface on —
 lifecycle tracing, the metrics registry, and WAL-backed durable state — and
-writes three artifacts at the repo root:
+writes three artifacts under ``benchmarks/out/`` (gitignored):
 
 * ``TELEMETRY_spans.jsonl``  — one redacted span per line (Tracer.write)
 * ``TELEMETRY_metrics.json`` — MetricsRegistry.snapshot() after the run
@@ -34,7 +34,7 @@ from repro.data import generate_healthlnk
 from repro.obs import Tracer
 from repro.service import AnalyticsService, PrivacyAccountant
 
-OUT_DIR = os.path.join(os.path.dirname(__file__), "..")
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
 SPANS_PATH = os.path.join(OUT_DIR, "TELEMETRY_spans.jsonl")
 METRICS_PATH = os.path.join(OUT_DIR, "TELEMETRY_metrics.json")
 PROM_PATH = os.path.join(OUT_DIR, "TELEMETRY_metrics.prom")
@@ -47,6 +47,7 @@ GROUP_SQL = "SELECT major_icd9, COUNT(*) AS c FROM diagnoses GROUP BY major_icd9
 
 
 def run() -> int:
+    os.makedirs(OUT_DIR, exist_ok=True)
     tables, _ = generate_healthlnk(n=16, seed=3, aspirin_frac=0.5)
     state_dir = tempfile.mkdtemp(prefix="reflex-telemetry-")
     try:

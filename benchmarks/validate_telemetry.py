@@ -20,10 +20,20 @@ Checks on ``TELEMETRY_metrics.json``:
   * every label name on every metric is in ``allowed_label_names`` and
     never in ``secret_label_names``.
 
+A span schema may additionally carry a ``distributed`` section (the
+3-process TCP-mesh smoke uses it):
+  * ``single_trace_id`` — every span carries the same non-null trace_id;
+  * ``min_parties`` — at least this many distinct ``attrs.party`` values;
+  * ``prefix_required_attrs`` — every span whose name starts with a prefix
+    must carry all the listed attr keys (e.g. node spans must be
+    party-attributed).
+
 Usage:
     python benchmarks/validate_telemetry.py \
-        TELEMETRY_spans.jsonl benchmarks/telemetry_span_schema.json \
-        TELEMETRY_metrics.json benchmarks/telemetry_metrics_schema.json
+        benchmarks/out/TELEMETRY_spans.jsonl \
+        benchmarks/telemetry_span_schema.json \
+        benchmarks/out/TELEMETRY_metrics.json \
+        benchmarks/telemetry_metrics_schema.json
 """
 from __future__ import annotations
 
@@ -117,6 +127,43 @@ def validate_spans(lines: list, schema: dict) -> list:
             errors.append(
                 f"spans: no span name starts with required prefix {prefix!r}"
             )
+
+    dist = schema.get("distributed")
+    if dist:
+        good = [sp for sp in spans if isinstance(sp, dict)]
+        if dist.get("single_trace_id"):
+            tids = {sp.get("trace_id") for sp in good}
+            if None in tids:
+                errors.append(
+                    "spans: distributed trace has spans without a trace_id"
+                )
+            if len(tids - {None}) != 1:
+                errors.append(
+                    f"spans: expected one trace_id, found {sorted(tids - {None})}"
+                )
+        min_parties = int(dist.get("min_parties", 0))
+        if min_parties:
+            parties = {
+                sp["attrs"]["party"]
+                for sp in good
+                if isinstance(sp.get("attrs"), dict) and "party" in sp["attrs"]
+            }
+            if len(parties) < min_parties:
+                errors.append(
+                    f"spans: {len(parties)} distinct parties attributed, "
+                    f"schema requires >= {min_parties}"
+                )
+        for prefix, keys in dist.get("prefix_required_attrs", {}).items():
+            for i, sp in enumerate(good):
+                if not sp.get("name", "").startswith(prefix):
+                    continue
+                attrs = sp.get("attrs") or {}
+                for key in keys:
+                    if key not in attrs:
+                        errors.append(
+                            f"spans[{i}] ({sp.get('name')}): missing required "
+                            f"attr {key!r} for prefix {prefix!r}"
+                        )
     return errors
 
 

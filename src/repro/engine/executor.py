@@ -36,7 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from ..config import RuntimeConfig, use_config
-from ..core.ledger import CommLedger, batched_tally, log_comm
+from ..core.ledger import CommLedger, active_exchange, batched_tally, log_comm
 from ..core import material
 from ..core.prf import PRFSetup, setup_prf
 from ..obs import redact
@@ -358,6 +358,9 @@ class Engine:
         led = CommLedger()
         src = material.active_source()
         h0, m0 = (src.hits, src.misses) if src is not None else (0, 0)
+        drv = active_exchange()
+        if drv is not None:
+            x0 = (drv.count, drv.stall_seconds, drv.wire_bytes)
         t0 = time.perf_counter()
         with led:
             out = self._apply(node, children)
@@ -370,6 +373,16 @@ class Engine:
             # hot/cold attribution for EXPLAIN ANALYZE: how much of this
             # node's correlated randomness came from the offline pool
             extra["offline"] = {"hits": src.hits - h0, "misses": src.misses - m0}
+        if drv is not None and drv.count > x0[0]:
+            # network attribution (networked mode only): this node's share
+            # of the ring exchanges, with the time spent blocked on the
+            # inbound frame — "net stall" in EXPLAIN ANALYZE. Stall is this
+            # party's own clock; wire bytes equal the ledger's by audit.
+            extra["wire"] = {
+                "exchanges": drv.count - x0[0],
+                "stall_seconds": round(drv.stall_seconds - x0[1], 6),
+                "wire_bytes": drv.wire_bytes - x0[2],
+            }
         if lookup(type(node)).provides_resize_info:
             info = self._last_resize_info or {}
             self._last_resize_info = None

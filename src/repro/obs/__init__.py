@@ -20,6 +20,14 @@ emittable; the true cardinality T and the noise draws p/eta never leave the
 process through any span, metric, or EXPLAIN line.
 """
 from . import redact
+from .distributed import (
+    TraceContext,
+    WireMetricsPublisher,
+    chrome_trace,
+    clock_offset,
+    merge_party_spans,
+    write_chrome_trace,
+)
 from .explain import explain_text
 from .metrics import Counter, Gauge, Histogram, MetricsRegistry
 from .trace import Span, Tracer, active_tracer, annotate, record, span
@@ -37,4 +45,10 @@ __all__ = [
     "annotate",
     "record",
     "span",
+    "TraceContext",
+    "WireMetricsPublisher",
+    "chrome_trace",
+    "clock_offset",
+    "merge_party_spans",
+    "write_chrome_trace",
 ]

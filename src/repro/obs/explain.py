@@ -33,6 +33,7 @@ _COLS = (
     ("MiB/party", 11),
     ("rounds", 8),
     ("offline", 9),
+    ("net stall", 10),
 )
 
 
@@ -91,6 +92,20 @@ def _offline_note(extra: Optional[Dict]) -> str:
     return f"{h}h/{m}c"
 
 
+def _stall_note(extra: Optional[Dict]) -> str:
+    """Network-attribution column (networked runs only): seconds this node's
+    exchanges spent blocked on inbound frames, from the executor's
+    per-node ``extra["wire"]`` delta. In-process runs have no wire and
+    render "-". Stall is the report party's own view (party 0's in
+    networked mode) — wall-clock, never part of the cross-party audit."""
+    if not extra:
+        return "-"
+    wire = redact.public_view(extra).get("wire")
+    if not wire:
+        return "-"
+    return f"{float(wire.get('stall_seconds', 0.0)):.3f}"
+
+
 def _trim_note(node: PlanNode, extra: Optional[Dict]) -> str:
     """Resize annotation from the report's (redacted) reveal-and-trim info."""
     if not isinstance(node, Resize):
@@ -112,11 +127,15 @@ def explain_text(
     cost_model=None,
     report=None,
     title: Optional[str] = None,
+    wire_audit: Optional[List[Dict]] = None,
 ) -> str:
     """Render ``plan`` as an indented tree with estimated vs actual columns.
 
     ``report`` is an :class:`ExecutionReport` whose ``nodes`` were filled by
     executing this exact plan (post-order); pass None for plain EXPLAIN.
+    ``wire_audit`` (networked mode) appends a per-party wire trailer —
+    bytes on the wire and total network stall per party — below TOTAL; it
+    is omitted entirely when empty, so in-process output is unchanged.
     """
     order = _post_order(plan)
     actual: Dict[int, object] = {}
@@ -149,16 +168,24 @@ def explain_text(
         )
         rounds = f"{a.rounds}" if a else "-"
         offline = _offline_note(a.extra if a else None)
+        stall = _stall_note(a.extra if a else None)
         note = _trim_note(node, a.extra if a else None)
         lines.append(
             f"{label:<{name_w}}{est_rows:>9}{act_rows:>9}{sec:>9}"
-            f"{mib:>11}{rounds:>8}{offline:>9}  {note}".rstrip()
+            f"{mib:>11}{rounds:>8}{offline:>9}{stall:>10}  {note}".rstrip()
         )
     if report is not None:
         lines.append(
             f"{'TOTAL':<{name_w}}{'':>9}{'':>9}{report.total_seconds:>9.3f}"
             f"{report.total_bytes / 2**20:>11.3f}{report.total_rounds:>8}"
         )
+    if wire_audit:
+        parts = "  ".join(
+            f"p{a['party']}: {a['wire_bytes']} B wire, "
+            f"{a.get('stall_seconds', 0.0):.3f}s stall"
+            for a in wire_audit
+        )
+        lines.append(f"wire: {parts}")
     return "\n".join(lines)
 
 

@@ -103,6 +103,17 @@ PUBLIC_KEYS = frozenset({
     "offline", "hits", "misses", "depth", "depth_bytes", "entries",
     "refills", "trigger", "watermark", "evictions", "gc_dropped",
     "static_entries", "counter_entries", "recipes", "bundles",
+    # distributed observability (DESIGN.md §17): wire/link accounting is
+    # protocol-determined — per-link frame and byte counts equal the ledger's
+    # analytic tallies by the coordinator's audit, sequence watermarks are
+    # framing metadata every party already sees on the wire, and stall /
+    # send / backoff durations are each process's own wall clock (the same
+    # argument as "seconds" above). Trace identity (trace_id, clock offsets)
+    # is coordinator-chosen plumbing, independent of any secret value.
+    "wire", "link", "links", "frames", "bytes", "sent", "recv",
+    "stall_seconds", "retries", "backoff_seconds", "rejects", "connects",
+    "seq", "queries", "mesh", "up", "clock_offset_s", "trace_id",
+    "rtt_seconds", "parties", "spans", "merged",
 })
 
 

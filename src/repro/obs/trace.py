@@ -29,6 +29,16 @@ one object per span with ``span_id``/``parent_id`` linkage, wall-clock
 ``ts``, duration ``seconds``, and the redacted ``attrs`` — validated in CI by
 ``benchmarks/validate_telemetry.py`` against ``benchmarks/telemetry_span_
 schema.json``.
+
+Cross-process propagation (DESIGN.md §17): a tracer optionally carries a
+``trace_id`` — an opaque hex string naming the whole distributed trace. The
+coordinator mints one per traced query (:meth:`Tracer.ensure_trace_id`),
+ships it to the party processes in the ``execute`` control frame, and each
+party's per-query tracer is constructed with the same id; when set, every
+exported span line carries it, so merged multi-process streams stay
+attributable to one query. Span ids remain tracer-local — the merge step
+(:mod:`repro.obs.distributed`) renumbers them into the coordinator's id
+space and re-parents party roots under the coordinator's ``execute`` span.
 """
 from __future__ import annotations
 
@@ -80,12 +90,28 @@ class Tracer:
     its own tracer, so exported span streams from a 3-process mesh can be
     merged and still attribute latency per party."""
 
-    def __init__(self, party: Optional[int] = None) -> None:
+    def __init__(
+        self,
+        party: Optional[int] = None,
+        trace_id: Optional[str] = None,
+    ) -> None:
         self.party = party
+        self.trace_id = trace_id
         self.spans: List[Span] = []
         self.redactions: List[str] = []  # dropped attribute keys (audit trail)
         self._open: List[Span] = []
         self._next_id = 0
+
+    def ensure_trace_id(self) -> str:
+        """Mint the distributed trace id on first use (coordinator side).
+
+        Party-side tracers never mint — they are constructed with the id the
+        coordinator shipped, so all processes agree on one trace identity."""
+        if self.trace_id is None:
+            import os
+
+            self.trace_id = os.urandom(8).hex()
+        return self.trace_id
 
     # -- context management ---------------------------------------------------
     def __enter__(self) -> "Tracer":
@@ -139,8 +165,14 @@ class Tracer:
 
     # -- export ---------------------------------------------------------------
     def to_jsonl(self) -> str:
+        def line(s: Span) -> Dict:
+            d = s.to_dict()
+            if self.trace_id is not None:
+                d["trace_id"] = self.trace_id
+            return d
+
         return "\n".join(
-            json.dumps(s.to_dict(), sort_keys=True, default=float)
+            json.dumps(line(s), sort_keys=True, default=float)
             for s in self.spans
         )
 

@@ -28,6 +28,8 @@ from typing import Dict, List, Optional
 import jax
 
 from ..config import RuntimeConfig, current_config
+from ..errors import TransportError
+from ..obs.distributed import WireMetricsPublisher
 from ..ops.table import SecretTable
 from ..service.service import AnalyticsService, QueryResult, TenantSession
 from .coordinator import Coordinator, RemoteEngine, launch_loopback_mesh
@@ -53,6 +55,7 @@ class ReflexClient:
         self.service = service
         self.coordinator = coordinator
         self._own_coordinator = _own_coordinator
+        self._wire_pub: Optional[WireMetricsPublisher] = None
 
     # -- constructors ----------------------------------------------------------
     @classmethod
@@ -136,7 +139,43 @@ class ReflexClient:
         if self.coordinator is not None:
             eng = self.service.engine
             st["runtime"]["wire_audit"] = getattr(eng, "last_wire_audit", [])
+            st["runtime"]["mesh"] = self._mesh_health()
         return st
+
+    def _mesh_health(self) -> Dict:
+        """Pull the ``stats`` control verb, publish the snapshots into this
+        service's metrics registry as ``reflex_wire_*`` series, and return a
+        compact per-party health summary (liveness, seq watermarks, byte
+        totals). Works identically over loopback and TCP meshes."""
+        try:
+            stats = self.coordinator.stats()
+        except TransportError as e:
+            return {"ok": False, "reason": e.reason}
+        if self._wire_pub is None:
+            self._wire_pub = WireMetricsPublisher(self.service.metrics)
+        parties = []
+        for entry in stats["parties"]:
+            self._wire_pub.publish(entry["wire"])
+            w = entry["wire"]
+            parties.append({
+                "party": entry["party"],
+                "up": True,
+                "queries": entry["queries"],
+                "bytes": {
+                    "sent": sum(s["bytes"] for s in w["sent"]),
+                    "recv": sum(s["bytes"] for s in w["recv"]),
+                },
+                "links": w["links"],
+                "rejects": sum(r["count"] for r in w["rejects"]),
+            })
+        self._wire_pub.publish(stats["coordinator"])
+        for p, rtt in stats["rtt_seconds"].items():
+            self._wire_pub.observe_roundtrip(p, rtt)
+        return {
+            "ok": True,
+            "parties": parties,
+            "rtt_seconds": stats["rtt_seconds"],
+        }
 
     def session(self, tenant: str) -> TenantSession:
         return self.service.session(tenant)

@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import pickle
 import threading
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -37,6 +38,8 @@ import numpy as np
 from ..config import RuntimeConfig
 from ..engine.executor import Engine, ExecutionReport
 from ..errors import TransportError
+from ..obs import distributed as obs_dist
+from ..obs import trace as obs_trace
 from ..ops.table import SecretTable
 from ..plan.nodes import PlanNode
 from ..plan.registry import lookup
@@ -67,18 +70,29 @@ class Coordinator:
         self.ctrl = ctrl
         self.request_timeout = request_timeout
         self._lock = threading.Lock()
+        # shipped-exchange-log cap: past this many entries the party reply
+        # carries the deterministic summary instead of the full per-op list
+        self.exchange_log_cap = 256
+        # per-party control-frame clock stamps of the most recent broadcast,
+        # on the coordinator's clock — the NTP-style offset inputs (§17)
+        self.last_rpc: List[Dict] = []
 
     # -- control RPC ----------------------------------------------------------
     def _request_all(self, msg: Dict) -> List[Dict]:
         """Broadcast one control message and gather one reply per party."""
         body = pickle.dumps(msg)
         with self._lock:
+            rpc = []
             for p in PARTIES:
+                t_send = time.time()
                 self.ctrl.send(p, msg["type"], body, kind=CTRL)
+                rpc.append({"party": p, "t_send": t_send, "t_recv": None})
             replies = []
             for p in PARTIES:
                 frame = self.ctrl.recv(p, timeout=self.request_timeout)
+                rpc[p]["t_recv"] = time.time()
                 replies.append(pickle.loads(frame.body))
+            self.last_rpc = rpc
         for p, r in zip(PARTIES, replies):
             if r.get("type") == "error":
                 raise TransportError(
@@ -105,13 +119,39 @@ class Coordinator:
         self._request_all(msg)
 
     def execute_plan(
-        self, plan: PlanNode, resize_ctr_base: int
+        self,
+        plan: PlanNode,
+        resize_ctr_base: int,
+        trace: Optional[obs_dist.TraceContext] = None,
     ) -> List[Dict]:
-        return self._request_all({
+        msg = {
             "type": "execute",
             "plan": pickle.dumps(plan),
             "resize_ctr_base": int(resize_ctr_base),
-        })
+            "exchange_log_cap": int(self.exchange_log_cap),
+        }
+        if trace is not None:
+            msg["trace"] = trace.to_dict()
+        return self._request_all(msg)
+
+    def stats(self) -> Dict:
+        """Mesh-health snapshot: each party's cumulative wire counters plus
+        the coordinator's own control-link view and per-party control RTTs."""
+        replies = self._request_all({"type": "stats"})
+        rpc = {e["party"]: e for e in self.last_rpc}
+        return {
+            "parties": [
+                {"party": r["party"], "queries": r["queries"],
+                 "wire": r["wire"]}
+                for r in replies
+            ],
+            "coordinator": self.ctrl.wire_snapshot(),
+            "rtt_seconds": {
+                p: round(rpc[p]["t_recv"] - rpc[p]["t_send"], 6)
+                for p in PARTIES
+                if rpc.get(p, {}).get("t_recv") is not None
+            },
+        }
 
     def shutdown(self) -> None:
         try:
@@ -164,8 +204,35 @@ class RemoteEngine(Engine):
             from ..plan.registry import infer_schema
 
             infer_schema(plan, Catalog.from_tables(self.tables))
-        results = self.coordinator.execute_plan(plan, self._resize_ctr)
-        self._audit(results)
+        tr = obs_trace.active_tracer()
+        if tr is not None:
+            # traced path (DESIGN.md §17): ship (trace_id, parent span) in
+            # the execute frame, collect each party's redacted spans from
+            # the reply, and merge them — clock-offset-normalized and
+            # party-attributed — under this coordinator-side execute span.
+            with tr.span("execute", parties=3) as sp:
+                ctx = obs_dist.TraceContext(tr.ensure_trace_id(), sp.span_id)
+                results = self.coordinator.execute_plan(
+                    plan, self._resize_ctr, trace=ctx
+                )
+                self._audit(results)
+                rpc = {e["party"]: e for e in self.coordinator.last_rpc}
+                shipments = [
+                    {
+                        "party": r["party"],
+                        "trace_id": r.get("trace_id"),
+                        "spans": r.get("spans", []),
+                        "clock": r.get("clock", {}),
+                        "t_send": rpc[r["party"]]["t_send"],
+                        "t_ack": rpc[r["party"]]["t_recv"],
+                    }
+                    for r in results
+                ]
+                merged = obs_dist.merge_party_spans(tr, sp, shipments)
+                sp.attrs["merged"] = merged
+        else:
+            results = self.coordinator.execute_plan(plan, self._resize_ctr)
+            self._audit(results)
         report = ExecutionReport.from_dict(results[0]["report"])
         out = self._reassemble(results)
         ctr = results[0]["resize_ctr"]
@@ -174,12 +241,15 @@ class RemoteEngine(Engine):
         if self.reveal_hook is not None:
             # replay revealed-size feedback from the report: report.nodes is
             # the plan's post-order (the serial _run order), so entries map
-            # 1:1 onto plan nodes
+            # 1:1 onto plan nodes ("offline"/"wire" extras are telemetry,
+            # not revealed sizes)
             for node, stats in zip(_post_order(plan), report.nodes):
                 if not lookup(type(node)).provides_resize_info:
                     continue
                 info = {
-                    k: v for k, v in stats.extra.items() if k != "offline"
+                    k: v
+                    for k, v in stats.extra.items()
+                    if k not in ("offline", "wire")
                 }
                 if info and not info.get("skipped"):
                     self.reveal_hook(node, info)
@@ -230,13 +300,20 @@ class RemoteEngine(Engine):
             ledger_bytes = sum(
                 n["bytes_per_party"] for n in r["report"]["nodes"]
             )
-            log_bytes = sum(e["bytes"] for e in r["exchange_log"])
+            lg = r["exchange_log"]
+            if isinstance(lg, dict):  # capped reply: deterministic summary
+                log_bytes = lg["bytes"]
+                exchanges = lg["entries"]
+            else:
+                log_bytes = sum(e["bytes"] for e in lg)
+                exchanges = len(lg)
             audit = {
                 "party": r["party"],
                 "ledger_bytes": ledger_bytes,
                 "exchange_bytes": log_bytes,
                 "wire_bytes": r["wire_bytes"],
-                "exchanges": len(r["exchange_log"]),
+                "exchanges": exchanges,
+                "stall_seconds": round(r.get("stall_seconds", 0.0), 6),
             }
             self.last_wire_audit.append(audit)
             if not (ledger_bytes == log_bytes == r["wire_bytes"]):

@@ -28,6 +28,7 @@ not a tidy farewell.
 from __future__ import annotations
 
 import hashlib
+import time
 from typing import List, Optional
 
 import numpy as np
@@ -86,6 +87,12 @@ class RingExchange:
         # per-exchange (op, wire bytes, rounds) — the coordinator audits this
         # against the execution report's ledger tallies op by op
         self.log: List[dict] = []
+        self.wire_bytes = 0
+        # network stall: seconds this party spent blocked waiting for the
+        # inbound frame at sync points (everything else is local compute).
+        # Per-party, never audited for equality — clocks and schedulers
+        # differ across processes even when the simulation is identical.
+        self.stall_seconds = 0.0
 
     def exchange(self, op: str, rounds: int, nbytes, payload=None) -> None:
         nbytes = int(nbytes)
@@ -110,7 +117,9 @@ class RingExchange:
             body = _filler(self.party, op, seq, nbytes)
             expect = _filler(self.recv_from, op, seq, nbytes)
         self.transport.send(self.send_to, op, body, kind=DATA)
+        t0 = time.perf_counter()
         got = self.transport.recv(self.recv_from, timeout=self.timeout)
+        self.stall_seconds += time.perf_counter() - t0
         if got.op != op:
             raise TransportError(
                 f"party {self.party}: exchange {seq} expected op {op!r}, "
@@ -127,6 +136,7 @@ class RingExchange:
                 reason="divergence",
             )
         self.count += 1
+        self.wire_bytes += nbytes
         self.log.append({"op": op, "bytes": nbytes, "rounds": int(rounds)})
 
     def by_op(self) -> dict:
@@ -136,3 +146,18 @@ class RingExchange:
             a["bytes"] += e["bytes"]
             a["exchanges"] += 1
         return agg
+
+    def log_summary(self) -> dict:
+        """Compact deterministic form of the exchange log for capped execute
+        replies: exact byte/round/entry totals plus the per-op aggregation
+        and the first few entries. Pure functions of the full log, so the
+        summaries of lockstepped parties are equal iff their logs are —
+        the coordinator's cross-party equality audit keeps working."""
+        return {
+            "summary": True,
+            "entries": len(self.log),
+            "bytes": self.wire_bytes,
+            "rounds": sum(e["rounds"] for e in self.log),
+            "by_op": self.by_op(),
+            "head": self.log[:8],
+        }

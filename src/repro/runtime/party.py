@@ -3,7 +3,7 @@
 A party server owns two transports:
 
 * a **control link** to the coordinator (CTRL frames carrying pickled
-  messages: hello / load_tables / execute / shutdown), and
+  messages: hello / load_tables / execute / stats / shutdown), and
 * a **data mesh** to the other two parties (DATA frames: one per ledger
   sync point, driven by :class:`~repro.runtime.exchange.RingExchange`).
 
@@ -16,8 +16,11 @@ wire exchange verified against the peer. It replies with its *own share
 slice* of the output columns (party ``p`` contributes canonical share
 ``s_p``; the coordinator reassembles the triple from three distinct
 slices, which is bit-exact only if all three processes computed identical
-triples), the execution report, and the per-op exchange log for the
-wire-vs-ledger audit.
+triples), the execution report, the per-op exchange log (or its capped
+deterministic summary) for the wire-vs-ledger audit, the per-query network
+stall total, and — when the coordinator shipped a trace context — this
+party's redacted spans plus the control-frame clock stamps the coordinator
+uses for clock-offset normalization (DESIGN.md §17).
 
 The same class serves both process topologies: ``scripts/run_parties.py``
 runs it standalone over :class:`TcpTransport`; the in-process tests run it
@@ -26,7 +29,9 @@ tracer state means three party threads in one process stay fully isolated.
 """
 from __future__ import annotations
 
+import contextlib
 import pickle
+import time
 import traceback
 from typing import Dict, Optional
 
@@ -86,7 +91,6 @@ class PartyServer:
         self.fault_after = fault_after
         self.exchange_timeout = exchange_timeout
         self.engine: Optional[Engine] = None
-        self.tracer = obs_trace.Tracer(party=party)
         self.queries = 0
 
     # -- control-message helpers ---------------------------------------------
@@ -113,6 +117,7 @@ class PartyServer:
         }
 
     def _handle_execute(self, msg: Dict) -> Dict:
+        t_recv = time.time()  # control-frame receipt on THIS party's clock
         if self.engine is None:
             return {
                 "type": "error",
@@ -140,8 +145,20 @@ class PartyServer:
             timeout=self.exchange_timeout,
             fault_after=self.fault_after,
         )
+        # trace-context propagation (DESIGN.md §17): a traced coordinator
+        # ships (trace_id, parent_span_id); this query runs under a fresh
+        # per-query tracer carrying that id, and the reply ships the
+        # party's redacted spans back for the coordinator-side merge. An
+        # untraced execute runs with no tracer at all — zero overhead.
+        tctx = msg.get("trace")
+        tracer = (
+            obs_trace.Tracer(party=self.party, trace_id=tctx["trace_id"])
+            if tctx is not None
+            else None
+        )
+        cm = tracer if tracer is not None else contextlib.nullcontext()
         wire_before = self.data.sent_bytes  # counters span queries; audit per
-        with self.tracer, exchange_scope(drv):
+        with cm, exchange_scope(drv):
             out, report = self.engine.execute(plan)
         self.queries += 1
         slices = {}
@@ -151,15 +168,44 @@ class PartyServer:
                 "a" if isinstance(c, AShare) else "b",
                 np.asarray(c.shares[self.party]),
             )
-        return {
+        # cap the shipped exchange log: large plans produce thousands of
+        # per-op entries; past the cap the reply carries the deterministic
+        # summary (exact byte/round totals) instead of the full list
+        cap = int(msg.get("exchange_log_cap") or 0)
+        log = drv.log if not (cap and len(drv.log) > cap) else drv.log_summary()
+        reply = {
             "type": "result",
             "party": self.party,
             "cols": slices,
             "valid": np.asarray(out.valid.shares[self.party]),
             "report": report.to_dict(),
-            "exchange_log": drv.log,
+            "exchange_log": log,
             "wire_bytes": self.data.sent_bytes - wire_before,
+            "stall_seconds": drv.stall_seconds,
             "resize_ctr": self.engine._resize_ctr,
+            "clock": {"t_recv": t_recv, "t_reply": time.time()},
+        }
+        if tracer is not None:
+            reply["trace_id"] = tracer.trace_id
+            reply["spans"] = [s.to_dict() for s in tracer.spans]
+            reply["redactions"] = len(tracer.redactions)
+        return reply
+
+    def _handle_stats(self) -> Dict:
+        """Mesh-health snapshot for the ``stats`` control verb: this party's
+        cumulative wire counters (data mesh + control link) and query count.
+        Read-only — never touches engine state."""
+        wire = self.data.wire_snapshot()
+        if self.ctrl is not self.data:
+            extra = self.ctrl.wire_snapshot()
+            for k in ("sent", "recv", "rejects", "connects", "links"):
+                wire[k] = wire[k] + extra[k]
+        return {
+            "type": "stats",
+            "party": self.party,
+            "queries": self.queries,
+            "wire": wire,
+            "clock": {"t_recv": time.time(), "t_reply": time.time()},
         }
 
     # -- main loop ------------------------------------------------------------
@@ -182,6 +228,8 @@ class PartyServer:
                     self._reply(self._handle_load_tables(msg))
                 elif mtype == "execute":
                     self._reply(self._handle_execute(msg))
+                elif mtype == "stats":
+                    self._reply(self._handle_stats())
                 elif mtype == "shutdown":
                     self._reply({"type": "bye", "party": self.party})
                     return

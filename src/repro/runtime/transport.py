@@ -27,14 +27,20 @@ Two implementations share that framing:
   exact framing/validation path TCP uses (and tests can inject corrupt
   bytes); it is the fast path for in-process party threads.
 * :class:`TcpTransport` — one TCP socket per peer pair carrying both
-  directions. Dial-side connects with retry/backoff; each socket gets a
-  writer thread (sends never block the protocol thread — three parties
-  sending simultaneously on a ring cannot deadlock) and a reader thread
-  demuxing frames into per-source queues.
+  directions. Dial-side connects with jittered exponential retry/backoff;
+  each socket gets a writer thread (sends never block the protocol thread —
+  three parties sending simultaneously on a ring cannot deadlock) and a
+  reader thread demuxing frames into per-source queues.
+
+Every transport keeps a :class:`WireStats` ledger of its own wire activity
+(per-directed-link frames/bytes/latency, rejected inbound frames, dial
+retries and backoff sleeps); ``wire_snapshot()`` is the JSON-safe view the
+``stats`` control verb ships to the coordinator (DESIGN.md §17).
 """
 from __future__ import annotations
 
 import queue
+import random
 import socket
 import struct
 import threading
@@ -52,6 +58,7 @@ __all__ = [
     "COORD",
     "encode_frame",
     "decode_frame",
+    "WireStats",
     "Transport",
     "LoopbackMesh",
     "LoopbackTransport",
@@ -124,6 +131,106 @@ class _Closed:
         self.err = err
 
 
+_KIND_NAMES = {DATA: "data", CTRL: "ctrl"}
+
+
+class WireStats:
+    """Per-directed-link wire counters, kept by every transport.
+
+    Plain locked dicts — party processes have no metrics registry; they
+    ship :meth:`snapshot` (a JSON-safe dict whose keys come from the public
+    telemetry vocabulary, see ``obs/redact.py``) to the coordinator through
+    the ``stats`` control verb, and the coordinator's
+    :class:`~repro.obs.distributed.WireMetricsPublisher` turns the
+    cumulative totals into ``reflex_wire_*`` metric deltas.
+
+    Tracked per (link, kind): frames, body bytes, seconds (send-path time
+    for outbound; blocked-on-recv wait for inbound). Plus inbound-frame
+    rejections by reason (``crc`` / ``seq`` / ``torn-frame`` / ...), and
+    TCP dial retries with the jittered backoff seconds they slept.
+    """
+
+    def __init__(self, party: int):
+        self.party = party
+        self._lock = threading.Lock()
+        # (link, kindname) -> [frames, bytes, seconds]
+        self._sent: Dict[Tuple[str, str], list] = {}
+        self._recv: Dict[Tuple[str, str], list] = {}
+        self._rejects: Dict[str, int] = {}
+        self._connects: Dict[int, list] = {}  # peer -> [retries, backoff_s]
+
+    @staticmethod
+    def _kind(kind: int) -> str:
+        return _KIND_NAMES.get(kind, str(kind))
+
+    def record_send(self, dst: int, kind: int, nbytes: int,
+                    seconds: float) -> None:
+        key = (f"{self.party}->{dst}", self._kind(kind))
+        with self._lock:
+            st = self._sent.setdefault(key, [0, 0, 0.0])
+            st[0] += 1
+            st[1] += int(nbytes)
+            st[2] += float(seconds)
+
+    def record_recv(self, src: int, kind: int, nbytes: int,
+                    wait_seconds: float) -> None:
+        key = (f"{src}->{self.party}", self._kind(kind))
+        with self._lock:
+            st = self._recv.setdefault(key, [0, 0, 0.0])
+            st[0] += 1
+            st[1] += int(nbytes)
+            st[2] += float(wait_seconds)
+
+    def record_reject(self, reason: str) -> None:
+        with self._lock:
+            self._rejects[reason] = self._rejects.get(reason, 0) + 1
+
+    def record_connect(self, peer: int, retries: int,
+                       backoff_seconds: float) -> None:
+        with self._lock:
+            st = self._connects.setdefault(peer, [0, 0.0])
+            st[0] += int(retries)
+            st[1] += float(backoff_seconds)
+
+    def snapshot(self, send_seq: Dict[int, int],
+                 recv_seq: Dict[int, int]) -> Dict:
+        """JSON-safe cumulative totals + the transport's seq watermarks."""
+        with self._lock:
+            sent = [
+                {"link": lk, "kind": kd, "frames": f, "bytes": b,
+                 "seconds": s}
+                for (lk, kd), (f, b, s) in sorted(self._sent.items())
+            ]
+            recv = [
+                {"link": lk, "kind": kd, "frames": f, "bytes": b,
+                 "seconds": s}
+                for (lk, kd), (f, b, s) in sorted(self._recv.items())
+            ]
+            rejects = [
+                {"reason": r, "count": c}
+                for r, c in sorted(self._rejects.items())
+            ]
+            connects = [
+                {"peer": p, "retries": r, "backoff_seconds": s}
+                for p, (r, s) in sorted(self._connects.items())
+            ]
+        peers = sorted(set(send_seq) | set(recv_seq))
+        links = [
+            {"link": f"{self.party}<->{p}",
+             "sent": int(send_seq.get(p, 0)),
+             "recv": int(recv_seq.get(p, 0))}
+            for p in peers
+        ]
+        return {
+            "party": self.party,
+            "sent": sent,
+            "recv": recv,
+            "rejects": rejects,
+            "connects": connects,
+            "links": links,
+        }
+
+
 class Transport:
     """Base: per-directed-link sequence numbering + validation.
 
@@ -141,6 +248,7 @@ class Transport:
         self._lock = threading.Lock()
         self.sent_frames = 0
         self.sent_bytes = 0  # body bytes only: the wire-vs-ledger figure
+        self.wire = WireStats(party)
 
     def _inbox_for(self, src: int) -> "queue.Queue":
         with self._lock:
@@ -154,25 +262,40 @@ class Transport:
             seq = self._send_seq.get(dst, 0)
             self._send_seq[dst] = seq + 1
         f = Frame(kind=kind, src=self.party, dst=dst, seq=seq, op=op, body=body)
+        t0 = time.perf_counter()
         self._push(dst, encode_frame(f))
+        self.wire.record_send(dst, kind, len(body),
+                              time.perf_counter() - t0)
         self.sent_frames += 1
         if kind == DATA:
             self.sent_bytes += len(body)
 
     def recv(self, src: int, timeout: Optional[float] = 30.0) -> Frame:
         q = self._inbox_for(src)
+        t0 = time.perf_counter()
         try:
             item = q.get(timeout=timeout)
         except queue.Empty:
+            self.wire.record_reject("timeout")
             raise TransportError(
                 f"party {self.party}: no frame from {src} within {timeout}s",
                 party=self.party, peer=src, reason="timeout",
             ) from None
+        wait = time.perf_counter() - t0
         if isinstance(item, _Closed):
             q.put(item)  # subsequent recvs fail the same way
             raise item.err
-        f = decode_frame(item, party=self.party)
+        try:
+            f = decode_frame(item, party=self.party)
+        except TransportError as e:
+            # finer rejection taxonomy for the wire metrics than the error's
+            # stable `reason` vocabulary: crc corruption vs torn framing
+            self.wire.record_reject(
+                "crc" if "crc mismatch" in str(e) else e.reason
+            )
+            raise
         if f.src != src:
+            self.wire.record_reject("seq")
             raise TransportError(
                 f"frame from {f.src} on link {src}->{self.party}",
                 party=self.party, peer=src, seq=f.seq, op=f.op,
@@ -180,6 +303,7 @@ class Transport:
             )
         expect = self._recv_seq.get(src, 0)
         if f.seq != expect:
+            self.wire.record_reject("seq")
             raise TransportError(
                 f"out-of-order frame from {src}: seq {f.seq}, expected "
                 f"{expect}",
@@ -187,7 +311,15 @@ class Transport:
                 reason="bad-seq",
             )
         self._recv_seq[src] = expect + 1
+        self.wire.record_recv(src, f.kind, len(f.body), wait)
         return f
+
+    def wire_snapshot(self) -> Dict:
+        """This transport's cumulative wire stats + seq watermarks (the
+        per-party payload of the ``stats`` control verb)."""
+        with self._lock:
+            ss, rs = dict(self._send_seq), dict(self._recv_seq)
+        return self.wire.snapshot(ss, rs)
 
     def _push(self, dst: int, data: bytes) -> None:  # pragma: no cover
         raise NotImplementedError
@@ -287,12 +419,16 @@ class TcpTransport(Transport):
         connect_retries: int = 40,
         backoff_s: float = 0.05,
         backoff_cap_s: float = 1.0,
+        jitter_seed: Optional[int] = None,
     ):
         super().__init__(party)
         self.endpoints = dict(endpoints)
         self.connect_retries = connect_retries
         self.backoff_s = backoff_s
         self.backoff_cap_s = backoff_cap_s
+        # jittered backoff: parties restarted in lockstep must not hammer
+        # the listener in lockstep too (seedable for deterministic tests)
+        self._rng = random.Random(jitter_seed)
         self._socks: Dict[int, socket.socket] = {}
         self._outq: Dict[int, "queue.Queue"] = {}
         self._threads: list = []
@@ -331,6 +467,8 @@ class TcpTransport(Transport):
         host, port = self.endpoints[peer]
         delay = self.backoff_s
         last: Optional[Exception] = None
+        retries = 0
+        slept = 0.0
         for _ in range(self.connect_retries):
             try:
                 sock = socket.create_connection((host, port), timeout=5.0)
@@ -338,14 +476,23 @@ class TcpTransport(Transport):
                 break
             except OSError as e:
                 last = e
-                time.sleep(delay)
+                retries += 1
+                # full-range jitter around the exponential schedule
+                # (0.5x..1.5x): simultaneous restarts decorrelate instead of
+                # colliding on every attempt
+                pause = delay * (0.5 + self._rng.random())
+                time.sleep(pause)
+                slept += pause
                 delay = min(delay * 1.6, self.backoff_cap_s)
         else:
+            self.wire.record_connect(peer, retries, slept)
             raise TransportError(
                 f"party {self.party}: cannot connect to party {peer} at "
                 f"{host}:{port} after {self.connect_retries} attempts",
                 party=self.party, peer=peer, reason="connect",
             ) from last
+        if retries:
+            self.wire.record_connect(peer, retries, slept)
         sock.sendall(encode_frame(
             Frame(kind=CTRL, src=self.party, dst=peer, seq=0, op="hello",
                   body=b"")

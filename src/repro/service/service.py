@@ -628,6 +628,7 @@ class AnalyticsService:
         text = explain_text(
             res.plan, cost_model=cm, report=res.report,
             title=f"EXPLAIN ANALYZE {sql}",
+            wire_audit=getattr(self.engine, "last_wire_audit", None),
         )
         return text, res
 

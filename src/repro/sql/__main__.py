@@ -10,6 +10,9 @@
     python -m repro.sql --explain-analyze --networked ["SQL"]
                                            # same, but executed on a 3-party
                                            # loopback mesh via ReflexClient
+    python -m repro.sql --explain-analyze --networked --trace-out PATH ["SQL"]
+                                           # also write the merged distributed
+                                           # trace (JSONL + Chrome trace JSON)
 
 ``--explain`` / ``--explain-analyze`` with no SQL run every golden query in
 ``data/queries.py`` (DESIGN.md §14.4 documents the output format; every
@@ -193,13 +196,27 @@ def explain(argv, analyze: bool) -> int:
     given — against a small synthetic HealthLnK dataset (the same generator
     the CI smoke uses, so the CLI needs no external state). With
     ``--networked``, EXPLAIN ANALYZE executes on a 3-party loopback mesh
-    through the same client facade (actuals come from real wire exchanges)."""
+    through the same client facade (actuals come from real wire exchanges).
+    ``--trace-out PATH`` (ANALYZE only) runs the queries under a tracer and
+    writes the trace — in networked mode the merged distributed trace with
+    all three parties' spans — as JSONL to PATH, plus a Chrome trace-event
+    file at PATH + ".chrome.json" for chrome://tracing / Perfetto."""
     from ..data.healthlnk import generate_healthlnk
     from ..data.queries import all_query_sql
+    from ..obs import trace as obs_trace
+    from ..obs.distributed import write_chrome_trace
     from ..runtime import ReflexClient
 
     networked = "--networked" in argv
     argv = [a for a in argv if a != "--networked"]
+    trace_out = None
+    if "--trace-out" in argv:
+        i = argv.index("--trace-out")
+        if i + 1 >= len(argv):
+            print("--trace-out requires a PATH argument")
+            return 1
+        trace_out = argv[i + 1]
+        argv = argv[:i] + argv[i + 2:]
     tables, _ = generate_healthlnk(n=16, seed=3, aspirin_frac=0.5)
     if networked:
         client = ReflexClient.networked(tables, key_seed=2)
@@ -210,19 +227,31 @@ def explain(argv, analyze: bool) -> int:
     queries = (
         {"query": " ".join(argv)} if argv else all_query_sql()
     )
+    tracer = obs_trace.Tracer() if (trace_out and analyze) else None
+    import contextlib
+
     failures = 0
-    for name, sql_text in queries.items():
-        try:
-            if analyze:
-                text, _res = client.explain_analyze("explain-cli", sql_text)
-            else:
-                text = client.explain(sql_text)
-        except Exception as e:  # noqa: BLE001 — report and keep going
-            print(f"FAIL {name}: {type(e).__name__}: {e}")
-            failures += 1
-            continue
-        print(text)
-        print()
+    with tracer if tracer is not None else contextlib.nullcontext():
+        for name, sql_text in queries.items():
+            try:
+                if analyze:
+                    text, _res = client.explain_analyze("explain-cli", sql_text)
+                else:
+                    text = client.explain(sql_text)
+            except Exception as e:  # noqa: BLE001 — report and keep going
+                print(f"FAIL {name}: {type(e).__name__}: {e}")
+                failures += 1
+                continue
+            print(text)
+            print()
+    if tracer is not None:
+        with open(trace_out, "w") as f:
+            f.write(tracer.to_jsonl())
+        write_chrome_trace(
+            trace_out + ".chrome.json", tracer.spans, trace_id=tracer.trace_id
+        )
+        print(f"trace: {len(tracer.spans)} spans -> {trace_out} "
+              f"(+ {trace_out}.chrome.json)")
     client.close()
     return 1 if failures else 0
 

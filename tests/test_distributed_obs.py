@@ -1,0 +1,416 @@
+"""Distributed observability (DESIGN.md §17): cross-party trace propagation
+and merge, wire-level metrics, network-attributed EXPLAIN ANALYZE, and the
+``stats`` mesh-health verb — plus the hard invariant that tracing a
+networked query changes NOTHING about its execution (bit-identical shares
+and per-node ledger tallies vs an untraced run)."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.noise import NoTrim
+from repro.data import generate_healthlnk
+from repro.errors import TransportError
+from repro.obs import Tracer, redact
+from repro.obs.distributed import (
+    TraceContext,
+    WireMetricsPublisher,
+    chrome_trace,
+    clock_offset,
+    merge_party_spans,
+    new_trace_id,
+)
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Span
+from repro.runtime import (
+    DATA,
+    Frame,
+    LoopbackMesh,
+    LoopbackTransport,
+    ReflexClient,
+    TcpTransport,
+    encode_frame,
+)
+
+GROUP_SQL = (
+    "SELECT major_icd9, COUNT(*) AS c FROM diagnoses GROUP BY major_icd9"
+)
+
+
+@pytest.fixture(scope="module")
+def tables():
+    t, _ = generate_healthlnk(n=16, seed=3, aspirin_frac=0.5)
+    return t
+
+
+@pytest.fixture(scope="module")
+def mesh_clients(tables):
+    """Two identically seeded loopback meshes: one driven untraced, one
+    always driven under a Tracer — their executions must stay bit-exact."""
+    mk = lambda: ReflexClient.networked(
+        tables, key_seed=2, noise=NoTrim(), placement="none"
+    )
+    plain, traced = mk(), mk()
+    yield plain, traced
+    plain.close()
+    traced.close()
+
+
+# -----------------------------------------------------------------------------
+# Pure pieces: trace context, clock offset, chrome export
+# -----------------------------------------------------------------------------
+
+
+def test_new_trace_id_shape_and_uniqueness():
+    ids = {new_trace_id() for _ in range(64)}
+    assert len(ids) == 64
+    assert all(len(i) == 16 and int(i, 16) >= 0 for i in ids)
+
+
+def test_trace_context_roundtrip():
+    ctx = TraceContext("ab" * 8, parent_span_id=7)
+    assert TraceContext.from_dict(ctx.to_dict()) == ctx
+    assert TraceContext.from_dict({"trace_id": "x"}).parent_span_id is None
+
+
+def test_clock_offset_recovers_true_skew():
+    # party clock ahead of the coordinator's by delta, symmetric one-way
+    # delay d: the NTP midpoint recovers delta exactly
+    delta, d = 5.0, 0.3
+    t_send, t_ack = 100.0, 100.0 + 2 * d
+    t_recv = t_send + d + delta
+    t_reply = t_recv  # instantaneous handling
+    assert clock_offset(t_send, t_recv, t_reply, t_ack) == pytest.approx(delta)
+
+
+def test_chrome_trace_event_shape():
+    spans = [
+        Span(name="execute", span_id=1, parent_id=None, ts=10.0,
+             seconds=0.5, attrs={}),
+        Span(name="node[Scan]", span_id=2, parent_id=1, ts=10.1,
+             seconds=0.2, attrs={"party": 1}),
+    ]
+    doc = chrome_trace(spans, trace_id="cafe" * 4)
+    events = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+    assert len(events) == 2
+    assert doc["otherData"]["trace_id"] == "cafe" * 4
+    by_name = {e["name"]: e for e in events}
+    # the coordinator rides tid 0, party p rides tid p+1; ts is relative us
+    assert by_name["execute"]["tid"] == 0
+    assert by_name["node[Scan]"]["tid"] == 2
+    assert by_name["execute"]["ts"] == 0
+    assert by_name["node[Scan]"]["ts"] == pytest.approx(0.1e6)
+    assert by_name["node[Scan]"]["dur"] == pytest.approx(0.2e6)
+
+
+# -----------------------------------------------------------------------------
+# Merge semantics
+# -----------------------------------------------------------------------------
+
+
+def _shipment(party, trace_id, spans, *, skew=0.0):
+    return {
+        "party": party,
+        "trace_id": trace_id,
+        "spans": spans,
+        "clock": {"t_recv": 100.0 + skew, "t_reply": 100.1 + skew},
+        "t_send": 100.0,
+        "t_ack": 100.1,
+    }
+
+
+def test_merge_rejects_foreign_trace_id():
+    stray = {"name": "node[Scan]", "span_id": 1, "parent_id": None,
+             "ts": 100.0, "seconds": 0.1, "attrs": {"party": 0}}
+    with Tracer() as tr:
+        tid = tr.ensure_trace_id()
+        with tr.span("execute") as sp:
+            with pytest.raises(ValueError, match="trace"):
+                merge_party_spans(
+                    tr, sp, [_shipment(0, "not-the-trace", [stray])]
+                )
+        assert tid == tr.trace_id
+
+
+def test_merge_re_audits_party_attrs():
+    """A misbehaving party cannot smuggle a secret-keyed attr into the
+    merged trace: the coordinator re-runs the deny-list audit on arrival."""
+    bad = {"name": "node[Resize]", "span_id": 1, "parent_id": None,
+           "ts": 100.0, "seconds": 0.1, "attrs": {"t": 999}}
+    with Tracer() as tr:
+        tid = tr.ensure_trace_id()
+        with tr.span("execute") as sp:
+            with pytest.raises(redact.RedactionError):
+                merge_party_spans(tr, sp, [_shipment(1, tid, [bad])])
+
+
+def test_merge_reparents_renumbers_and_normalizes_clock():
+    party_spans = [
+        {"name": "node[Scan]", "span_id": 1, "parent_id": None,
+         "ts": 107.0, "seconds": 0.2, "attrs": {"party": 2}},
+        {"name": "node[Count]", "span_id": 2, "parent_id": 1,
+         "ts": 107.1, "seconds": 0.1, "attrs": {"party": 2}},
+    ]
+    with Tracer() as tr:
+        tid = tr.ensure_trace_id()
+        with tr.span("execute") as sp:
+            # party clock runs 7s ahead (t_recv=107 vs send/ack 100..100.1)
+            n = merge_party_spans(
+                tr, sp, [_shipment(2, tid, party_spans, skew=7.0)]
+            )
+        assert n == 2
+    merged = {s.name: s for s in tr.spans if s.name.startswith("node[")}
+    root, child = merged["node[Scan]"], merged["node[Count]"]
+    assert root.parent_id == sp.span_id  # re-parented under execute
+    assert child.parent_id == root.span_id  # sibling linkage preserved
+    assert root.span_id != 1 and child.span_id != 2  # renumbered
+    assert "clock_offset_s" in root.attrs
+    # normalized onto the coordinator clock: 107 - ~7 ≈ 100
+    assert abs(root.ts - 100.0) < 0.2
+
+
+# -----------------------------------------------------------------------------
+# End to end over the loopback mesh
+# -----------------------------------------------------------------------------
+
+
+def _tallies(res):
+    return [
+        (s.node, s.n_ins, s.n_out, s.bytes_per_party, s.rounds)
+        for s in res.report.nodes
+    ]
+
+
+def test_traced_networked_run_bit_identical_to_untraced(mesh_clients):
+    plain, traced = mesh_clients
+    want = plain.submit("alice", GROUP_SQL)
+    with Tracer():
+        got = traced.submit("alice", GROUP_SQL)
+    assert _tallies(want) == _tallies(got)
+    assert set(want.rows) == set(got.rows)
+    for k in want.rows:
+        assert np.array_equal(want.rows[k], got.rows[k])
+
+
+def test_merged_trace_spans_three_parties_under_one_id(mesh_clients):
+    _plain, traced = mesh_clients
+    with Tracer() as tr:
+        traced.submit("alice", GROUP_SQL)
+    lines = [json.loads(ln) for ln in tr.to_jsonl().splitlines()]
+    assert {s["trace_id"] for s in lines} == {tr.trace_id}
+    parties = {
+        s["attrs"]["party"] for s in lines if "party" in s["attrs"]
+    }
+    assert parties == {0, 1, 2}
+    # parent linkage: every non-root parent resolves inside the trace, and
+    # every party span hangs (transitively) under the coordinator's execute
+    ids = {s["span_id"]: s for s in lines}
+    assert len(ids) == len(lines)  # renumbering left no collisions
+    execute = next(s for s in lines if s["name"] == "execute")
+    assert execute["attrs"]["merged"] > 0
+    for s in lines:
+        if s["parent_id"] is not None:
+            assert s["parent_id"] in ids
+        if "party" in s["attrs"]:
+            hop = s
+            while hop["parent_id"] is not None:
+                hop = ids[hop["parent_id"]]
+            # party chains terminate at the coordinator's root via execute
+            assert hop["parent_id"] is None
+
+
+def test_party_shipped_spans_survive_disclosure_audit(mesh_clients):
+    _plain, traced = mesh_clients
+    with Tracer() as tr:
+        traced.submit("alice", GROUP_SQL)
+    party_spans = [s for s in tr.spans if "party" in s.attrs]
+    assert party_spans
+    for s in party_spans:
+        redact.assert_emittable(s.attrs, where=f"merged span {s.name}")
+
+
+def test_networked_explain_analyze_net_attribution(mesh_clients):
+    plain, _traced = mesh_clients
+    text, _res = plain.explain_analyze("alice", GROUP_SQL)
+    lines = text.splitlines()
+    assert "net stall" in lines[1]
+    trailer = lines[-1]
+    assert trailer.startswith("wire:")
+    for p in range(3):
+        assert f"p{p}:" in trailer and "stall" in trailer
+
+
+def test_in_process_explain_analyze_has_no_wire_trailer(tables):
+    import jax
+
+    client = ReflexClient.in_process(
+        tables, noise=NoTrim(), placement="none", key=jax.random.PRNGKey(2)
+    )
+    text, res = client.explain_analyze("alice", GROUP_SQL)
+    assert "net stall" in text.splitlines()[1]
+    assert "wire:" not in text
+    # the column renders "-" for every node in-process (no wire extras)
+    assert len(text.splitlines()) == len(res.report.nodes) + 3
+    client.close()
+
+
+def test_status_reports_mesh_health_and_publishes_wire_metrics(mesh_clients):
+    plain, _traced = mesh_clients
+    plain.submit("alice", GROUP_SQL)
+    st = plain.status()
+    mesh = st["runtime"]["mesh"]
+    assert mesh["ok"] is True
+    assert [p["party"] for p in mesh["parties"]] == [0, 1, 2]
+    for p in mesh["parties"]:
+        assert p["up"] and p["queries"] >= 1
+        assert p["bytes"]["sent"] > 0 and p["links"]
+    snap = plain.service.metrics.snapshot()
+    wire = snap["reflex_wire_bytes_total"]
+    assert wire["kind"] == "counter"
+    label_parties = {s["labels"].get("party") for s in wire["samples"]}
+    assert {"0", "1", "2"} <= label_parties
+    assert all(s["value"] > 0 for s in wire["samples"])
+
+
+def test_in_process_status_has_no_mesh_section(tables):
+    import jax
+
+    client = ReflexClient.in_process(tables, key=jax.random.PRNGKey(2))
+    assert "mesh" not in client.status()["runtime"]
+    client.close()
+
+
+def test_repeated_status_pulls_do_not_double_count(mesh_clients):
+    plain, _traced = mesh_clients
+    plain.submit("alice", GROUP_SQL)
+    plain.status()
+
+    def data_bytes():
+        snap = plain.service.metrics.snapshot()
+        return sum(
+            s["value"]
+            for s in snap["reflex_wire_bytes_total"]["samples"]
+            if s["labels"].get("kind") == "data"
+        )
+
+    first = data_bytes()
+    plain.status()  # no queries in between: only ctrl traffic moves
+    assert data_bytes() == first
+
+
+def test_exchange_log_cap_keeps_audit_exact(mesh_clients):
+    plain, _traced = mesh_clients
+    old = plain.coordinator.exchange_log_cap
+    try:
+        plain.coordinator.exchange_log_cap = 1  # force the summary path
+        res = plain.submit("alice", GROUP_SQL)
+        audit = plain.service.engine.last_wire_audit
+        assert [a["party"] for a in audit] == [0, 1, 2]
+        total = sum(s.bytes_per_party for s in res.report.nodes)
+        for a in audit:
+            assert a["exchanges"] > 1  # genuinely capped, totals still exact
+            assert a["ledger_bytes"] == a["exchange_bytes"] == a["wire_bytes"]
+            assert a["ledger_bytes"] == total
+            assert a["stall_seconds"] >= 0.0
+    finally:
+        plain.coordinator.exchange_log_cap = old
+
+
+def test_wire_publisher_is_delta_safe():
+    reg = MetricsRegistry()
+    pub = WireMetricsPublisher(reg)
+    snap = {
+        "party": 1,
+        "sent": [{"link": "1->0", "kind": "data", "frames": 4, "bytes": 256,
+                  "seconds": 0.01}],
+        "recv": [{"link": "2->1", "kind": "data", "frames": 4, "bytes": 256,
+                  "seconds": 0.02}],
+        "rejects": [{"reason": "crc", "count": 2}],
+        "connects": [{"peer": 0, "retries": 3, "backoff_seconds": 0.05}],
+        "links": [{"link": "1<->0", "sent": 4, "recv": 0}],
+    }
+    pub.publish(snap)
+    pub.publish(snap)  # identical re-pull: counters must not advance
+
+    def val(name, **labels):
+        for s in reg.snapshot()[name]["samples"]:
+            if all(s["labels"].get(k) == v for k, v in labels.items()):
+                return s["value"]
+        raise AssertionError(f"no sample {labels} in {name}")
+
+    assert val("reflex_wire_bytes_total", party="1", link="1->0") == 256
+    assert val("reflex_wire_frames_total", party="1", link="1->0") == 4
+    # inbound entries feed the wait counter only — each link's frames are
+    # counted once mesh-wide, by the sender
+    assert val(
+        "reflex_wire_recv_wait_seconds_total", party="1", link="2->1"
+    ) == pytest.approx(0.02)
+    assert val("reflex_wire_rejects_total", party="1", reason="crc") == 2
+    assert val("reflex_wire_connect_retries_total", party="1", peer="0") == 3
+    # grown totals advance by the delta only
+    snap["sent"][0]["bytes"] = 300
+    pub.publish(snap)
+    assert val("reflex_wire_bytes_total", party="1", link="1->0") == 300
+
+
+def test_rejected_frames_counted_in_wire_stats():
+    mesh = LoopbackMesh()
+    a = LoopbackTransport(mesh, 0)
+    b = LoopbackTransport(mesh, 1)
+    a.send(1, "mul", b"ok")
+    assert b.recv(0, timeout=1.0).body == b"ok"
+    buf = encode_frame(Frame(DATA, 0, 1, 9, "mul", b"skip"))  # bad seq
+    mesh.inject(0, 1, buf)
+    with pytest.raises(TransportError):
+        b.recv(0, timeout=1.0)
+    torn = encode_frame(Frame(DATA, 0, 1, 1, "mul", b"torn apart"))
+    mesh.inject(0, 1, torn[:-4])
+    with pytest.raises(TransportError):
+        b.recv(0, timeout=1.0)
+    snap = b.wire_snapshot()
+    rejects = {r["reason"]: r["count"] for r in snap["rejects"]}
+    assert rejects.get("seq") == 1
+    assert rejects.get("torn-frame") == 1
+    recv_data = [e for e in snap["recv"] if e["kind"] == "data"]
+    assert recv_data and recv_data[0]["frames"] == 1  # only the good frame
+
+
+@pytest.fixture()
+def dead_endpoint():
+    """A port that refuses every connect for the test's duration: bound but
+    never listening (and held, so the OS cannot hand it out as an ephemeral
+    port — which would let a dialer self-connect)."""
+    import socket
+
+    sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    sock.bind(("127.0.0.1", 0))
+    yield sock.getsockname()
+    sock.close()
+
+
+def test_tcp_dial_failure_counts_retries_and_jittered_backoff(dead_endpoint):
+    t = TcpTransport(1, {0: dead_endpoint, 1: ("127.0.0.1", 0)},
+                     connect_retries=3, backoff_s=0.01, jitter_seed=7)
+    with pytest.raises(TransportError) as ei:
+        t.dial(0)
+    assert ei.value.reason == "connect"
+    snap = t.wire_snapshot()
+    connects = {c["peer"]: c for c in snap["connects"]}
+    assert connects[0]["retries"] == 3
+    assert connects[0]["backoff_seconds"] > 0.0
+
+
+def test_tcp_backoff_jitter_seeded_and_decorrelated(dead_endpoint):
+    """The dialer sleeps ``delay * (0.5 + rng.random())`` per refused
+    attempt: identical seeds replay the identical backoff schedule, while
+    different seeds decorrelate simultaneous reconnect storms."""
+
+    def failed_dial_backoff(seed):
+        t = TcpTransport(1, {0: dead_endpoint, 1: ("127.0.0.1", 0)},
+                         connect_retries=3, backoff_s=0.01, jitter_seed=seed)
+        with pytest.raises(TransportError):
+            t.dial(0)
+        return t.wire_snapshot()["connects"][0]["backoff_seconds"]
+
+    assert failed_dial_backoff(7) == failed_dial_backoff(7)
+    assert failed_dial_backoff(7) != failed_dial_backoff(8)
